@@ -1,0 +1,48 @@
+"""Hardware design-space exploration (paper §5.2 / Fig. 13 / Table 5).
+
+Sweeps (#PEs × NoC bandwidth × tile variants) for KC-P and YR-P under the
+Eyeriss area/power budget, reporting throughput-/energy-/EDP-optimal
+designs and the pareto frontier.
+
+    PYTHONPATH=src python examples/dataflow_dse.py [--quick]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import conv2d
+from repro.core.dse import DSEConfig, merge_results, run_dse_full
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true")
+args = ap.parse_args()
+
+layer = conv2d("vgg16-conv11", k=512, c=512, y=16, x=16, r=3, s=3)
+step = 32 if args.quick else 8
+cfg = DSEConfig(pe_range=tuple(range(8, 513, step)),
+                bw_range=tuple(float(b) for b in range(2, 65, 2)))
+
+for flow in ("KC-P", "YR-P"):
+    results = run_dse_full(layer, flow, cfg,
+                           scales=(1, 2) if args.quick else (1, 2, 4, 8))
+    agg = merge_results(results)
+    print(f"\n=== {flow}: {agg['n_evaluated']} designs evaluated, "
+          f"{agg['n_valid']} valid, "
+          f"{agg['rate_designs_per_s'] / 1e6:.2f}M designs/s "
+          f"(paper: 0.17M/s) ===")
+    for obj in ("throughput", "energy", "edp"):
+        p = agg["best"][obj]
+        if not p:
+            continue
+        print(f"  {obj:10s}: {p['num_pes']:4d} PEs, bw {p['noc_bw']:5.1f}, "
+              f"L2 {p['l2_kb']:7.1f} KB, tile {p['tile_tag']}, "
+              f"thr {p['throughput']:6.1f} MAC/cyc, "
+              f"E {p['energy_pj'] / 1e9:7.2f} mJ, "
+              f"{p['power_mw']:6.1f} mW, {p['area_mm2']:5.2f} mm2")
+    # pareto frontier of the base-tile sweep
+    front = results[0].pareto()
+    print(f"  pareto frontier ({len(front)} points), first 5:")
+    for i in front[:5]:
+        pt = results[0].point(int(i))
+        print(f"    pes={pt['num_pes']:4d} bw={pt['noc_bw']:5.1f} "
+              f"thr={pt['throughput']:6.1f} E={pt['energy_pj']/1e9:7.2f}mJ")

@@ -1,0 +1,48 @@
+"""Beyond-paper: the pod as a MAESTRO accelerator — DSE over pod size and
+ICI bandwidth for an LM training GEMM.
+
+The paper sweeps (#PEs, NoC bw) for a conv accelerator under an area
+budget; here the identical engine sweeps (#chips, ICI bw per chip) for
+llama3-8b's MLP GEMM at train_4k scale, with the KC-P-style tensor-
+parallel dataflow (the Megatron mapping of DESIGN.md §2).  The knee of
+the throughput-vs-chips curve is the scaling limit the roofline table
+shows from the compiled side.
+
+    PYTHONPATH=src python examples/pod_dse.py
+"""
+import numpy as np
+
+from repro.core.directives import Cluster, Dataflow, SpatialMap, TemporalMap
+from repro.core.mapper import V5E_ICI_BW, V5E_PEAK_FLOPS, gemm_op
+from repro.core.vectorized import evaluate_grid
+
+# llama3-8b MLP up-projection, one train_4k step's tokens
+tokens, d, ff = 256 * 4096, 4096, 14336
+op = gemm_op("llama3-mlp-up", m=tokens, n=ff, k=d)
+
+# data parallel over chips at level 0 (4096-token tiles), tensor parallel
+# (K-partitioned, 896 features/chip) inside 16-chip "clusters" (the model
+# axis); contraction tiled at 512
+df = Dataflow("dp-tp16", (
+    SpatialMap(4096, 4096, "N"),
+    TemporalMap(512, 512, "C"),
+    Cluster(16),
+    SpatialMap(896, 896, "K"),
+))
+
+macs_per_chip = int(V5E_PEAK_FLOPS / 2 / 1e9)  # MACs/cycle at 1 GHz
+chips = np.array([16, 32, 64, 128, 256, 512, 1024], np.int64)
+for ici_gbps in (25, 50, 100):
+    bw_elems = ici_gbps * 1e9 / 1e9 / 2      # elements/cycle @1GHz bf16
+    # float design points: pod-scale trip products overflow int32 in the
+    # traced engine; float64-ish precision is ample for step estimates
+    bs = evaluate_grid(op, df, chips.astype(np.float32),
+                       np.full(len(chips), bw_elems, np.float32),
+                       macs_per_pe=macs_per_chip)
+    print(f"ICI {ici_gbps} GB/s/chip:")
+    for i, c in enumerate(chips):
+        cycles = float(bs.runtime[i])
+        util = float(bs.util[i])
+        eff = float(bs.macs[i]) / (cycles * c * macs_per_chip)
+        print(f"  chips={c:5d}  step={cycles / 1e9 * 1e3:8.2f} ms "
+              f"util={util:5.2f} scaling-eff={eff:5.1%}")

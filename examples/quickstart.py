@@ -1,0 +1,28 @@
+"""Quickstart: analyze one (layer × dataflow × hardware) with MAESTRO.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import HWConfig, analyze, conv2d
+from repro.core.dataflows import table3_for_layer
+
+# VGG16 conv11 — the paper's running example (Table 5 / Fig. 12)
+layer = conv2d("vgg16-conv11", k=512, c=512, y=16, x=16, r=3, s=3)
+
+# An Eyeriss-class accelerator: 256 PEs, 32 elements/cycle NoC
+hw = HWConfig(num_pes=256, noc_bw=32.0, noc_latency=2.0)
+
+print(f"layer {layer.name}: {layer.total_macs / 1e6:.0f}M MACs\n")
+print(f"{'dataflow':8s} {'cycles':>12s} {'MACs/cyc':>9s} {'util':>6s} "
+      f"{'energy(mJ)':>11s} {'L1KB':>6s} {'L2KB':>7s} {'bw req':>7s}")
+for name in ("C-P", "X-P", "YX-P", "YR-P", "KC-P"):
+    df = table3_for_layer(name, layer)
+    s = analyze(layer, df, hw)
+    print(f"{name:8s} {s.runtime:12.0f} {s.throughput:9.2f} "
+          f"{s.utilization:6.2f} {s.energy_pj / 1e9:11.3f} "
+          f"{s.l1_req_kb:6.2f} {s.l2_req_kb:7.1f} "
+          f"{s.peak_bw.get(0, 0):7.1f}")
+
+print("\nReuse classes at the top cluster level (KC-P):")
+s = analyze(layer, table3_for_layer("KC-P", layer), hw)
+for tensor, r in s.reuse[0].items():
+    print(f"  {tensor}: spatial={r.spatial:10s} temporal={r.temporal}")

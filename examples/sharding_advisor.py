@@ -1,0 +1,29 @@
+"""MAESTRO as a TPU sharding advisor (DESIGN.md §2): score candidate
+directive programs for an LM's matmuls on the production mesh, predict
+the collectives XLA will insert, and rank by the modeled step delay.
+
+    PYTHONPATH=src python examples/sharding_advisor.py
+"""
+import jax
+
+from repro.core.mapper import (analyze_tpu_mapping, contraction_tp,
+                               fsdp_dp, gemm_op, megatron_tp)
+
+mesh = jax.make_mesh((1,), ("model",))   # abstract: chips = PE count below
+
+# llama3-8b MLP up-projection at train_4k per-step scale
+tokens, d, ff = 256 * 4096, 4096, 14336
+op = gemm_op("llama3-mlp-up", m=tokens, n=ff, k=d)
+
+print(f"GEMM {op.name}: M={tokens} N={ff} K={d} "
+      f"({op.total_macs / 1e12:.1f}T MACs)\n")
+for mk in (megatron_tp, contraction_tp, fsdp_dp):
+    df = mk(mesh)
+    tm = analyze_tpu_mapping(df, op, mesh)
+    print(f"{df.name:18s} collectives={tm.expected_collectives or '(none)'}")
+    print(f"{'':18s} pspecs: lhs={tm.pspec_lhs} rhs={tm.pspec_rhs} "
+          f"out={tm.pspec_out}")
+print("\nTable-1 reading: K-partitioned = Megatron TP (input multicast "
+      "= all-gather);\nC-partitioned = contraction sharding (output "
+      "reduction = psum);\nN-partitioned = DP/FSDP (weight multicast "
+      "forward, gradient reduction backward).")

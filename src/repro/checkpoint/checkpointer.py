@@ -1,0 +1,174 @@
+"""Checkpointing with atomic commits, retention, async save, and *elastic*
+restore.
+
+Format: one directory per step containing
+
+    manifest.json          tree structure, shapes, dtypes, step metadata
+    <leaf-path>.npy        one file per pytree leaf (full global array)
+
+Writes go to ``<dir>.tmp`` and are committed with an atomic rename, so a
+crash mid-save never corrupts the latest checkpoint.  Saves can run on a
+background thread (``async_save=True``); ``wait()`` joins.
+
+Elastic restore: leaves are stored as *global* arrays, so a checkpoint
+taken on N hosts restores onto any M — the caller reshards by passing
+``shardings`` (device placement happens lazily on first use otherwise).
+On a real multi-host pod each host would write only its shard plus a
+shard index; the manifest format already carries per-leaf shape/dtype so
+that extension is purely an I/O change (documented, not needed for the
+single-host container).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize extension dtypes (bfloat16 etc.) natively; store
+# them as raw uint16/uint8 views and record the logical dtype in the
+# manifest.
+_EXT_DTYPES = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, prefix + (f"_{i}",))
+    elif tree is None:
+        yield prefix + ("_none",), None
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(skeleton, leaves: dict):
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            return {k: rec(v, prefix + (str(k),))
+                    for k, v in sorted(node.items())}
+        if isinstance(node, (tuple, list)):
+            out = [rec(v, prefix + (f"_{i}",)) for i, v in enumerate(node)]
+            return type(node)(out)
+        if node is None:
+            return None
+        return leaves["/".join(prefix)]
+    return rec(skeleton, ())
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None,
+             async_save: bool = False) -> None:
+        # materialize on host *before* backgrounding (snapshot semantics)
+        leaves = []
+        for path, leaf in _flatten(tree):
+            if leaf is None:
+                continue
+            leaves.append(("/".join(path), np.asarray(leaf)))
+        if async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, leaves, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, leaves, extra or {})
+
+    def _write(self, step: int, leaves, extra: dict) -> None:
+        try:
+            final = os.path.join(self.directory, f"step_{step:09d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "time": time.time(), "extra": extra,
+                        "leaves": {}}
+            for name, arr in leaves:
+                fn = name.replace("/", "__") + ".npy"
+                logical = str(arr.dtype)
+                if logical in _EXT_DTYPES:
+                    arr = arr.view(_EXT_DTYPES[logical][0])
+                np.save(os.path.join(tmp, fn), arr)
+                manifest["leaves"][name] = {
+                    "file": fn, "shape": list(arr.shape),
+                    "dtype": logical}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)        # atomic commit
+            self._gc()
+        except BaseException as e:  # surfaced by wait()
+            self._error = e
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, skeleton: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Restore into the structure of ``skeleton``.  With ``shardings``
+        (a matching tree of NamedSharding), leaves are placed sharded —
+        this is the elastic path: the mesh may differ from save time."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves = {}
+        for name, meta in manifest["leaves"].items():
+            arr = np.load(os.path.join(d, meta["file"]))
+            if meta["dtype"] in _EXT_DTYPES:
+                arr = arr.view(_EXT_DTYPES[meta["dtype"]][1])
+            leaves[name] = arr
+        tree = _unflatten_into(skeleton, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if x is not None else x,
+                tree, shardings)
+        return tree, manifest

@@ -1,0 +1,11 @@
+"""DBRX-132B [hf:databricks/dbrx-base; unverified]: 40L d_model=6144 48H
+(GQA kv=8) MoE 16 experts top-4, expert d_ff=10752, vocab=100352."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352,
+    n_experts=16, top_k=4,
+    norm="rms", mlp_type="swiglu", pos="rope", rope_theta=5e5,
+)

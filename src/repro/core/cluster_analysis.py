@@ -1,0 +1,328 @@
+"""Cluster analysis (CLA) engine.
+
+Splits a directive program into cluster levels, derives per-level sub-unit
+counts, completes implicit directives, and decomposes every map directive
+into *phases* — the (steady, edge) iteration classes whose cross product is
+the paper's ``ExtractDataIterationCases`` (Fig. 8).
+
+All arithmetic goes through a tiny backend facade (:class:`Backend`) so that
+the exact same formulas run on Python ints (the faithful engine) and on
+traced ``jnp`` scalars (the vectorized DSE engine).  Phase *structure* is
+static — an edge phase always exists, possibly with occurrence count 0 — so
+the jnp twin traces a fixed computation graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Mapping, Sequence
+
+from .directives import (Cluster, Dataflow, MapDirective, SpatialMap,
+                         TemporalMap, complete)
+from .tensor_analysis import LayerOp
+
+
+# ----------------------------------------------------------------------
+# Backend facade
+# ----------------------------------------------------------------------
+
+class Backend:
+    """Minimal numeric facade. ``py`` works on exact Python ints; ``jnp``
+    works on traced JAX scalars (no Python branching on values)."""
+
+    def __init__(self, maximum: Callable, minimum: Callable,
+                 where: Callable, floordiv: Callable):
+        self.maximum = maximum
+        self.minimum = minimum
+        self.where = where
+        self.floordiv = floordiv
+
+    def ceil_div(self, a, b):
+        return self.floordiv(a + b - 1, b)
+
+    def eq(self, a, b):
+        # returns 1/0 indicator usable in arithmetic
+        return self.where(a == b, 1, 0)
+
+
+def py_backend() -> Backend:
+    return Backend(
+        maximum=lambda a, b: a if a >= b else b,
+        minimum=lambda a, b: a if a <= b else b,
+        where=lambda c, t, f: t if c else f,
+        floordiv=lambda a, b: a // b,
+    )
+
+
+def jnp_backend() -> Backend:
+    import jax.numpy as jnp
+    return Backend(
+        maximum=jnp.maximum,
+        minimum=jnp.minimum,
+        where=jnp.where,
+        floordiv=jnp.floor_divide,
+    )
+
+
+def hybrid_backend() -> Backend:
+    """Python math on static ints, jnp on traced values.
+
+    This keeps everything derivable from (layer dims × directive sizes) —
+    trip counts of temporal loops, tile sizes, case structure — as exact
+    Python ints even while hardware parameters (PE count, NoC bandwidth)
+    are traced jnp scalars, so the vectorized engine traces a small graph
+    and stays bit-identical to the faithful engine."""
+    import jax.numpy as jnp
+
+    def _static(*vals) -> bool:
+        return all(isinstance(v, (int, float, bool)) for v in vals)
+
+    def maximum(a, b):
+        return (a if a >= b else b) if _static(a, b) else jnp.maximum(a, b)
+
+    def minimum(a, b):
+        return (a if a <= b else b) if _static(a, b) else jnp.minimum(a, b)
+
+    def where(c, t, f):
+        if _static(c):
+            return t if c else f
+        return jnp.where(c, t, f)
+
+    def floordiv(a, b):
+        return a // b if _static(a, b) else jnp.floor_divide(a, b)
+
+    return Backend(maximum=maximum, minimum=minimum, where=where,
+                   floordiv=floordiv)
+
+
+# ----------------------------------------------------------------------
+# Phases
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Phase:
+    """One iteration class of a map directive.
+
+    count        number of (temporal) steps, or spatial folds, in this class
+    size         per-unit mapped extent of the dim (max across units)
+    active       number of fully-active sub-units (1 for temporal maps)
+    partial_size extent of the trailing partially-filled unit (0 if none)
+    """
+    count: Any
+    size: Any
+    active: Any = 1
+    partial_size: Any = 0
+
+    @property
+    def units(self):
+        """Total units doing work (full + the partial straggler)."""
+        return self.active if isinstance(self.partial_size, int) and \
+            self.partial_size == 0 else None  # only used by py backend
+
+
+@dataclasses.dataclass
+class LoopInfo:
+    """A map directive instantiated at a cluster level."""
+    directive: MapDirective
+    dim: str
+    is_spatial: bool
+    n_units: Any              # sub-units the spatial map distributes over
+    steady: Phase
+    edge: Phase
+
+    @property
+    def phases(self) -> tuple[Phase, Phase]:
+        return (self.steady, self.edge)
+
+    def total_steps(self):
+        return self.steady.count + self.edge.count
+
+
+def temporal_phases(xp: Backend, D, size, offset) -> tuple[Phase, Phase]:
+    """Iteration classes of ``TemporalMap(size, offset)`` over a dim of
+    extent ``D``: ``n = 1 + ceil((D - s)/o)`` steps, the last possibly
+    partial."""
+    s = xp.minimum(size, D)
+    n = 1 + xp.ceil_div(xp.maximum(D - s, 0), offset)
+    last = D - (n - 1) * offset          # extent of the final step
+    last = xp.minimum(xp.maximum(last, 1), s)
+    has_edge = 1 - xp.eq(last, s)
+    steady = Phase(count=n - has_edge, size=s)
+    edge = Phase(count=has_edge, size=last)
+    return steady, edge
+
+
+def spatial_phases(xp: Backend, D, size, offset, n_units
+                   ) -> tuple[Phase, Phase]:
+    """Folding classes of ``SpatialMap(size, offset)`` over ``n_units``
+    sub-units (paper §3.2: insufficient PEs ⇒ the mapping folds over time).
+
+    A full fold covers ``span = s + (n-1)·o`` indices and advances by
+    ``n·o``; the final fold may activate fewer units and/or a partial
+    trailing unit."""
+    s = xp.minimum(size, D)
+    adv = n_units * offset
+    span = s + (n_units - 1) * offset
+    n_folds = 1 + xp.ceil_div(xp.maximum(D - span, 0), adv)
+    rem = D - (n_folds - 1) * adv        # indices left for the last fold
+    rem = xp.minimum(rem, span)
+    # units whose window [u·o, u·o + s) intersects [0, rem): u·o < rem
+    used = xp.minimum(n_units, xp.ceil_div(rem, offset))
+    # among used units, those fully covered: u·o + s <= rem
+    full = xp.minimum(used, xp.maximum(
+        xp.floordiv(rem - s, offset) + 1, 0))
+    partial_cnt = used - full
+    last_partial = xp.maximum(rem - full * offset, 0)
+    last_partial = xp.minimum(last_partial, s)
+    is_steady_last = xp.eq(full, n_units)
+    steady = Phase(count=n_folds - 1 + is_steady_last, size=s,
+                   active=n_units, partial_size=0)
+    edge = Phase(count=1 - is_steady_last, size=s, active=full,
+                 partial_size=xp.where(partial_cnt > 0, last_partial, 0))
+    return steady, edge
+
+
+# ----------------------------------------------------------------------
+# Level construction
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LevelSpec:
+    """One cluster level: its loops (outer→inner) and sub-unit count."""
+    index: int
+    loops: tuple[LoopInfo, ...]
+    n_units: Any                 # sub-clusters (PEs at the innermost level)
+    dims: dict[str, Any]         # dim extents seen by this level
+    is_innermost: bool
+
+    def spatial_loop(self) -> LoopInfo | None:
+        for lp in self.loops:
+            if lp.is_spatial:
+                return lp
+        return None
+
+    def spatial_loops(self) -> tuple[LoopInfo, ...]:
+        return tuple(lp for lp in self.loops if lp.is_spatial)
+
+    def steady_tile(self) -> dict[str, Any]:
+        """Per-sub-unit steady mapped extents (unmapped dims pass through)."""
+        m = dict(self.dims)
+        for lp in self.loops:
+            m[lp.dim] = lp.steady.size
+        return m
+
+
+def unit_counts(xp: Backend, num_pes, cluster_sizes: Sequence[int]
+                ) -> list[Any]:
+    """Sub-unit count per level: ``[P/Πc, c1, ..., cL]`` (paper §3.2).
+
+    Cluster sizes are capped by the PEs actually available, innermost
+    first — an 8-PE machine running a ``Cluster(64)`` dataflow forms one
+    8-wide cluster (which then folds), not a phantom 64-wide one."""
+    eff: list[Any] = [None] * len(cluster_sizes)
+    rem = xp.maximum(num_pes, 1)
+    for i in range(len(cluster_sizes) - 1, -1, -1):
+        ce = xp.maximum(xp.minimum(cluster_sizes[i], rem), 1)
+        eff[i] = ce
+        rem = xp.maximum(xp.floordiv(rem, ce), 1)
+    top = rem
+    return [top, *eff]
+
+
+def build_levels(xp: Backend, df: Dataflow, op: LayerOp, num_pes
+                 ) -> list[LevelSpec]:
+    """Instantiate every cluster level against the layer.
+
+    Level ``l+1`` sees dim extents equal to level ``l``'s steady per-unit
+    mapped sizes (paper §4.4: multi-cluster splits into single-cluster cases
+    with dim size = the upper level's mapping size)."""
+    df = complete(df, op.dims)
+    counts = unit_counts(xp, num_pes, df.cluster_sizes)
+    level_maps = df.levels
+    levels: list[LevelSpec] = []
+    dims: dict[str, Any] = dict(op.dims)
+    for li, maps in enumerate(level_maps):
+        n_units = counts[li]
+        loops: list[LoopInfo] = []
+        for d in maps:
+            D = dims[d.dim]
+            if isinstance(d, SpatialMap):
+                steady, edge = spatial_phases(xp, D, d.size, d.offset,
+                                              n_units)
+                loops.append(LoopInfo(d, d.dim, True, n_units, steady, edge))
+            else:
+                steady, edge = temporal_phases(xp, D, d.size, d.offset)
+                loops.append(LoopInfo(d, d.dim, False, 1, steady, edge))
+        spec = LevelSpec(index=li, loops=tuple(loops), n_units=n_units,
+                         dims=dict(dims),
+                         is_innermost=(li == len(level_maps) - 1))
+        levels.append(spec)
+        dims = spec.steady_tile()
+    return levels
+
+
+# ----------------------------------------------------------------------
+# Case enumeration (the paper's ExtractDataIterationCases)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class IterationCase:
+    """One element of the cross product of per-loop phases."""
+    occurrences: Any             # product of phase counts
+    sizes: dict[str, Any]        # per-unit mapped extent per dim
+    active_units: Any            # fully-active sub-units this case
+    partial_unit_sizes: dict[str, Any]  # spatial dim -> trailing unit extent
+    phase_ids: tuple[int, ...]   # 0=steady / 1=edge per loop (for debugging)
+
+
+def enumerate_cases(level: LevelSpec, xp: Backend) -> list[IterationCase]:
+    """Cross product of per-loop phases; occurrence = Π phase counts.
+
+    The structure (number of cases) is static per dataflow; counts may be 0
+    (e.g. when a dim divides evenly there is no edge), which keeps the jnp
+    twin branch-free.
+
+    Multiple SpatialMaps at a level are *aligned* (unit u takes chunk u of
+    every spatial dim): the first spatial loop drives folding; secondary
+    spatial loops contribute sizes and clamp the jointly-active unit count
+    via ``min``.  Secondary loops must cover their dim in a single fold
+    (true of all Table 3 dataflows)."""
+    first_spatial = next((i for i, lp in enumerate(level.loops)
+                          if lp.is_spatial), None)
+    loop_phase_lists: list[tuple[Phase, ...]] = []
+    for i, lp in enumerate(level.loops):
+        if lp.is_spatial and i != first_spatial:
+            # Aligned secondary spatial map: the primary drives time, so a
+            # secondary never contributes fold steps.  Collapse it to its
+            # covering phase (first fold).  On an under-provisioned
+            # cluster (fewer PEs than the dim) the uncovered tail is
+            # honestly dropped — the mapping simply cannot express it.
+            st, ed = lp.phases
+            if isinstance(st.count, int) and isinstance(ed.count, int):
+                loop_phase_lists.append((st if st.count >= 1 else ed,))
+                continue
+        loop_phase_lists.append(lp.phases)
+    cases: list[IterationCase] = []
+    for choice in itertools.product(
+            *[range(len(p)) for p in loop_phase_lists]):
+        occ = 1
+        sizes = dict(level.dims)
+        active = None
+        partials: dict[str, Any] = {}
+        for i, (lp, phs, ci) in enumerate(
+                zip(level.loops, loop_phase_lists, choice)):
+            ph = phs[ci]
+            sizes[lp.dim] = ph.size
+            if lp.is_spatial and i != first_spatial:
+                occ = occ * xp.where(ph.count > 0, 1, 0)
+            else:
+                occ = occ * ph.count
+            if lp.is_spatial:
+                active = ph.active if active is None \
+                    else xp.minimum(active, ph.active)
+                partials[lp.dim] = ph.partial_size
+        cases.append(IterationCase(
+            occurrences=occ, sizes=sizes,
+            active_units=1 if active is None else active,
+            partial_unit_sizes=partials, phase_ids=choice))
+    return cases

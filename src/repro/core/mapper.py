@@ -1,0 +1,164 @@
+"""The MAESTRO ↔ TPU bridge: directive programs as mesh sharding, and the
+pod as an abstract MAESTRO accelerator.
+
+Two directions:
+
+1. ``dataflow_to_pspec``: lower a directive program for a tensor op onto a
+   mesh — SpatialMap at cluster level *l* ⇒ shard that dim over mesh axis
+   *l*; temporal maps stay on-chip.  This lets the paper's Table-3 programs
+   be *executed* as sharding strategies (examples/sharding_advisor.py).
+
+2. ``analyze_tpu_mapping``: run the MAESTRO cost engines on a
+   (GEMM × sharding) pair with the pod modeled as the abstract accelerator
+   of Fig. 2 — chips = PEs, per-chip HBM = L1, pod-global = L2, ICI = the
+   NoC pipe model.  The reuse analysis then *predicts* which collectives
+   the SPMD partitioner must insert:
+
+      input tensor decoupled from a sharded dim  -> spatial multicast
+                                                    (all-gather / broadcast)
+      output decoupled from a sharded dim (C-par) -> spatial reduction
+                                                    (all-reduce / reduce-
+                                                     scatter = psum)
+
+   ``expected_collectives`` is cross-checked against the dry-run HLO in
+   tests/test_mapper.py — the paper's Table 1 validated against XLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .dataflows import KC_P
+from .directives import Cluster, Dataflow, SpatialMap, TemporalMap
+from .model import Stats, analyze
+from .performance import HWConfig
+from .reuse_analysis import MULTICAST, REDUCTION
+from .tensor_analysis import LayerOp, fc
+
+# TPU v5e constants (also used by core/roofline.py)
+V5E_PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+V5E_HBM_BW = 819e9               # bytes/s per chip
+V5E_ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class TPUMapping:
+    """A sharding choice for one GEMM-shaped op, in both vocabularies."""
+    dataflow: Dataflow
+    pspec_out: P
+    pspec_lhs: P
+    pspec_rhs: P
+    expected_collectives: dict[str, str]   # tensor -> collective kind
+    stats: Stats | None = None
+
+
+def gemm_op(name: str, m: int, n: int, k: int) -> LayerOp:
+    """O[M,N] += L[M,K] R[K,N] with MAESTRO dims N_fc=M, K_fc=N, C_fc=K."""
+    return fc(name, n=m, k=n, c=k)
+
+
+# FC-dim -> (tensor axis position) for pspec construction
+_FC_AXES = {
+    "lhs": {"N": 0, "C": 1},     # I[M, K]
+    "rhs": {"C": 0, "K": 1},     # F[K, N]
+    "out": {"N": 0, "K": 1},     # O[M, N]
+}
+
+
+def dataflow_to_pspec(df: Dataflow, mesh: Mesh, op: LayerOp
+                      ) -> dict[str, P]:
+    """SpatialMap at cluster level l ⇒ shard dim over mesh axis l.
+
+    Mesh axes are ordered outer→inner to match cluster levels; the number
+    of Cluster directives must be < len(mesh.axis_names)."""
+    levels = df.levels
+    if len(levels) > len(mesh.axis_names):
+        raise ValueError(
+            f"{df.name}: {len(levels)} cluster levels > mesh rank "
+            f"{len(mesh.axis_names)}")
+    dim_to_axis: dict[str, str] = {}
+    for li, maps in enumerate(levels):
+        for d in maps:
+            if isinstance(d, SpatialMap):
+                dim_to_axis[d.dim] = mesh.axis_names[li]
+    out: dict[str, P] = {}
+    for t, pos in _FC_AXES.items():
+        parts: list[Any] = [None, None]
+        for dim, i in pos.items():
+            if dim in dim_to_axis:
+                parts[i] = dim_to_axis[dim]
+        out[t] = P(*parts)
+    return out
+
+
+def expected_collectives(df: Dataflow, op: LayerOp) -> dict[str, str]:
+    """Table-1 logic → the collective XLA must insert per tensor."""
+    sdims = {d.dim for d in df.directives if isinstance(d, SpatialMap)}
+    out: dict[str, str] = {}
+    for t in op.input_tensors():
+        if sdims and not any(t.coupled_to(s) for s in sdims):
+            out[t.name] = "all-gather"       # spatial multicast
+    if sdims & op.reduction_dims():
+        out[op.output.name] = "all-reduce"   # spatial reduction (psum)
+    return out
+
+
+def analyze_tpu_mapping(df: Dataflow, op: LayerOp, mesh: Mesh,
+                        *, dtype_bytes: int = 2,
+                        freq_hz: float = 1.0e9) -> TPUMapping:
+    """MAESTRO's engines applied to the pod: chips = PEs; the NoC pipe
+    model gets ICI bandwidth in elements/cycle."""
+    n_chips = int(mesh.devices.size)
+    elems_per_cycle = V5E_ICI_BW / freq_hz / dtype_bytes
+    hw = HWConfig(num_pes=n_chips, noc_bw=elems_per_cycle,
+                  noc_latency=1.0,
+                  macs_per_pe=int(V5E_PEAK_FLOPS / 2 / freq_hz))
+    stats = analyze(op, df, hw)
+    pspecs = dataflow_to_pspec(df, mesh, op)
+    return TPUMapping(
+        dataflow=df,
+        pspec_out=pspecs["out"], pspec_lhs=pspecs["lhs"],
+        pspec_rhs=pspecs["rhs"],
+        expected_collectives=expected_collectives(df, op),
+        stats=stats)
+
+
+# ----------------------------------------------------------------------
+# Canonical LM-training mappings in directive form
+# ----------------------------------------------------------------------
+
+def megatron_tp(mesh: Mesh) -> Dataflow:
+    """Tensor parallelism over output features = the paper's K-partitioned
+    family (NVDLA's KC-P outer level): weights stationary per chip, inputs
+    multicast (all-gather), no output reduction."""
+    return Dataflow("tp-K-partitioned", (
+        TemporalMap(1, 1, "N"),
+        SpatialMap(1, 1, "K"),
+    ))
+
+
+def contraction_tp(mesh: Mesh) -> Dataflow:
+    """Sharded contraction (the second GEMM of an MLP): C-partitioned —
+    spatial reduction ⇒ all-reduce/reduce-scatter, exactly MAESTRO's
+    C-P row of Table 1."""
+    return Dataflow("tp-C-partitioned", (
+        TemporalMap(1, 1, "N"),
+        TemporalMap(1, 1, "K"),
+        SpatialMap(1, 1, "C"),
+    ))
+
+
+def fsdp_dp(mesh: Mesh) -> Dataflow:
+    """Data parallelism with ZeRO-3: batch spatially mapped across the
+    data axis.  Weights are decoupled from N ⇒ spatial multicast — the
+    FSDP all-gather.  In the *backward* GEMM (dW = Xᵀ·dY) N becomes the
+    contraction dim, so the same taxonomy row flips to spatial reduction —
+    the gradient reduce-scatter.  One Table-1 row explains both FSDP
+    collectives."""
+    return Dataflow("dp-N-partitioned", (
+        SpatialMap(1, 1, "N"),
+        TemporalMap(1, 1, "K"),
+        TemporalMap(1, 1, "C"),
+    ))

@@ -1,0 +1,68 @@
+"""Performance analysis (PA) engine pieces: the abstract hardware model and
+the per-case delay math (paper §4.2, Fig. 8).
+
+The NoC is the paper's *pipe model*: a bandwidth (elements/cycle) and an
+average latency (cycles).  Communication delay of V elements is
+``ceil(V / bw) + latency`` — the pipelining effect of packet-switched NoCs.
+Double buffering makes the steady-state step delay
+``max(ingress, compute, egress)``; the initialization case is serial
+(``ingress + compute + egress``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from .cluster_analysis import Backend
+
+
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    """Abstract accelerator model (paper Fig. 2).
+
+    ``noc_bw`` is in data elements/cycle; ``noc_latency`` in cycles.
+    ``multicast``/``spatial_reduction`` gate the hardware support of Table 2
+    (their absence is the Table 5 ablation).  ``l1_kb``/``l2_kb`` of ``None``
+    mean "place exactly what MAESTRO reports" (the paper's DSE behaviour);
+    concrete values turn into validity constraints.
+    """
+    num_pes: Any
+    noc_bw: Any = 32.0
+    noc_latency: Any = 2.0
+    macs_per_pe: int = 1
+    multicast: bool = True
+    spatial_reduction: bool = True
+    dtype_bytes: int = 2
+    l1_kb: Any = None
+    l2_kb: Any = None
+    freq_mhz: float = 1000.0
+
+    def replace(self, **kw) -> "HWConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def comm_delay(xp: Backend, volume: Any, hw: HWConfig) -> Any:
+    """Pipe-model delay for ``volume`` elements (0 volume → 0 delay)."""
+    d = xp.ceil_div(volume, hw.noc_bw) + hw.noc_latency
+    return xp.where(volume > 0, d, 0)
+
+
+def compute_delay(xp: Backend, psums: Any, hw: HWConfig) -> Any:
+    return xp.ceil_div(psums, hw.macs_per_pe)
+
+
+def log2_ceil(xp: Backend, x: Any) -> Any:
+    if isinstance(x, int):
+        return max(0, (max(x, 1) - 1)).bit_length()
+    import jax.numpy as jnp
+    xf = jnp.maximum(x, 1).astype(jnp.float32)
+    return jnp.ceil(jnp.log2(xf)).astype(jnp.int32)
+
+
+def reduction_fwd_delay(xp: Backend, active_units: Any, hw: HWConfig,
+                        enabled: bool) -> Any:
+    """Adder-tree spatial-reduction latency (paper GetPSumFwdDelay):
+    ``ceil(log2(n))`` stages; zero when the level has no spatial reduction."""
+    if not enabled:
+        return 0
+    return log2_ceil(xp, active_units)

@@ -1,0 +1,125 @@
+"""Three-term roofline from compiled dry-run artifacts (deliverable g).
+
+    compute    = HLO_FLOPs  / (chips × 197 TFLOP/s)
+    memory     = HLO_bytes  / (chips × 819 GB/s)
+    collective = coll_bytes / (chips × 50 GB/s/link)
+    step_time  = max(compute, memory, collective)
+
+The max-combiner is MAESTRO's double-buffered outstanding-delay rule
+(Fig. 8) applied at pod scale: ingress/egress (HBM + ICI) overlap compute.
+``MODEL_FLOPS = 6·N·D`` (N = active params, D = tokens) gives the
+useful-compute ratio — remat recompute and padding show up as
+HLO_FLOPs > MODEL_FLOPS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+V5E_PEAK_FLOPS = 197e12      # bf16, per chip
+V5E_HBM_BW = 819e9           # bytes/s, per chip
+V5E_ICI_BW = 50e9            # bytes/s, per link (per prompt spec)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    tokens: int
+    per_device: bool = True   # cost_analysis numbers are per-device
+
+    @property
+    def compute_s(self) -> float:
+        chips = 1 if self.per_device else self.chips
+        return self.hlo_flops / (chips * V5E_PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        chips = 1 if self.per_device else self.chips
+        return self.hlo_bytes / (chips * V5E_HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        chips = 1 if self.per_device else self.chips
+        return self.collective_bytes / (chips * V5E_ICI_BW)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global)."""
+        chips = self.chips if self.per_device else 1
+        total = self.hlo_flops * chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time."""
+        denom = self.step_s * self.chips * V5E_PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops, "tokens": self.tokens,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "step_s": self.step_s,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio, "mfu": self.mfu,
+        }
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """6·N_active·D for training; 2·N_active·D for inference forward."""
+    n_active = cfg.param_counts()["active"]
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def from_dryrun(record: dict, cfg=None) -> RooflineTerms:
+    return RooflineTerms(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        chips=record["chips"],
+        hlo_flops=record.get("flops", 0.0),
+        hlo_bytes=record.get("bytes_accessed", 0.0),
+        collective_bytes=record.get("collective_bytes", 0.0),
+        model_flops=record.get("model_flops", 0.0),
+        tokens=record.get("tokens", 0),
+    )
+
+
+def format_table(rows: list[RooflineTerms]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'MFU':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.mesh:10s} "
+            f"{r.compute_s:10.3e} {r.memory_s:10.3e} "
+            f"{r.collective_s:10.3e} {r.bottleneck:>10s} "
+            f"{r.useful_ratio:7.3f} {r.mfu:6.3f}")
+    return "\n".join(lines)
+
+
+def save_json(rows: list[RooflineTerms], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump([r.to_dict() for r in rows], f, indent=1)

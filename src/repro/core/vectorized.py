@@ -1,0 +1,128 @@
+"""Vectorized twin of the faithful engine.
+
+The paper's DSE sweeps hardware parameters (#PEs, NoC bandwidth, buffer
+sizes) holding (layer × dataflow) fixed.  Because the analysis in
+``model.py`` is written against the backend facade, the *same code* runs
+with hardware parameters as traced jnp scalars: layer dims, directive
+sizes, temporal trip counts and the iteration-case structure stay static
+Python ints (hybrid backend), while everything touched by ``num_pes`` /
+``noc_bw`` becomes part of one small jit graph.  ``vmap`` then evaluates
+the whole design grid in a single fused XLA computation — this is the
+beyond-paper optimization that lifts the DSE rate orders of magnitude above
+the paper's 0.17M designs/s (see EXPERIMENTS.md §Perf-A).
+
+Output is a flat, fixed-shape feature vector per design point so the DSE
+can stack millions of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .cluster_analysis import hybrid_backend
+from .directives import Dataflow
+from .model import analyze
+from .performance import HWConfig
+from .tensor_analysis import LayerOp
+
+# Feature vector layout produced by the traced evaluator.
+FEATURES = ("runtime", "energy_pj", "macs", "l1_kb", "l2_kb", "util",
+            "bw_req", "throughput", "edp")
+
+
+def stats_vector(op: LayerOp, df: Dataflow, hw: HWConfig) -> jnp.ndarray:
+    """One design point -> fixed-shape feature vector (traceable)."""
+    xp = hybrid_backend()
+    s = analyze(op, df, hw, xp=xp)
+    runtime = jnp.asarray(s.runtime, jnp.float32)
+    energy = jnp.asarray(s.energy_pj, jnp.float32)
+    macs = jnp.asarray(s.total_macs, jnp.float32)
+    return jnp.stack([
+        runtime,
+        energy,
+        macs,
+        jnp.asarray(s.l1_req_kb, jnp.float32),
+        jnp.asarray(s.l2_req_kb, jnp.float32),
+        jnp.asarray(s.utilization, jnp.float32),
+        jnp.asarray(s.peak_bw.get(0, 0), jnp.float32),
+        macs / runtime,
+        energy * runtime,
+    ])
+
+
+@functools.lru_cache(maxsize=512)
+def _build_eval(op_key, df_key, multicast: bool, reduction: bool,
+                latency: float, macs_per_pe: int) -> Callable:
+    op, df = _OP_REG[op_key], _DF_REG[df_key]
+
+    def eval_one(num_pes, noc_bw):
+        hw = HWConfig(num_pes=num_pes, noc_bw=noc_bw,
+                      noc_latency=latency, multicast=multicast,
+                      spatial_reduction=reduction,
+                      macs_per_pe=macs_per_pe)
+        return stats_vector(op, df, hw)
+
+    return jax.jit(jax.vmap(eval_one))
+
+
+# jit-cache registries keyed by object identity (LayerOp/Dataflow are
+# frozen-ish dataclasses holding dicts — not hashable — so we key by repr).
+_OP_REG: dict[str, LayerOp] = {}
+_DF_REG: dict[str, Dataflow] = {}
+
+
+def _reg(op: LayerOp, df: Dataflow) -> tuple[str, str]:
+    ok = f"{op.name}|{sorted(op.dims.items())}|{op.op_type}"
+    dk = f"{df.name}|{df.directives}"
+    _OP_REG[ok] = op
+    _DF_REG[dk] = df
+    return ok, dk
+
+
+def batched_evaluator(op: LayerOp, df: Dataflow, *, multicast: bool = True,
+                      spatial_reduction: bool = True,
+                      noc_latency: float = 2.0,
+                      macs_per_pe: int = 1) -> Callable:
+    """Returns ``f(num_pes[i], noc_bw[i]) -> features[i, F]``, jit+vmap'd.
+
+    The returned callable evaluates the full MAESTRO analysis for every
+    design point in one XLA executable."""
+    ok, dk = _reg(op, df)
+    return _build_eval(ok, dk, multicast, spatial_reduction, noc_latency,
+                       macs_per_pe)
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Columnar stats for a batch of design points."""
+    runtime: Any
+    energy_pj: Any
+    macs: Any
+    l1_kb: Any
+    l2_kb: Any
+    util: Any
+    bw_req: Any
+    throughput: Any
+    edp: Any
+
+    @classmethod
+    def from_features(cls, feats) -> "BatchStats":
+        cols = {name: feats[..., i] for i, name in enumerate(FEATURES)}
+        return cls(**{
+            "runtime": cols["runtime"], "energy_pj": cols["energy_pj"],
+            "macs": cols["macs"], "l1_kb": cols["l1_kb"],
+            "l2_kb": cols["l2_kb"], "util": cols["util"],
+            "bw_req": cols["bw_req"], "throughput": cols["throughput"],
+            "edp": cols["edp"]})
+
+
+def evaluate_grid(op: LayerOp, df: Dataflow, num_pes, noc_bw,
+                  **kw) -> BatchStats:
+    """Evaluate (layer × dataflow) over arrays of hardware design points."""
+    f = batched_evaluator(op, df, **kw)
+    feats = f(jnp.asarray(num_pes), jnp.asarray(noc_bw))
+    return BatchStats.from_features(feats)

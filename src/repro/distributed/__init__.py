@@ -1,0 +1,5 @@
+from .sharding import (DEFAULT_RULES, batch_sharding, replicated,
+                       resolve_spec, shardings_for_params, tree_shardings)
+
+__all__ = ["DEFAULT_RULES", "batch_sharding", "replicated", "resolve_spec",
+           "shardings_for_params", "tree_shardings"]

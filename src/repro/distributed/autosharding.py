@@ -1,0 +1,54 @@
+"""Activation sharding constraints via an ambient mesh context.
+
+Model code calls ``constrain(x, ("batch", "seq", "vocab"))`` at layout-
+critical points (logits, block outputs).  When a mesh context is active
+(set by the launch layer around tracing), the logical axes resolve to a
+``with_sharding_constraint``; with no context (CPU smoke tests) it is a
+no-op.  This is what stops the SPMD partitioner from replicating the
+(batch, seq, vocab) logits when the tied embedding's contraction dim and
+the batch dim both prefer the 'data' axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import DEFAULT_RULES, resolve_spec
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_mesh_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Mapping[str, tuple[str, ...]] | None = None):
+    token = _ACTIVE.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_mesh() -> Mesh | None:
+    ctx = _ACTIVE.get()
+    return ctx[0] if ctx else None
+
+
+def constrain(x, axes: tuple[str | None, ...]):
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(x.shape, axes, mesh, rules or DEFAULT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def wrap_with_context(fn, mesh: Mesh, rules=None):
+    """Returns fn that traces under the mesh context."""
+    def wrapped(*args, **kw):
+        with activate(mesh, rules):
+            return fn(*args, **kw)
+    return wrapped

@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules for the production mesh.
+
+Mesh axes: ``(data, model)`` single-pod 16×16; ``(pod, data, model)``
+multi-pod 2×16×16.  Logical axes map to mesh axes by the table below; a
+mapping is applied only if the dim is divisible by the mesh-axis product,
+otherwise trailing→leading axes are dropped (graceful replication — e.g.
+seamless's vocab 256206 is not 16-divisible and stays replicated), and a
+mesh axis is never used twice in one tensor (first logical axis wins —
+e.g. MoE experts take 'model', so the expert FFN's mlp dim replicates).
+
+In MAESTRO vocabulary (core/mapper.py): a mesh axis is a Cluster level, a
+logical-axis mapping is a SpatialMap of that tensor dim across the level,
+and an unmapped dim is an implicit fully-unrolled TemporalMap.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (in order)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("pod", "data"),      # FSDP/ZeRO-3 weight sharding
+    "heads": ("model",),
+    "heads_flat": ("model",),
+    "kv_heads": ("model",),
+    "qkv": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "embed_out": ("model",),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "seq": (),
+    "kv_seq": ("data",),           # sequence-sharded KV (long-context)
+}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_spec(shape: tuple[int, ...], axes: tuple[str | None, ...],
+                 mesh: Mesh, rules: Mapping[str, tuple[str, ...]] | None
+                 = None) -> P:
+    """Logical axes -> PartitionSpec with divisibility + no-reuse checks."""
+    rules = rules or DEFAULT_RULES
+    sizes = mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    parts: list[Any] = []
+    for dim, ax in zip(shape, axes):
+        if ax is None or ax not in rules:
+            parts.append(None)
+            continue
+        want = [a for a in rules[ax] if a in sizes and a not in used]
+        # drop leading axes until the product divides the dim
+        assign: tuple[str, ...] = ()
+        for start in range(len(want)):
+            cand = tuple(want[start:])
+            prod = int(np.prod([sizes[a] for a in cand])) if cand else 1
+            if cand and dim % prod == 0:
+                assign = cand
+                break
+        if assign:
+            used.update(assign)
+            parts.append(assign if len(assign) > 1 else assign[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(spec_tree, axes_tree, mesh: Mesh,
+                   rules: Mapping[str, tuple[str, ...]] | None = None):
+    """Map (ShapeDtypeStruct tree, logical-axes tree) -> NamedSharding tree.
+
+    Manual recursion: the axes tree has *tuples of axis names* as leaves,
+    which jax pytrees would wrongly flatten."""
+    def rec(spec, axes):
+        if _is_axes_leaf(axes):
+            return NamedSharding(mesh, resolve_spec(spec.shape, axes, mesh,
+                                                    rules))
+        if isinstance(axes, dict):
+            return {k: rec(spec[k], axes[k]) for k in axes}
+        if isinstance(axes, (tuple, list)):
+            return type(axes)(rec(s, a) for s, a in zip(spec, axes))
+        if axes is None:
+            return None
+        raise TypeError(f"bad axes node: {axes!r}")
+    return rec(spec_tree, axes_tree)
+
+
+def shardings_for_params(specs, mesh: Mesh, rules=None):
+    """From a ParamSpec tree directly."""
+    from ..models.param import ParamSpec, map_specs
+
+    def leaf(path, s: ParamSpec):
+        return NamedSharding(mesh, resolve_spec(s.shape, s.axes, mesh,
+                                                rules))
+    return map_specs(specs, leaf)
+
+
+def batch_sharding(mesh: Mesh, *, shard_batch: bool = True) -> NamedSharding:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if not shard_batch or not axes:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(tuple(axes)))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

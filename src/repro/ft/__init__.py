@@ -1,0 +1,3 @@
+from .coordinator import FaultTolerantLoop, FTConfig, StepEvent
+
+__all__ = ["FaultTolerantLoop", "FTConfig", "StepEvent"]

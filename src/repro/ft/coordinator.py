@@ -1,0 +1,122 @@
+"""Fault tolerance: checkpoint/restart coordination and straggler
+mitigation for the training loop.
+
+``FaultTolerantLoop`` wraps a step function with:
+
+  * periodic (async) checkpoints via :class:`Checkpointer`;
+  * restart-on-failure: any exception from a step (a real XLA error, or an
+    injected fault in tests) triggers restore-from-last-good and replay —
+    the data pipeline is stateless in the step index, so replayed batches
+    are bit-identical;
+  * a straggler watchdog: per-step wall times feed an EWMA; steps slower
+    than ``threshold ×`` the EWMA are flagged.  On a real pod the hook
+    would drain and re-slice the mesh around the slow host (elastic
+    restore onto the surviving device set — checkpoint/checkpointer.py
+    already reshards); here the hook records the event and, if an
+    ``on_straggler`` callback is provided, defers the policy to it.
+
+MAESTRO connection: restart cost is an availability-vs-throughput design
+point exactly like the paper's DSE trade-offs — the knobs (checkpoint
+period vs restart replay length) are exposed so the examples can sweep
+them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from ..checkpoint.checkpointer import Checkpointer
+
+
+@dataclasses.dataclass
+class FTConfig:
+    checkpoint_every: int = 50
+    keep: int = 3
+    async_save: bool = True
+    max_restarts: int = 3
+    straggler_threshold: float = 3.0
+    ewma_alpha: float = 0.2
+
+
+@dataclasses.dataclass
+class StepEvent:
+    step: int
+    wall_s: float
+    straggler: bool
+    restarted: bool = False
+
+
+class FaultTolerantLoop:
+    def __init__(self, step_fn: Callable, checkpointer: Checkpointer,
+                 cfg: FTConfig | None = None,
+                 on_straggler: Callable[[StepEvent], None] | None = None,
+                 fault_injector: Callable[[int], None] | None = None):
+        self.step_fn = step_fn
+        self.ckpt = checkpointer
+        self.cfg = cfg or FTConfig()
+        self.on_straggler = on_straggler
+        self.fault_injector = fault_injector
+        self.events: list[StepEvent] = []
+        self.restarts = 0
+        self._ewma: float | None = None
+
+    # ------------------------------------------------------------------
+    def run(self, state: Any, batch_fn: Callable[[int], Any],
+            start_step: int, num_steps: int):
+        """Run ``num_steps`` from ``start_step``; returns (state, step).
+        ``state`` is the (params, opt_state, ...) tuple the step_fn maps
+        over; ``batch_fn(step)`` materializes the deterministic batch."""
+        step = start_step
+        end = start_step + num_steps
+        while step < end:
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector(step)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch_fn(step))
+                wall = time.perf_counter() - t0
+                self._observe(step, wall)
+                step += 1
+                if step % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(step, state,
+                                   extra={"metrics": _to_float(metrics)},
+                                   async_save=self.cfg.async_save)
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                state, step = self._restore(state)
+                self.events.append(StepEvent(step, 0.0, False,
+                                             restarted=True))
+        self.ckpt.wait()
+        return state, step
+
+    # ------------------------------------------------------------------
+    def _restore(self, skeleton: Any):
+        last = self.ckpt.latest_step()
+        if last is None:
+            return skeleton, 0   # cold restart from step 0
+        state, manifest = self.ckpt.restore(skeleton)
+        return state, manifest["step"]
+
+    def _observe(self, step: int, wall: float) -> None:
+        if self._ewma is None:
+            self._ewma = wall
+        slow = wall > self.cfg.straggler_threshold * self._ewma
+        a = self.cfg.ewma_alpha
+        if not slow:   # stragglers don't poison the baseline
+            self._ewma = (1 - a) * self._ewma + a * wall
+        ev = StepEvent(step, wall, slow)
+        self.events.append(ev)
+        if slow and self.on_straggler is not None:
+            self.on_straggler(ev)
+
+    @property
+    def straggler_steps(self) -> list[int]:
+        return [e.step for e in self.events if e.straggler]
+
+
+def _to_float(tree):
+    import jax
+    return jax.tree.map(lambda x: float(x), tree)

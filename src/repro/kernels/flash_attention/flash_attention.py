@@ -1,0 +1,119 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+MAESTRO view of the tiling (DESIGN.md §2): the grid is a directive program
+
+    TemporalMap(blk_q, blk_q) Q        # grid dim 2 (parallel)
+    TemporalMap(blk_k, blk_k) K        # grid dim 3 (arbitrary = reduction)
+    SpatialMap(1, 1) B, H              # grid dims 0/1 across cores
+
+with the output tile *temporally reduced* in VMEM scratch across the K
+grid dim (online softmax = MAESTRO's temporal reduction with a running
+rescale), and Q/O tiles stationary while K/V stream — a weight-stationary
+dataflow where "weights" are the query block.
+
+Block shapes keep the working set in VMEM: (blk_q × D) query/output tiles,
+(blk_k × D) K/V tiles, all multiples of the 128-lane MXU width.
+GQA is handled in the index map (query head h reads KV head h // group) —
+no repeated K/V is ever materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  blk_q: int, blk_k: int, seq_k: int, causal: bool,
+                  scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)      # (blk_q, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (blk_k, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * blk_q + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 0)
+        k_pos = ki * blk_k + jax.lax.broadcasted_iota(
+            jnp.int32, (blk_q, blk_k), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "blk_q", "blk_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, blk_q: int = 128,
+                    blk_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0
+    grid = (B, Hq, Sq // blk_q, Sk // blk_k)
+
+    kernel = functools.partial(
+        _flash_kernel, blk_q=blk_q, blk_k=blk_k, seq_k=Sk, causal=causal,
+        scale=D ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, D),
+                         lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, blk_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, D),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), q.dtype),
+        scratch_shapes=[
+            pl_vmem((blk_q, 1)),
+            pl_vmem((blk_q, 1)),
+            pl_vmem((blk_q, D)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def pl_vmem(shape, dtype=jnp.float32):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,21 @@
+"""Dispatching wrapper: Pallas kernel on TPU, interpret-mode kernel for
+validation, chunked-jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, backend: str = "auto",
+              blk_q: int = 128, blk_k: int = 128):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return flash_attention(q, k, v, causal=causal, blk_q=blk_q,
+                               blk_k=blk_k)
+    if backend == "interpret":
+        return flash_attention(q, k, v, causal=causal, blk_q=blk_q,
+                               blk_k=blk_k, interpret=True)
+    return attention_ref(q, k, v, causal=causal)

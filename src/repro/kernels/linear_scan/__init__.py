@@ -1,0 +1,5 @@
+from .linear_scan import linear_scan
+from .ops import scan_op
+from .ref import linear_scan_ref
+
+__all__ = ["linear_scan", "scan_op", "linear_scan_ref"]

@@ -1,0 +1,133 @@
+"""Chunked linear-attention (RWKV-6 / Mamba-2 SSD) as a Pallas TPU kernel.
+
+Recurrence: S_t = diag(w_t)·S_{t-1} + k_t v_t^T;  o_t = r_t · S_{t-1 or t}.
+
+MAESTRO view: grid = (B, H spatial) × (chunks temporal); the state tile
+S (K×V) is *output-stationary* in VMEM scratch across the chunk dim
+(temporal reduction), while r/k/v/decay chunk tiles stream through —
+the TPU-native adaptation of the recurrence: within a chunk the
+dependency is expressed as a decay-weighted triangular matmul (MXU work),
+across chunks as a rank-c state update, instead of the GPU formulation's
+per-timestep elementwise recurrence.
+
+The in-chunk cumulative decay is computed with a lower-triangular ones
+matmul (MXU-friendly) rather than a cumsum primitive.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmem(shape, dtype=jnp.float32):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _ls_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sT_ref,
+               s_scr, *, chunk: int, post_update: bool, use_u: bool):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    c = chunk
+    r = r_ref[0, 0].astype(jnp.float32)           # (c, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)           # (c, V)
+    lw = lw_ref[0, 0].astype(jnp.float32)         # (c, K)
+
+    # inclusive cumulative decay via lower-triangular ones matmul
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    tri_incl = (jj <= ii).astype(jnp.float32)     # j <= i
+    P = jax.lax.dot_general(tri_incl, lw, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    Pq = P if post_update else P - lw
+    q_eff = r * jnp.exp(Pq)
+    k_eff = k * jnp.exp(-P)
+
+    S = s_scr[...]
+    inter = jax.lax.dot_general(q_eff, S, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    A = jax.lax.dot_general(q_eff, k_eff, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    mask = (jj < ii) if not post_update else (jj <= ii)
+    A = jnp.where(mask, A, 0.0)
+    if use_u:
+        u = u_ref[0].astype(jnp.float32)          # (K,)
+        diag = jnp.sum(r * u[None, :] * k, axis=1)
+        A = A + jnp.where(jj == ii, diag[:, None], 0.0)
+    intra = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0, 0] = (inter + intra).astype(o_ref.dtype)
+
+    p_last = P[c - 1]                              # (K,)
+    k_scaled = k * jnp.exp(p_last[None, :] - P)
+    S_new = S * jnp.exp(p_last)[:, None] + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sT_ref[0, 0] = S_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "post_update",
+                                             "interpret"))
+def linear_scan(r, k, v, log_w, u=None, state0=None, *, chunk: int = 64,
+                post_update: bool = False, interpret: bool = False):
+    """r/k/log_w: (B, T, H, K); v: (B, T, H, V); u: (H, K) or None;
+    state0: (B, H, K, V) or None.  Returns (o (B,T,H,V), state (B,H,K,V)).
+
+    Layout: tensors are transposed to (B, H, T, *) so chunk tiles are
+    contiguous (T, K) VMEM blocks."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, T)
+    assert T % c == 0
+    nc = T // c
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+    if u is None:
+        use_u = False
+        u_in = jnp.zeros((H, K), jnp.float32)
+    else:
+        use_u = True
+        u_in = u.astype(jnp.float32)
+    tb = lambda x: jnp.transpose(x, (0, 2, 1, 3))  # (B, H, T, *)
+    rt, kt, vt, lwt = tb(r), tb(k), tb(v), tb(log_w)
+    lwt = jnp.clip(lwt.astype(jnp.float32), -60.0 / c, 0.0)
+
+    kernel = functools.partial(_ls_kernel, chunk=c,
+                               post_update=post_update, use_u=use_u)
+    grid = (B, H, nc)
+    o, sT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, K), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c, K), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c, V), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, c, K), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, K), lambda b, h, i: (h, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, V), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, V), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((K, V))],
+        interpret=interpret,
+    )(rt, kt, vt, lwt, u_in, state0)
+    return jnp.transpose(o, (0, 2, 1, 3)), sT

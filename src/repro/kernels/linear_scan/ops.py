@@ -1,0 +1,21 @@
+"""Dispatching wrapper for the linear-scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from .linear_scan import linear_scan
+from .ref import linear_scan_ref
+
+
+def scan_op(r, k, v, log_w, u=None, state0=None, *, chunk=64,
+            post_update=False, backend="auto"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return linear_scan(r, k, v, log_w, u, state0, chunk=chunk,
+                           post_update=post_update)
+    if backend == "interpret":
+        return linear_scan(r, k, v, log_w, u, state0, chunk=chunk,
+                           post_update=post_update, interpret=True)
+    return linear_scan_ref(r, k, v, log_w, u=u, state0=state0, chunk=chunk,
+                           post_update=post_update)

@@ -1,0 +1,8 @@
+"""Oracle: the model-layer chunked implementation (models/ssm.py)."""
+from repro.models.ssm import chunked_linear_attn
+
+
+def linear_scan_ref(r, k, v, log_w, u=None, state0=None, *, chunk=64,
+                    post_update=False):
+    return chunked_linear_attn(r, k, v, log_w, u=u, state0=state0,
+                               chunk=chunk, post_update=post_update)

@@ -1,0 +1,7 @@
+from .maestro_eval import FEATURES, closed_form_features, maestro_eval
+from .ops import dse_eval
+from .ref import maestro_eval_ref
+from .tables import EvalTables, build_tables
+
+__all__ = ["FEATURES", "closed_form_features", "maestro_eval", "dse_eval",
+           "maestro_eval_ref", "EvalTables", "build_tables"]

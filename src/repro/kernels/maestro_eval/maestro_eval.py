@@ -1,0 +1,135 @@
+"""MAESTRO DSE inner loop as a Pallas TPU kernel.
+
+Each design point is 2 scalars (num_pes, noc_bw) and ~40 FLOPs of integer/
+fp closed-form evaluation over the static tables of ``tables.py`` — pure
+VPU work with perfect data parallelism.  Tiling: 1-D blocks of BLK designs
+in VMEM, features written as a (BLK, F) tile.  The arithmetic intensity is
+~(40 FLOPs / 8 input bytes) ≈ 5 — comfortably compute-bound on the VPU,
+which is what makes the 480M-design sweep of the paper a seconds-scale job
+on one TPU core (EXPERIMENTS.md §Perf-A).
+
+``closed_form_features`` is shared verbatim by the kernel body and the
+pure-jnp oracle (ref.py); the kernel is just its VMEM-tiled wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tables import EvalTables
+
+FEATURES = ("runtime", "macs", "throughput", "util", "bw_req")
+BLK = 1024
+
+
+def _cdiv(a, b):
+    return jnp.floor_divide(a + b - 1, b)
+
+
+def _comm(v, bw, lat):
+    d = jnp.floor_divide(v + bw - 1.0, bw) + lat
+    return jnp.where(v > 0, d, 0.0)
+
+
+def closed_form_features(pes, bw, T: EvalTables):
+    """pes int32[N], bw f32[N] -> f32[N, 5].  Exactly the faithful engine's
+    single-level analysis (model.py) in closed form."""
+    n = pes.astype(jnp.int32)
+    f32 = jnp.float32
+    o, s, D = T.sp_o, T.sp_s, T.sp_D
+    adv = n * o
+    span = s + (n - 1) * o
+    n_folds = 1 + _cdiv(jnp.maximum(D - span, 0), adv)
+    rem = jnp.minimum(D - (n_folds - 1) * adv, span)
+    used = jnp.minimum(n, _cdiv(rem, o))
+    full = jnp.minimum(used, jnp.maximum((rem - s) // o + 1, 0))
+    partial_cnt = used - full
+    last_partial = jnp.clip(rem - full * o, 0, s)
+    partial = jnp.where(partial_cnt > 0, last_partial, 0)
+    is_steady = (full == n).astype(jnp.int32)
+    steady_folds = n_folds - 1 + is_steady
+    edge_folds = 1 - is_steady
+    folds = n_folds
+
+    steps_total = (T.temporal_steps * folds).astype(f32)
+    span_e = jnp.minimum(span, D)
+    ext_span = T.ext_of(span_e).astype(f32)
+    ext_partial = T.ext_of(partial).astype(f32)
+
+    delta = T.delta_a + T.delta_b * span_e.astype(f32)
+    ing_full = T.ing_full_a + T.ing_full_b * span_e.astype(f32)
+    egress = T.egress_a + T.egress_b * ext_span
+    if T.o_coupled_spatial:
+        egress = egress * folds.astype(f32)
+    step_eg = _cdiv(egress, jnp.maximum(steps_total, 1.0))
+
+    lat = T.noc_latency
+    ing_sd = _comm(delta, bw, lat)
+    egr_sd = _comm(step_eg, bw, lat)
+    fwd = jnp.ceil(jnp.log2(jnp.maximum(n, 1).astype(f32))) \
+        if T.spatial_reduces else jnp.zeros_like(bw)
+
+    runtime = jnp.zeros_like(bw)
+    macs = jnp.zeros_like(bw)
+    active_steps = jnp.zeros_like(bw)
+    comp_first = None
+    nf = n.astype(f32)
+    fullf = full.astype(f32)
+    sfolds = steady_folds.astype(f32)
+    efolds = edge_folds.astype(f32)
+    for row in T.cases:
+        comp = f32(row.psums_full)
+        if comp_first is None:
+            comp_first = jnp.full_like(bw, comp)
+        delay = jnp.maximum(jnp.maximum(comp + fwd, ing_sd), egr_sd)
+        runtime = runtime + row.occ * folds.astype(f32) * delay
+        ps_partial = row.psums_per_ext * ext_partial
+        macs = macs + row.occ * (
+            sfolds * nf * row.psums_full
+            + efolds * (fullf * row.psums_full + ps_partial))
+        has_p = (partial > 0).astype(f32)
+        active_steps = active_steps + row.occ * (
+            sfolds * nf + efolds * (fullf + has_p))
+
+    serial = _comm(ing_full, bw, lat) + comp_first + fwd + egr_sd
+    overlapped = jnp.maximum(jnp.maximum(comp_first + fwd, ing_sd), egr_sd)
+    runtime = jnp.maximum(runtime + serial - overlapped, 1.0)
+
+    total_steps_pe = steps_total * nf
+    util = active_steps / jnp.maximum(total_steps_pe, 1.0)
+    thr = macs / runtime
+    bw_req = (delta + step_eg) / jnp.maximum(comp_first, 1.0)
+    return jnp.stack([runtime, macs, thr, util, bw_req], axis=-1)
+
+
+def _eval_kernel(pes_ref, bw_ref, out_ref, *, tables: EvalTables):
+    pes = pes_ref[...]
+    bw = bw_ref[...]
+    out_ref[...] = closed_form_features(pes, bw, tables)
+
+
+@functools.partial(jax.jit, static_argnames=("tables", "interpret"))
+def maestro_eval(pes, bw, *, tables: EvalTables, interpret: bool = False):
+    """pes: int32[N], bw: f32[N] (N multiple of BLK or padded) ->
+    features f32[N, 5]."""
+    N = pes.shape[0]
+    pad = (-N) % BLK
+    if pad:
+        pes = jnp.pad(pes, (0, pad), constant_values=1)
+        bw = jnp.pad(bw, (0, pad), constant_values=1.0)
+    Np = pes.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_eval_kernel, tables=tables),
+        grid=(Np // BLK,),
+        in_specs=[
+            pl.BlockSpec((BLK,), lambda i: (i,)),
+            pl.BlockSpec((BLK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLK, len(FEATURES)), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, len(FEATURES)), jnp.float32),
+        interpret=interpret,
+    )(pes.astype(jnp.int32), bw.astype(jnp.float32))
+    return out[:N]

@@ -1,0 +1,21 @@
+"""Dispatching wrapper for the DSE-evaluation kernel."""
+from __future__ import annotations
+
+import jax
+
+from .maestro_eval import FEATURES, maestro_eval
+from .ref import maestro_eval_ref
+from .tables import build_tables
+
+
+def dse_eval(pes, bw, *, op=None, dataflow=None, tables=None,
+             backend: str = "auto"):
+    if tables is None:
+        tables = build_tables(op, dataflow)
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "pallas":
+        return maestro_eval(pes, bw, tables=tables)
+    if backend == "interpret":
+        return maestro_eval(pes, bw, tables=tables, interpret=True)
+    return maestro_eval_ref(pes, bw, tables=tables)

@@ -1,0 +1,12 @@
+"""Oracle: the shared closed form evaluated as plain jnp (no Pallas)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .maestro_eval import closed_form_features
+from .tables import EvalTables, build_tables
+
+
+def maestro_eval_ref(pes, bw, *, tables: EvalTables):
+    return closed_form_features(jnp.asarray(pes, jnp.int32),
+                                jnp.asarray(bw, jnp.float32), tables)

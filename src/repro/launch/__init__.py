@@ -1,0 +1,5 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and
+# must only be imported by the dry-run entry point itself.
+from .mesh import make_host_mesh, make_production_mesh, mesh_name
+
+__all__ = ["make_host_mesh", "make_production_mesh", "mesh_name"]

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (data, model) single-pod; 2×16×16 (pod, data, model) for the
+    two-pod run.  Uses the first prod(shape) available devices so the same
+    512-device host platform serves both."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_host_mesh():
+    """Whatever this host actually has (smoke tests: 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

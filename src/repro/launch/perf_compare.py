@@ -1,0 +1,70 @@
+"""§Perf-B helper: compare dry-run variants of a cell.
+
+    PYTHONPATH=src python -m repro.launch.perf_compare \
+        --arch dbrx-132b --shape decode_32k --tags base tp
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from ..core.roofline import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "dryrun")
+
+
+def load(arch: str, shape: str, mesh: str, tag: str) -> dict | None:
+    p = os.path.join(DRY, f"{arch}__{shape}__{mesh}__{tag}.json")
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def terms(r: dict) -> dict:
+    c = r.get("flops", 0.0) / V5E_PEAK_FLOPS
+    m = r.get("bytes_accessed", 0.0) / V5E_HBM_BW
+    m2 = r.get("bytes_hbm_est", 0.0) / V5E_HBM_BW
+    x = r.get("collective_bytes", 0.0) / V5E_ICI_BW
+    step = max(c, m, x)
+    step2 = max(c, m2, x)
+    return {"compute_s": c, "memory_s": m, "memory_buf_s": m2,
+            "collective_s": x, "step_s": step, "step_buf_s": step2,
+            "temp_gb": r.get("temp_size_bytes", 0) / 1e9,
+            "fits": r.get("fits_16gb"),
+            "mfu": (r.get("model_flops", 0)
+                    / max(step2 * r["chips"] * V5E_PEAK_FLOPS, 1e-12))}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tags", nargs="+", default=["base"])
+    args = ap.parse_args(argv)
+    hdr = (f"{'tag':12s} {'compute_s':>10s} {'mem(cost)':>10s} "
+           f"{'mem(buf)':>10s} {'coll_s':>10s} {'step(buf)':>10s} "
+           f"{'tempGB':>7s} {'fits':>5s} {'MFU':>6s}")
+    print(f"{args.arch} {args.shape} {args.mesh}")
+    print(hdr)
+    base = None
+    for tag in args.tags:
+        r = load(args.arch, args.shape, args.mesh, tag)
+        if r is None or r.get("status") != "ok":
+            print(f"{tag:12s}  -- missing/not-ok --")
+            continue
+        t = terms(r)
+        if base is None:
+            base = t
+        speedup = base["step_buf_s"] / max(t["step_buf_s"], 1e-12)
+        print(f"{tag:12s} {t['compute_s']:10.3e} {t['memory_s']:10.3e} "
+              f"{t['memory_buf_s']:10.3e} {t['collective_s']:10.3e} "
+              f"{t['step_buf_s']:10.3e} {t['temp_gb']:7.1f} "
+              f"{str(t['fits']):>5s} {t['mfu']:6.3f}"
+              + (f"   (x{speedup:.2f} vs base)" if tag != args.tags[0]
+                 else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

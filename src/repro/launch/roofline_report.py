@@ -1,0 +1,89 @@
+"""Roofline report (deliverable g): read dry-run records, derive the
+three terms, pick hillclimb candidates, emit the EXPERIMENTS.md table.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from ..core.roofline import RooflineTerms, format_table
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "experiments", "dryrun")
+
+
+def load_records(mesh: str = "16x16", tag: str = "base") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh and r.get("tag", "base") == tag:
+            out.append(r)
+    return out
+
+
+def to_terms(r: dict) -> RooflineTerms:
+    return RooflineTerms(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"], chips=r["chips"],
+        hlo_flops=r.get("flops", 0.0),
+        hlo_bytes=r.get("bytes_accessed", 0.0),
+        collective_bytes=r.get("collective_bytes", 0.0),
+        model_flops=r.get("model_flops", 0.0),
+        tokens=r.get("tokens", 0))
+
+
+def rows_for(mesh: str, tag: str = "base"):
+    rows, skips, errors = [], [], []
+    for r in load_records(mesh, tag):
+        if r["status"] == "ok":
+            rows.append(to_terms(r))
+        elif r["status"] == "skipped":
+            skips.append((r["arch"], r["shape"], r.get("reason", "")))
+        else:
+            errors.append((r["arch"], r["shape"],
+                           r.get("error", "")[:120]))
+    return rows, skips, errors
+
+
+def pick_hillclimb(rows: list[RooflineTerms]) -> dict[str, RooflineTerms]:
+    """Worst roofline fraction (train cells), most collective-bound, and
+    the most paper-representative (the biggest DSE-relevant GEMM stack =
+    largest-model train cell)."""
+    train = [r for r in rows if r.shape == "train_4k"]
+    worst_mfu = min(train, key=lambda r: r.mfu) if train else None
+    coll = max(rows, key=lambda r: (r.collective_s /
+                                    max(r.step_s, 1e-12)))
+    rep = max(train, key=lambda r: r.model_flops) if train else None
+    return {"worst_mfu": worst_mfu, "most_collective": coll,
+            "representative": rep}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="base")
+    args = ap.parse_args(argv)
+    rows, skips, errors = rows_for(args.mesh, args.tag)
+    rows.sort(key=lambda r: (r.arch, r.shape))
+    print(format_table(rows))
+    print(f"\nskipped cells ({len(skips)}):")
+    for a, s, why in skips:
+        print(f"  {a:24s} {s:12s} {why}")
+    if errors:
+        print(f"\nERROR cells ({len(errors)}):")
+        for a, s, e in errors:
+            print(f"  {a:24s} {s:12s} {e}")
+    hc = pick_hillclimb(rows)
+    print("\nhillclimb candidates:")
+    for k, r in hc.items():
+        if r:
+            print(f"  {k:16s} {r.arch} {r.shape} "
+                  f"(bottleneck={r.bottleneck}, MFU={r.mfu:.3f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

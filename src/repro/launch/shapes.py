@@ -1,0 +1,261 @@
+"""The assigned input-shape cells and their abstract input specs.
+
+Every (arch × shape) cell resolves to:
+  * a step function (train_step / prefill / serve_step),
+  * ShapeDtypeStruct arguments (zero allocation),
+  * in/out shardings derived from the logical-axis rules.
+
+``long_500k`` lowers ``serve_step`` (one token against a 512k-token
+context) and only exists for sub-quadratic archs (ssm / hybrid) — the
+skip list is part of the roofline table.  ``decode_*`` KV caches shard
+KV-heads over 'model' when divisible, otherwise the cache *sequence* axis
+takes 'model' (GQA kv < TP width — e.g. qwen2's kv=8 on a 16-way model
+axis); long-context additionally shards sequence over 'data'.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import (DEFAULT_RULES, replicated, resolve_spec,
+                                    shardings_for_params, tree_shardings)
+from ..models import registry
+from ..models.param import abstract_params
+from ..training.train_step import (TrainConfig, abstract_train_state,
+                                   make_train_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    global_batch: int
+    needs_subquadratic: bool = False
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1,
+                           needs_subquadratic=True),
+}
+
+
+def cell_runs(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape.needs_subquadratic and not cfg.subquadratic:
+        return False, ("full-attention arch: long_500k requires "
+                       "sub-quadratic context (DESIGN.md §Arch skips)")
+    return True, ""
+
+
+# ----------------------------------------------------------------------
+# Batch specs
+# ----------------------------------------------------------------------
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeCell):
+    B = shape.global_batch
+    tok = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": tok((B, shape.seq), jnp.int32),
+                 "labels": tok((B, shape.seq), jnp.int32)}
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    elif shape.kind == "prefill":
+        specs = {"tokens": tok((B, shape.seq), jnp.int32)}
+        axes = {"tokens": ("batch", "seq")}
+    else:
+        specs = {"tokens": tok((B, 1), jnp.int32)}
+        axes = {"tokens": ("batch", None)}
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        specs["frontend"] = tok((B, cfg.frontend_len, cfg.frontend_dim),
+                                jnp.float32)
+        axes["frontend"] = ("batch", None, None)
+    if cfg.is_encdec and shape.kind != "decode":
+        specs["frontend"] = tok((B, shape.seq, cfg.frontend_dim),
+                                jnp.float32)
+        axes["frontend"] = ("batch", "seq", None)
+    return specs, axes
+
+
+# ----------------------------------------------------------------------
+# Cache specs (abstract) + axes
+# ----------------------------------------------------------------------
+
+def _seq_rule(cfg: ModelConfig, mesh: Mesh, long: bool):
+    """Decide KV-cache sharding: kv-heads on 'model' when divisible, else
+    the sequence axis takes 'model'; long-context adds 'data' on seq."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    kv_on_model = cfg.n_kv_heads % model == 0 and cfg.n_kv_heads >= model
+    seq_axes: tuple[str, ...] = ()
+    if not kv_on_model:
+        seq_axes += ("model",)
+    if long:
+        seq_axes = ("data",) + seq_axes
+    rules = dict(DEFAULT_RULES)
+    rules["kv_seq"] = seq_axes
+    if not kv_on_model:
+        rules["kv_heads"] = ()
+    return rules
+
+
+def _max_len(cfg: ModelConfig, shape: ShapeCell) -> int:
+    """KV capacity: the sequence plus any frontend prefix (VLM patches)."""
+    extra = cfg.frontend_len if cfg.frontend == "vision" else 0
+    return shape.seq + extra
+
+
+def _abstract_cache(cfg: ModelConfig, shape: ShapeCell):
+    B = shape.global_batch
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    if cfg.is_encdec:
+        def build():
+            from ..models import encdec
+            # self cache + cross kv for a seq-length encoder context
+            from ..models.layers import make_kv_cache
+            self_c = make_kv_cache(cfg, B, _max_len(cfg, shape),
+                                   n_layers=cfg.n_dec_layers,
+                                   dtype=cfg.dtype)
+            hd = cfg.head_dim_
+            ck = jnp.zeros((cfg.n_dec_layers, B, shape.seq,
+                            cfg.n_kv_heads, hd), cfg.dtype)
+            return {"self": self_c, "cross": (ck, ck)}
+        return jax.eval_shape(build)
+
+    def build():
+        from ..models.transformer import empty_cache
+        return empty_cache(None, batch, cfg, train=False,
+                           max_len=_max_len(cfg, shape))
+    return jax.eval_shape(build)
+
+
+def _cache_axes(cfg: ModelConfig, shape: ShapeCell):
+    kv = ("layers", "batch", "kv_seq", "kv_heads", "qkv")
+    dense_axes = {"k": kv, "v": kv, "length": ("layers",)}
+    if cfg.is_encdec:
+        cross = ("layers", "batch", "kv_seq", "kv_heads", "qkv")
+        return {"self": dense_axes, "cross": (cross, cross)}
+    if cfg.family in ("dense", "moe"):
+        return dense_axes
+    if cfg.family == "ssm":
+        st = ("layers", "batch", "heads", None, None)
+        carry = ("layers", "batch", None, None)
+        return ((st, carry, carry), ())
+    # hybrid
+    st = ("layers", "batch", "heads_flat", None, None)
+    conv = ("layers", "batch", None, "mlp")
+    return ((st, conv), dense_axes)
+
+
+# ----------------------------------------------------------------------
+# Lowerable cell: fn + abstract args + shardings
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweredSpec:
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    donate: tuple[int, ...]
+    tokens: int
+    kind: str
+
+
+def decode_tp_rules() -> dict:
+    """Weight-stationary decode sharding (beyond-paper, §Perf-B): weights
+    shard over BOTH mesh axes on their output-feature dims — MAESTRO's
+    K-partitioned row, which Table 1 predicts needs only *activation*
+    multicast — so no per-step weight all-gathers.  The FSDP 'embed' axis
+    is dropped: contraction dims stay unsharded."""
+    rules = dict(DEFAULT_RULES)
+    rules.update({
+        "embed": (),
+        "mlp": ("data", "model"),
+        "vocab": ("data", "model"),
+        "heads": ("model",),
+        "heads_flat": ("data", "model"),
+        "experts": ("model",),
+        "embed_out": ("data", "model"),
+    })
+    return rules
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh,
+               train_cfg: TrainConfig | None = None,
+               param_rules: dict | None = None) -> LoweredSpec:
+    from ..distributed.autosharding import wrap_with_context
+    tc = train_cfg or TrainConfig()
+    specs = registry.specs(cfg)
+    params = abstract_params(specs)
+    p_shard = shardings_for_params(specs, mesh, param_rules)
+    batch_specs, batch_axes = _batch_specs(cfg, shape)
+    b_shard = tree_shardings(batch_specs, batch_axes, mesh)
+
+    if shape.kind == "train":
+        params_a, opt_a = abstract_train_state(cfg, tc)
+        o_shard = {
+            "mu": p_shard, "nu": p_shard,
+            "count": replicated(mesh),
+        }
+        if tc.compress_grads:
+            o_shard["error_feedback"] = p_shard
+        step = wrap_with_context(make_train_step(cfg, tc), mesh)
+        return LoweredSpec(
+            fn=step, args=(params_a, opt_a, batch_specs),
+            in_shardings=(p_shard, o_shard, b_shard),
+            donate=(0, 1),
+            tokens=shape.global_batch * shape.seq, kind="train")
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return registry.prefill(params, batch, cfg,
+                                    _max_len(cfg, shape))
+        return LoweredSpec(
+            fn=wrap_with_context(fn, mesh), args=(params, batch_specs),
+            in_shardings=(p_shard, b_shard), donate=(),
+            tokens=shape.global_batch * shape.seq, kind="prefill")
+
+    # decode
+    long = shape.name == "long_500k"
+    rules = _seq_rule(cfg, mesh, long)
+    if param_rules:
+        rules.update({k: v for k, v in param_rules.items()
+                      if k not in ("kv_seq", "kv_heads")})
+    cache_specs = _abstract_cache(cfg, shape)
+    cache_shard = tree_shardings(cache_specs, _cache_axes(cfg, shape),
+                                 mesh, rules)
+
+    def fn(params, batch, cache):
+        return registry.decode_step(params, batch, cache, cfg)
+
+    return LoweredSpec(
+        fn=wrap_with_context(fn, mesh, rules),
+        args=(params, batch_specs, cache_specs),
+        in_shardings=(p_shard, b_shard, cache_shard), donate=(2,),
+        tokens=shape.global_batch, kind="decode")
+
+
+def input_specs(arch: str, shape_name: str = "train_4k"):
+    """Public API (per the dry-run spec): ShapeDtypeStruct stand-ins for
+    every model input of an (arch × shape) cell — weak-type-correct,
+    shardable, no device allocation.
+
+    For training that's {tokens, labels} (+frontend embeddings for
+    vlm/audio); for decode it also includes the KV-cache/recurrent-state
+    tree."""
+    from ..configs import get_config
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs, _ = _batch_specs(cfg, shape)
+    if shape.kind == "decode":
+        specs = dict(specs)
+        specs["cache"] = _abstract_cache(cfg, shape)
+    return specs

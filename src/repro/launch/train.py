@@ -1,0 +1,94 @@
+"""Training launcher: real steps on the host mesh (CPU smoke / small runs)
+or lower-only against the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b \
+        --steps 20 --batch 8 --seq 128 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import REGISTRY, get_config
+from ..checkpoint import Checkpointer
+from ..data import batch_for_step
+from ..ft import FaultTolerantLoop, FTConfig
+from ..models import registry
+from ..models.param import init_params
+from ..optim import adamw
+from ..training import TrainConfig, make_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(REGISTRY), default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tc = TrainConfig(
+        microbatches=args.microbatches,
+        compress_grads=args.compress_grads,
+        opt=adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                              total_steps=args.steps))
+    params = init_params(registry.specs(cfg), jax.random.PRNGKey(0))
+    opt_state = adamw.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, tc), donate_argnums=(0, 1))
+
+    ckpt = Checkpointer(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and ckpt.latest_step() is not None:
+        (params, opt_state), manifest = ckpt.restore((params, opt_state))
+        start = manifest["step"]
+        print(f"resumed from step {start}")
+
+    def batch_fn(step):
+        b = batch_for_step(step, global_batch=args.batch, seq=args.seq,
+                           vocab=cfg.vocab)
+        if cfg.frontend == "vision":
+            b["frontend"] = np.zeros(
+                (args.batch, cfg.frontend_len, cfg.frontend_dim),
+                np.float32)
+        if cfg.is_encdec:
+            b["frontend"] = np.random.default_rng(step).normal(
+                size=(args.batch, args.seq, cfg.frontend_dim)
+            ).astype(np.float32)
+        return b
+
+    def wrapped(state, batch):
+        p, o = state
+        p, o, m = step_fn(p, o, batch)
+        return (p, o), m
+
+    loop = FaultTolerantLoop(
+        wrapped, ckpt, FTConfig(checkpoint_every=args.ckpt_every))
+    t0 = time.time()
+    (params, opt_state), step = loop.run((params, opt_state), batch_fn,
+                                         start, args.steps)
+    dt = time.time() - t0
+    # final report
+    b = batch_fn(step)
+    loss = registry.loss_fn(params, {k: jax.numpy.asarray(v)
+                                     for k, v in b.items()}, cfg)
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps / dt:.2f} it/s), final loss {float(loss):.4f}, "
+          f"stragglers={loop.straggler_steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

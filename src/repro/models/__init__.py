@@ -1,0 +1,6 @@
+from . import registry
+from .param import (ParamSpec, abstract_params, axes_tree, count_params,
+                    init_params)
+
+__all__ = ["registry", "ParamSpec", "abstract_params", "axes_tree",
+           "count_params", "init_params"]

@@ -1,0 +1,141 @@
+"""Encoder-decoder family (SeamlessM4T-medium backbone).
+
+The speech frontend is a stub per the assignment: ``batch['frontend']``
+carries precomputed frame embeddings (B, S_enc, frontend_dim), projected
+into d_model.  Encoder = bidirectional self-attention stack; decoder =
+causal self-attention + cross-attention.  Cross K/V are computed once at
+prefill and cached — decode touches the encoder output only through them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (apply_mlp, apply_norm, attention, attention_specs,
+                     cross_entropy, embed_specs, embed_tokens, lm_logits,
+                     make_kv_cache, mlp_specs, norm_specs)
+from .param import ParamSpec, SpecTree
+from .transformer import _maybe_remat, frontend_specs
+
+
+def encdec_specs(cfg: ModelConfig) -> SpecTree:
+    Le, Ld = cfg.n_layers, cfg.n_dec_layers
+    return {
+        "embed": embed_specs(cfg),
+        "frontend": frontend_specs(cfg),
+        "enc_blocks": {
+            "attn_norm": norm_specs(cfg, Le),
+            "attn": attention_specs(cfg, Le),
+            "mlp_norm": norm_specs(cfg, Le),
+            "mlp": mlp_specs(cfg, Le),
+        },
+        "dec_blocks": {
+            "self_norm": norm_specs(cfg, Ld),
+            "self_attn": attention_specs(cfg, Ld),
+            "cross_norm": norm_specs(cfg, Ld),
+            "cross_attn": attention_specs(cfg, Ld),
+            "mlp_norm": norm_specs(cfg, Ld),
+            "mlp": mlp_specs(cfg, Ld),
+        },
+        "enc_final_norm": norm_specs(cfg),
+        "final_norm": norm_specs(cfg),
+    }
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    x = frames.astype(cfg.dtype) @ params["frontend"]["proj"]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, pl):
+        h = apply_norm(pl["attn_norm"], x, cfg)
+        a, _ = attention(pl["attn"], h, cfg, positions=positions,
+                         causal=False)
+        x = x + a
+        h = apply_norm(pl["mlp_norm"], x, cfg)
+        return x + apply_mlp(pl["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_blocks"],
+                        unroll=cfg.scan_unroll)
+    return apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def _cross_kv(pl, enc_out, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, pl["cross_attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, pl["cross_attn"]["wv"])
+    if cfg.qkv_bias:
+        k = k + pl["cross_attn"]["bk"]
+        v = v + pl["cross_attn"]["bv"]
+    return k, v
+
+
+def _cross_apply(pl, x, ck, cv, cfg: ModelConfig):
+    from .layers import _gqa_decode, _gqa_scores_full
+    q = jnp.einsum("bsd,dhk->bshk", x, pl["cross_attn"]["wq"])
+    if cfg.qkv_bias:
+        q = q + pl["cross_attn"]["bq"]
+    out = _gqa_scores_full(q, ck, cv, causal=False, q_offset=0,
+                           chunk=cfg.chunk_size)
+    return jnp.einsum("bshk,hkd->bsd", out, pl["cross_attn"]["wo"])
+
+
+def _decoder(params, tokens, enc_out, cfg: ModelConfig, cache=None,
+             decode=False, cross_kv=None):
+    B, S = tokens.shape
+    if decode:
+        length = cache["length"][0]
+        positions = jnp.broadcast_to(length, (B, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = embed_tokens(params["embed"], tokens, cfg, positions)
+
+    if cross_kv is None:
+        def kv_body(_, pl):
+            return None, _cross_kv(pl, enc_out, cfg)
+        _, cross_kv = jax.lax.scan(kv_body, None, params["dec_blocks"],
+                                   unroll=cfg.scan_unroll)
+
+    def body(x, xs):
+        pl, cache_l, ck, cv = xs
+        h = apply_norm(pl["self_norm"], x, cfg)
+        a, new_cache = attention(pl["self_attn"], h, cfg,
+                                 positions=positions, cache=cache_l,
+                                 decode=decode)
+        x = x + a
+        h = apply_norm(pl["cross_norm"], x, cfg)
+        x = x + _cross_apply(pl, h, ck, cv, cfg)
+        h = apply_norm(pl["mlp_norm"], x, cfg)
+        return x + apply_mlp(pl["mlp"], h, cfg), new_cache
+
+    body_fn = _maybe_remat(body, cfg) if not decode else body
+    x, new_cache = jax.lax.scan(body_fn, x,
+                                (params["dec_blocks"], cache, *cross_kv),
+                                unroll=cfg.scan_unroll)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return lm_logits(params["embed"], x, cfg), new_cache, cross_kv
+
+
+# ---- entry points ----------------------------------------------------
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    enc_out = _encode(params, batch["frontend"], cfg)
+    logits, _, _ = _decoder(params, batch["tokens"], enc_out, cfg)
+    return cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    enc_out = _encode(params, batch["frontend"], cfg)
+    B = batch["tokens"].shape[0]
+    cache = make_kv_cache(cfg, B, max_len, n_layers=cfg.n_dec_layers,
+                          dtype=cfg.dtype)
+    logits, cache, cross_kv = _decoder(params, batch["tokens"], enc_out,
+                                       cfg, cache=cache)
+    return logits[:, -1:], {"self": cache, "cross": cross_kv}
+
+
+def decode_step(params, batch, cache, cfg: ModelConfig):
+    logits, new_self, _ = _decoder(params, batch["tokens"], None, cfg,
+                                   cache=cache["self"], decode=True,
+                                   cross_kv=cache["cross"])
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,397 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (chunked online-
+softmax for train/prefill, cache-based for decode), MLPs.
+
+Everything is functional: ``f(params, x, cfg, ...) -> y``.  Code is written
+in the global view — under ``jit`` with sharded inputs the SPMD partitioner
+turns the einsums into the tensor/data-parallel collectives the MAESTRO
+mapper predicts (see ``core/mapper.py``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .param import ParamSpec
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig, stacked: int | None = None) -> dict:
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    if cfg.norm == "ln_nonparam":
+        return {}
+    out = {"scale": ParamSpec(lead + (cfg.d_model,), lax_ + ("embed",),
+                              init="ones")}
+    if cfg.norm == "ln":
+        out["bias"] = ParamSpec(lead + (cfg.d_model,), lax_ + ("embed",),
+                                init="zeros")
+    return out
+
+
+def apply_norm(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    if cfg.norm == "ln":
+        y = y * params["scale"].astype(jnp.float32) \
+            + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig, stacked: int | None = None,
+                    d_kv_src: int | None = None) -> dict:
+    """QKV/out projection specs.  ``d_kv_src`` overrides the K/V source
+    width (cross-attention)."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    dkv = d_kv_src or d
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    # explicit fan-in scales: the (d, H, hd) layout defeats the last-but-
+    # one-dim heuristic (it would read H as the fan-in)
+    out = {
+        "wq": ParamSpec(lead + (d, cfg.n_heads, hd),
+                        lax_ + ("embed", "heads", "qkv"),
+                        scale=d ** -0.5),
+        "wk": ParamSpec(lead + (dkv, cfg.n_kv_heads, hd),
+                        lax_ + ("embed", "kv_heads", "qkv"),
+                        scale=dkv ** -0.5),
+        "wv": ParamSpec(lead + (dkv, cfg.n_kv_heads, hd),
+                        lax_ + ("embed", "kv_heads", "qkv"),
+                        scale=dkv ** -0.5),
+        "wo": ParamSpec(lead + (cfg.n_heads, hd, d),
+                        lax_ + ("heads", "qkv", "embed"),
+                        scale=(cfg.n_heads * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamSpec(lead + (cfg.n_heads, hd),
+                              lax_ + ("heads", "qkv"), init="zeros")
+        out["bk"] = ParamSpec(lead + (cfg.n_kv_heads, hd),
+                              lax_ + ("kv_heads", "qkv"), init="zeros")
+        out["bv"] = ParamSpec(lead + (cfg.n_kv_heads, hd),
+                              lax_ + ("kv_heads", "qkv"), init="zeros")
+    return out
+
+
+def _project_qkv(params, xq, xkv, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+import os as _os
+
+
+def _kernel_backend() -> str | None:
+    """'pallas' on TPU, 'interpret' when forced (tests), else None."""
+    if _os.environ.get("REPRO_USE_PALLAS") == "interpret":
+        return "interpret"
+    if jax.default_backend() == "tpu":
+        return "pallas"
+    return None
+
+
+def _gqa_scores_full(q, k, v, causal: bool, q_offset, chunk: int,
+                     unroll: bool = False):
+    """Chunked online-softmax attention (flash-style, pure jnp).
+
+    q: (B, Sq, Hq, D), k/v: (B, Sk, Hkv, D).  Scans over query blocks so
+    peak memory is O(Sq_block × Sk) instead of O(Sq × Sk).  This is also
+    the reference oracle for the Pallas flash kernel.
+
+    K/V are repeated up to Hq heads (GQA): keeping every tensor on the
+    full head dim lets the SPMD partitioner shard heads over 'model' even
+    when Hkv < model-axis width — a (Hkv, group) reshape would force score
+    replication."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    from ..distributed.autosharding import constrain
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    # largest block count <= Sq/chunk that divides Sq (frontends can make
+    # Sq a non-multiple of the chunk, e.g. 576 patches + 4096 tokens)
+    nblk = max(1, Sq // chunk)
+    while Sq % nblk:
+        nblk -= 1
+    blk = Sq // nblk
+    qb = q.reshape(B, nblk, blk, Hq, D)
+    kT = k.astype(jnp.float32)
+    vT = v.astype(jnp.float32)
+    kv_pos = jnp.arange(Sk)
+
+    def body(_, qi):
+        qblk, idx = qi
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk.astype(jnp.float32),
+                       kT) * scale
+        if causal:
+            qpos = q_offset + idx * blk + jnp.arange(blk)
+            mask = kv_pos[None, :] <= qpos[:, None]          # (blk, Sk)
+            s = jnp.where(mask[None, None], s, -1e30)
+        m = jnp.max(s, -1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, -1, keepdims=True)
+        o = jnp.einsum("bhqk,bkhd->bhqd", p / jnp.maximum(l, 1e-30), vT)
+        return None, o
+
+    qb_t = jnp.moveaxis(qb, 1, 0)                            # (nblk, B, ...)
+    _, outs = jax.lax.scan(body, None, (qb_t, jnp.arange(nblk)),
+                           unroll=unroll)
+    out = jnp.moveaxis(outs, 0, 1)                           # (B,nblk,h,blk,d)
+    out = jnp.transpose(out, (0, 1, 3, 2, 4)).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+def _gqa_decode(q, k_cache, v_cache, length):
+    """One-step decode: q (B, 1, Hq, D) vs cache (B, Smax, Hkv, D); only
+    the first ``length`` cache entries are valid.  K/V repeated to Hq
+    heads (see _gqa_scores_full).
+
+    The cache stays in its storage dtype with fp32 *accumulation*
+    (preferred_element_type) — an explicit .astype(f32) would materialize
+    (and, with a sequence-sharded cache, all-gather) a 2× copy; §Perf-B
+    measured 4.3 GB/layer of exactly that."""
+    B, _, Hq, D = q.shape
+    _, Sk, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    if g > 1:
+        k_cache = jnp.repeat(k_cache, g, axis=2)
+        v_cache = jnp.repeat(v_cache, g, axis=2)
+    qb = q.reshape(B, Hq, D).astype(k_cache.dtype)
+    s = jnp.einsum("bhd,bkhd->bhk", qb, k_cache,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    mask = jnp.arange(Sk)[None, None, :] < length
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # p stays f32: the v upcast is a local elementwise convert (cheap and
+    # sharding-preserving), unlike the cache-wide f32 copy removed above
+    o = jnp.einsum("bhk,bkhd->bhd", p, v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def attention(params: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+              positions: jnp.ndarray, causal: bool = True,
+              xkv: jnp.ndarray | None = None,
+              cache: dict | None = None,
+              decode: bool = False) -> tuple[jnp.ndarray, dict | None]:
+    """Returns (output, new_cache).  Modes:
+
+    * train/prefill (``decode=False``): full-sequence chunked attention;
+      if ``cache`` is given it is filled (prefill).
+    * decode: ``x`` is (B, 1, D); reads/updates ``cache`` at
+      ``cache['length']``.
+    * cross-attention: pass ``xkv`` (encoder output) and ``causal=False``.
+    """
+    src = xkv if xkv is not None else x
+    q, k, v = _project_qkv(params, x, src, cfg)
+    if cfg.pos == "rope" and xkv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    kb = _kernel_backend()
+    if kb and not decode and cache is None and \
+            q.shape[1] % 128 == 0 and k.shape[1] % 128 == 0:
+        # Pallas flash-attention kernel on TPU (interpret-forced in tests)
+        from ..kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=causal and xkv is None,
+                              interpret=(kb == "interpret"))
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), None
+
+    new_cache = None
+    if decode:
+        assert cache is not None
+        from ..distributed.autosharding import constrain
+        length = cache["length"]
+        # one-hot select update instead of dynamic_update_slice: a DUS at
+        # a dynamic offset on a sequence-sharded dim forces SPMD to
+        # all-gather the whole cache (§Perf-B); the select partitions.
+        # The cache sharding is pinned on both sides of the select so the
+        # propagation reshards the (B,1,Hkv,D) *new* entry, not the cache.
+        kv_axes = ("batch", "kv_seq", "kv_heads", "qkv")
+        sel = (jnp.arange(cache["k"].shape[1]) == length)[None, :, None,
+                                                          None]
+        k_cache = jnp.where(sel, k.astype(cache["k"].dtype),
+                            constrain(cache["k"], kv_axes))
+        v_cache = jnp.where(sel, v.astype(cache["v"].dtype),
+                            constrain(cache["v"], kv_axes))
+        k_cache = constrain(k_cache, kv_axes)
+        v_cache = constrain(v_cache, kv_axes)
+        # Heads and cache-sequence both want the 'model' axis; the
+        # partitioner must gather one side.  Replicating the (B,1,Hq,D)
+        # query costs ~100 KB; gathering the cache costs GBs — force the
+        # cheap side (flash-decode: scores stay sequence-sharded, the
+        # softmax combine is a tiny all-reduce).
+        q = constrain(q, ("batch", None, None, None))
+        out = _gqa_decode(q, k_cache, v_cache, length + 1)
+        out = constrain(out, ("batch", None, None, None))
+        new_cache = {"k": k_cache, "v": v_cache, "length": length + 1}
+    else:
+        out = _gqa_scores_full(q, k, v, causal and xkv is None,
+                               q_offset=0, chunk=cfg.chunk_size,
+                               unroll=cfg.scan_unroll)
+        if cache is not None:
+            Smax = cache["k"].shape[1]
+            pad = [(0, 0), (0, Smax - k.shape[1]), (0, 0), (0, 0)]
+            new_cache = {
+                "k": jnp.pad(k.astype(cache["k"].dtype), pad),
+                "v": jnp.pad(v.astype(cache["v"].dtype), pad),
+                "length": jnp.asarray(k.shape[1], jnp.int32),
+            }
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int | None = None, dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    if n_layers is not None:
+        shape = (n_layers,) + shape
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": (jnp.zeros((n_layers,), jnp.int32)
+                   if n_layers is not None else jnp.asarray(0, jnp.int32)),
+    }
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                   n_layers: int | None = None, *, shard_seq: bool = False,
+                   dtype=jnp.bfloat16):
+    """Abstract cache + logical axes for the dry-run.  ``shard_seq`` puts
+    the sequence axis on the data mesh axis (long-context decode)."""
+    seq_ax = "kv_seq" if shard_seq else None
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    axes = ("batch", seq_ax, "kv_heads", "qkv")
+    if n_layers is not None:
+        shape = (n_layers,) + shape
+        axes = ("layers",) + axes
+    kv = jax.ShapeDtypeStruct(shape, dtype)
+    ln = jax.ShapeDtypeStruct((n_layers,) if n_layers is not None else (),
+                              jnp.int32)
+    specs = {"k": kv, "v": kv, "length": ln}
+    laxes = {"k": axes, "v": axes,
+             "length": ("layers",) if n_layers is not None else ()}
+    return specs, laxes
+
+
+# ----------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, stacked: int | None = None,
+              d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    out = {
+        "w_up": ParamSpec(lead + (d, f), lax_ + ("embed", "mlp")),
+        "w_down": ParamSpec(lead + (f, d), lax_ + ("mlp", "embed")),
+    }
+    if cfg.mlp_type == "swiglu":
+        out["w_gate"] = ParamSpec(lead + (d, f), lax_ + ("embed", "mlp"))
+    return out
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if cfg.mlp_type == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32))
+    return jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), params["w_down"])
+
+
+# ----------------------------------------------------------------------
+# Embeddings / head
+# ----------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab
+    out = {"tok": ParamSpec((v, cfg.d_model), ("vocab", "embed"),
+                            init="embed", scale=1.0)}
+    if cfg.pos == "learned":
+        out["pos"] = ParamSpec((cfg.max_learned_pos, cfg.d_model),
+                               (None, "embed"), init="embed", scale=0.02)
+    if not cfg.tie_embeddings:
+        out["head"] = ParamSpec((cfg.d_model, v), ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+                 positions: jnp.ndarray) -> jnp.ndarray:
+    from ..distributed.autosharding import constrain
+    x = params["tok"][tokens]
+    if cfg.pos == "learned":
+        x = x + params["pos"][positions % cfg.max_learned_pos]
+    return constrain(x.astype(cfg.dtype), ("batch", None, None))
+
+
+def lm_logits(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    from ..distributed.autosharding import constrain
+    x = constrain(x, ("batch", None, None))
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, params["tok"].astype(x.dtype))
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        out = jnp.where(pad_mask, out, -1e30)
+    return constrain(out, ("batch", None, "vocab"))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  z_loss: float = 1e-4) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return jnp.mean(loss)

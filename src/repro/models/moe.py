@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer: top-k routing with per-row capacity, scatter/
+gather dispatch (O(T·D) memory — no dense (T,E,C) one-hots), expert-parallel
+weight stacking.
+
+In MAESTRO terms this layer is a spatial map of the `E` dim across the
+`model` mesh axis (expert parallelism); the scatter/gather turn into
+all-to-all collectives under the SPMD partitioner — exactly the taxonomy's
+"spatial distribution of a coupled dim" case.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .param import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig, stacked: int | None = None) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    lead = (stacked,) if stacked else ()
+    lax_ = ("layers",) if stacked else ()
+    out = {
+        "router": ParamSpec(lead + (d, e), lax_ + ("embed", None),
+                            scale=d ** -0.5),
+        "w_up": ParamSpec(lead + (e, d, f), lax_ + ("experts", "embed", "mlp")),
+        "w_gate": ParamSpec(lead + (e, d, f), lax_ + ("experts", "embed", "mlp")),
+        "w_down": ParamSpec(lead + (e, f, d), lax_ + ("experts", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        out["shared_up"] = ParamSpec(lead + (d, fs), lax_ + ("embed", "mlp"))
+        out["shared_gate"] = ParamSpec(lead + (d, fs), lax_ + ("embed", "mlp"))
+        out["shared_down"] = ParamSpec(lead + (fs, d), lax_ + ("mlp", "embed"))
+    return out
+
+
+def _expert_ffn(params, xe, cfg: ModelConfig):
+    """xe: (B, E, C, D) -> (B, E, C, D), experts along axis 1."""
+    up = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    gate = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+    h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+    return jnp.einsum("becf,efd->becd", h.astype(xe.dtype),
+                      params["w_down"])
+
+
+def apply_moe(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B, S, D).  Per-row (per-batch-element) capacity so routing state
+    stays local to the data shards."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(S * k / E * cfg.capacity_factor))
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)            # (B, S, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert, per batch row
+    # (int16 routing state: cap and slot counts are < 2^15)
+    flat_e = idx.reshape(B, S * k)                   # (B, T')
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int16)
+    pos = (jnp.cumsum(onehot, axis=1) - 1).astype(jnp.int32)
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < cap
+    # scatter target: index into (E*cap + 1) slots, overflow -> sentinel
+    slot = jnp.where(keep, flat_e * cap + pos, E * cap)   # (B, T')
+    slot = slot.reshape(B, S, k)
+
+    # one fused scatter of all (token, slot) pairs — a per-slot loop was
+    # tried and REFUTED in §Perf-B (k read-modify-write passes over the
+    # expert buffer cost more traffic than one repeated-activation pass)
+    slot_flat = slot.reshape(B, S * k)
+    x_slots = jnp.repeat(x, k, axis=1)               # (B, S*k, D)
+    buf = jnp.zeros((B, E * cap + 1, D), x.dtype)
+    buf = jax.vmap(lambda b, s_, xs: b.at[s_].add(xs))(buf, slot_flat,
+                                                       x_slots)
+    xe = buf[:, :E * cap].reshape(B, E, cap, D)
+
+    ye = _expert_ffn(params, xe, cfg)                # (B, E, cap, D)
+    ye_flat = jnp.concatenate(
+        [ye.reshape(B, E * cap, D), jnp.zeros((B, 1, D), ye.dtype)], axis=1)
+    y_slots = jax.vmap(lambda yf, s_: yf[s_])(ye_flat, slot_flat)
+    w = (gates * keep.reshape(B, S, k)).astype(jnp.float32)
+    y = jnp.sum(y_slots.astype(jnp.float32).reshape(B, S, k, D)
+                * w[..., None], axis=2)
+
+    if cfg.n_shared_experts:
+        up = jnp.einsum("bsd,df->bsf", x, params["shared_up"])
+        gate = jnp.einsum("bsd,df->bsf", x, params["shared_gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+        y = y + jnp.einsum("bsf,fd->bsd", h.astype(x.dtype),
+                           params["shared_down"]).astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, idx: jnp.ndarray,
+                          n_experts: int) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss (returned by the train
+    path; weight configured by the trainer)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    me = jnp.mean(probs.reshape(-1, n_experts), axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(idx[..., 0].reshape(-1), n_experts,
+                       dtype=jnp.float32), axis=0)
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,107 @@
+"""Parameter-spec trees: shapes, logical axes, and initializers in one place.
+
+A model is described by a nested dict of :class:`ParamSpec`.  From the same
+tree we derive:
+
+  * abstract parameters for the dry-run (``jax.eval_shape`` — no allocation);
+  * real initialized parameters for smoke tests / training;
+  * `PartitionSpec`s via the logical-axis rules in ``repro.distributed``.
+
+Logical axis names used across the zoo:
+
+  layers   stacked layer dim (scanned; never sharded)
+  embed    d_model         — FSDP axis (sharded over ('pod','data'))
+  heads    attention heads — tensor-parallel ('model')
+  kv_heads KV heads        — tensor-parallel if divisible, else replicated
+  qkv      per-head dim    — never sharded
+  mlp      FFN hidden      — tensor-parallel ('model')
+  vocab    vocabulary      — tensor-parallel ('model')
+  experts  MoE experts     — expert-parallel ('model')
+  state    SSM state dim   — never sharded
+  conv     conv kernel tap — never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    scale: float | None = None    # stddev override
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+SpecTree = dict  # nested dict[str, ParamSpec | SpecTree]
+
+
+def tree_paths(tree: SpecTree, prefix: tuple[str, ...] = ()):
+    for k, v in tree.items():
+        if isinstance(v, ParamSpec):
+            yield prefix + (k,), v
+        else:
+            yield from tree_paths(v, prefix + (k,))
+
+
+def map_specs(tree: SpecTree, fn: Callable[[tuple, ParamSpec], Any]):
+    out = {}
+    for k, v in tree.items():
+        if isinstance(v, ParamSpec):
+            out[k] = fn((k,), v)
+        else:
+            out[k] = map_specs(v, lambda p, s, _k=k: fn((_k,) + p, s))
+    return out
+
+
+def abstract_params(tree: SpecTree) -> dict:
+    """ShapeDtypeStruct tree — the dry-run's zero-allocation stand-in."""
+    return map_specs(tree, lambda p, s: jax.ShapeDtypeStruct(s.shape, s.dtype))
+
+
+def _init_leaf(path: tuple, spec: ParamSpec, root_key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    seed = np.uint32(abs(hash("/".join(path))) % (2**31))
+    key = jax.random.fold_in(root_key, seed)
+    if spec.scale is not None:
+        std = spec.scale
+    elif spec.init == "embed":
+        std = 1.0
+    else:
+        # fan-in scaled: last-but-one axis is the input dim by convention
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = fan_in ** -0.5
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std
+            ).astype(spec.dtype)
+
+
+def init_params(tree: SpecTree, key) -> dict:
+    """Deterministic per-path initialization (stable across resharding)."""
+    return map_specs(tree, lambda p, s: _init_leaf(p, s, key))
+
+
+def count_params(tree: SpecTree) -> int:
+    total = 0
+    for _, s in tree_paths(tree):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+def axes_tree(tree: SpecTree) -> dict:
+    return map_specs(tree, lambda p, s: s.axes)

@@ -1,0 +1,41 @@
+"""Family dispatch: one uniform API over all assigned architectures.
+
+    specs(cfg)                         -> ParamSpec tree
+    loss_fn(params, batch, cfg)        -> scalar
+    prefill(params, batch, cfg, L)     -> (last_logits, cache)
+    decode_step(params, batch, cache, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from ..configs.base import ModelConfig
+from . import encdec, transformer
+from .param import (SpecTree, abstract_params, axes_tree, count_params,
+                    init_params)
+
+
+def specs(cfg: ModelConfig) -> SpecTree:
+    if cfg.is_encdec:
+        return encdec.encdec_specs(cfg)
+    return transformer.lm_specs(cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    if cfg.is_encdec:
+        return encdec.loss_fn(params, batch, cfg)
+    return transformer.loss_fn(params, batch, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    if cfg.is_encdec:
+        return encdec.prefill(params, batch, cfg, max_len)
+    return transformer.prefill(params, batch, cfg, max_len)
+
+
+def decode_step(params, batch, cache, cfg: ModelConfig):
+    if cfg.is_encdec:
+        return encdec.decode_step(params, batch, cache, cfg)
+    return transformer.decode_step(params, batch, cache, cfg)
+
+
+__all__ = ["specs", "loss_fn", "prefill", "decode_step", "abstract_params",
+           "axes_tree", "count_params", "init_params"]

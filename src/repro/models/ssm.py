@@ -1,0 +1,278 @@
+"""Linear-recurrence blocks: RWKV-6 (Finch) and Mamba-2 (SSD), built on one
+chunked linear-attention core.
+
+Recurrence (per head, state S ∈ R^{K×V}):
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_t^T
+    o_t = r_t · S_{t-1} + (r_t · (u ⊙ k_t)) v_t      (RWKV-6: pre-update + bonus)
+    o_t = r_t · S_t                                   (Mamba-2: post-update)
+
+The chunked form processes T in blocks of ``chunk``: an inter-chunk term
+against the carried state and an intra-chunk decay-weighted attention
+matrix — O(T·c) memory, scan over T/c chunks.  This is also the reference
+oracle for the ``linear_scan`` Pallas kernel.
+
+Per-step log-decays are clamped at -60/chunk: contributions below e^-60
+are exactly 0 in fp32, and the clamp keeps the standard two-sided
+exp factorization inside fp32 range.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .param import ParamSpec
+
+NEG_CLAMP = 60.0
+
+
+def chunked_linear_attn(r, k, v, log_w, *, u=None, state0=None,
+                        chunk: int = 64, post_update: bool = False,
+                        unroll: bool = False):
+    """r/k/log_w: (B, T, H, K); v: (B, T, H, V).  Returns (o, state_T) with
+    o: (B, T, H, V), state: (B, H, K, V)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, T)
+    nc = T // c
+    assert nc * c == T, f"T={T} not divisible by chunk={c}"
+    f32 = jnp.float32
+    r, k, v = r.astype(f32), k.astype(f32), v.astype(f32)
+    lw = jnp.clip(log_w.astype(f32), -NEG_CLAMP / c, 0.0)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), f32)
+
+    rc = r.reshape(B, nc, c, H, K)
+    kc = k.reshape(B, nc, c, H, K)
+    vc = v.reshape(B, nc, c, H, V)
+    lwc = lw.reshape(B, nc, c, H, K)
+    tri = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :]) if not \
+        post_update else (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])
+
+    def body(S, xs):
+        rb, kb, vb, lwb = xs                     # (B, c, H, *)
+        P = jnp.cumsum(lwb, axis=1)              # inclusive cumulative decay
+        Pq = P if post_update else P - lwb       # decay seen by the query
+        q_eff = rb * jnp.exp(Pq)
+        k_eff = kb * jnp.exp(-P)
+        inter = jnp.einsum("bchk,bhkv->bchv", q_eff, S)
+        A = jnp.einsum("bihk,bjhk->bhij", q_eff, k_eff)
+        A = A * tri[None, None]
+        if u is not None:                        # RWKV-6 current-token bonus
+            diag = jnp.einsum("bchk,hk,bchk->bch", rb, u.astype(f32), kb)
+            idx = jnp.arange(c)
+            A = A.at[:, :, idx, idx].add(jnp.moveaxis(diag, 1, 2))
+        intra = jnp.einsum("bhij,bjhv->bihv", A, vb)
+        o = inter + intra
+        decay_all = jnp.exp(P[:, -1])            # (B, H, K)
+        S_new = S * decay_all[..., None] + jnp.einsum(
+            "bchk,bchv->bhkv", kb * jnp.exp(P[:, -1:] - P), vb)
+        return S_new, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, lwc))
+    state, os_ = jax.lax.scan(body, state0, xs, unroll=unroll)
+    o = jnp.moveaxis(os_, 0, 1).reshape(B, T, H, V)
+    return o, state
+
+
+def linear_attn_step(r, k, v, log_w, *, u=None, state=None,
+                     post_update: bool = False):
+    """Single-token decode step.  r/k/log_w: (B, H, K); v: (B, H, V);
+    state: (B, H, K, V)."""
+    f32 = jnp.float32
+    r, k, v = r.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(jnp.clip(log_w.astype(f32), -NEG_CLAMP, 0.0))
+    kv = k[..., :, None] * v[..., None, :]       # (B, H, K, V)
+    if post_update:
+        state = state * w[..., None] + kv
+        o = jnp.einsum("bhk,bhkv->bhv", r, state)
+    else:
+        o = jnp.einsum("bhk,bhkv->bhv", r, state)
+        if u is not None:
+            o = o + jnp.einsum("bhk,bhkv->bhv", r * u.astype(f32)[None], kv)
+        state = state * w[..., None] + kv
+    return o, state
+
+
+# ----------------------------------------------------------------------
+# RWKV-6 block
+# ----------------------------------------------------------------------
+
+LORA = 32
+
+
+def rwkv6_specs(cfg: ModelConfig, stacked: int) -> dict:
+    d = cfg.d_model
+    L, lx = (stacked,), ("layers",)
+    def mat(shape, axes, **kw):
+        return ParamSpec(L + shape, lx + axes, **kw)
+    return {
+        "mix": mat((5, d), (None, "embed"), init="zeros"),   # r,k,v,w,g lerp
+        "wr": mat((d, d), ("embed", "heads_flat")),
+        "wk": mat((d, d), ("embed", "heads_flat")),
+        "wv": mat((d, d), ("embed", "heads_flat")),
+        "wg": mat((d, d), ("embed", "heads_flat")),
+        "wo": mat((d, d), ("heads_flat", "embed")),
+        "w_base": mat((d,), ("embed",), init="zeros"),
+        "w_lora_a": mat((d, LORA), ("embed", None), scale=0.01),
+        "w_lora_b": mat((LORA, d), (None, "embed"), scale=0.01),
+        "u": mat((d,), ("embed",), init="zeros"),
+        "ln_x_scale": mat((d,), ("embed",), init="ones"),
+        # channel mix (FFN)
+        "cm_mix": mat((2, d), (None, "embed"), init="zeros"),
+        "cm_k": mat((d, cfg.d_ff), ("embed", "mlp")),
+        "cm_v": mat((cfg.d_ff, d), ("mlp", "embed")),
+        "cm_r": mat((d, d), ("embed", "embed_out")),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B, 1, D) last token of the previous segment (zeros at start).
+    Returns x_{t-1} aligned with x_t, and the new carry."""
+    shifted = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def rwkv6_time_mix(p, x, x_prev, cfg: ModelConfig, *, state=None,
+                   decode=False):
+    """Returns (y, (new_state, new_x_carry))."""
+    B = x.shape[0]
+    d = cfg.d_model
+    H, K = cfg.n_heads, d // cfg.n_heads
+    if decode:
+        xs = x_prev  # (B, 1, D) carry
+        carry = x
+    else:
+        xs, carry = _token_shift(x, x_prev)
+    mix = p["mix"].astype(jnp.float32)
+    xr = _lerp(x, xs, mix[0])
+    xk = _lerp(x, xs, mix[1])
+    xv = _lerp(x, xs, mix[2])
+    xw = _lerp(x, xs, mix[3])
+    xg = _lerp(x, xs, mix[4])
+    r = (xr @ p["wr"]).reshape(B, -1, H, K)
+    k = (xk @ p["wk"]).reshape(B, -1, H, K)
+    v = (xv @ p["wv"]).reshape(B, -1, H, K)
+    g = xg @ p["wg"]
+    ww = p["w_base"].astype(jnp.float32) + \
+        (xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)
+         ) @ p["w_lora_b"].astype(jnp.float32)
+    log_w = -jnp.exp(ww.reshape(B, -1, H, K))     # data-dependent decay < 0
+    u = p["u"].astype(jnp.float32).reshape(H, K)
+
+    if decode:
+        o, new_state = linear_attn_step(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], u=u, state=state)
+        o = o[:, None]
+    else:
+        o, new_state = chunked_linear_attn(
+            r, k, v, log_w, u=u, state0=state, chunk=cfg.chunk_size,
+            unroll=cfg.scan_unroll)
+    # per-head group norm
+    of = o.reshape(B, -1, H, K).astype(jnp.float32)
+    of = of * jax.lax.rsqrt(jnp.mean(of * of, -1, keepdims=True) + 1e-6)
+    of = of.reshape(B, -1, d) * p["ln_x_scale"].astype(jnp.float32)
+    y = (of * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype) @ p["wo"]
+    return y, (new_state, carry)
+
+
+def rwkv6_channel_mix(p, x, x_prev, cfg: ModelConfig, decode=False):
+    if decode:
+        xs, carry = x_prev, x
+    else:
+        xs, carry = _token_shift(x, x_prev)
+    mix = p["cm_mix"].astype(jnp.float32)
+    xk = _lerp(x, xs, mix[0])
+    xr = _lerp(x, xs, mix[1])
+    h = jnp.maximum(xk @ p["cm_k"], 0.0) ** 2
+    y = (h @ p["cm_v"]) * jax.nn.sigmoid((xr @ p["cm_r"]).astype(jnp.float32)
+                                         ).astype(x.dtype)
+    return y, carry
+
+
+# ----------------------------------------------------------------------
+# Mamba-2 block
+# ----------------------------------------------------------------------
+
+def mamba2_specs(cfg: ModelConfig, stacked: int) -> dict:
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N
+    L, lx = (stacked,), ("layers",)
+    def mat(shape, axes, **kw):
+        return ParamSpec(L + shape, lx + axes, **kw)
+    return {
+        # separate projections (z / x+B+C / dt) so each output width is
+        # tensor-parallel-divisible (a fused in_proj of width 2di+2N+H is
+        # not divisible by the 16-way model axis for zamba2's dims)
+        "w_z": mat((d, di), ("embed", "mlp")),
+        "w_xbc": mat((d, conv_ch), ("embed", "mlp")),
+        "w_dt": mat((d, H), ("embed", "heads_flat")),
+        "conv_w": mat((cfg.conv_width, conv_ch), (None, "mlp"),
+                      scale=cfg.conv_width ** -0.5),
+        "conv_b": mat((conv_ch,), ("mlp",), init="zeros"),
+        "a_log": mat((H,), ("heads_flat",), init="zeros"),
+        "dt_bias": mat((H,), ("heads_flat",), init="zeros"),
+        "d_skip": mat((H,), ("heads_flat",), init="ones"),
+        "norm_scale": mat((di,), ("mlp",), init="ones"),
+        "out_proj": mat((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, T, C), w: (W, C) depthwise.  state: (B, W-1, C) carry.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return y + b, new_state
+
+
+def mamba2_block(p, x, cfg: ModelConfig, *, state=None, conv_state=None,
+                 decode=False):
+    """Returns (y, (ssm_state, conv_state))."""
+    B, T, d = x.shape
+    di = d * cfg.ssm_expand
+    N, H = cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    z = x @ p["w_z"]
+    xbc = x @ p["w_xbc"]
+    dt = x @ p["w_dt"]
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs, Bt, Ct = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))               # (H,)
+    log_w = (dt * a)[..., None] * jnp.ones((1, 1, 1, N))       # (B,T,H,N)
+
+    v = (xs.reshape(B, T, H, P).astype(jnp.float32)
+         * dt[..., None])                                      # dt·x
+    r = jnp.broadcast_to(Ct[:, :, None, :], (B, T, H, N))
+    k = jnp.broadcast_to(Bt[:, :, None, :], (B, T, H, N))
+
+    if decode:
+        o, state = linear_attn_step(r[:, 0], k[:, 0], v[:, 0], log_w[:, 0],
+                                    state=state, post_update=True)
+        o = o[:, None]
+    else:
+        o, state = chunked_linear_attn(r, k, v, log_w, state0=state,
+                                       chunk=cfg.chunk_size,
+                                       post_update=True,
+                                       unroll=cfg.scan_unroll)
+    y = o + xs.reshape(B, T, H, P).astype(jnp.float32) \
+        * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, T, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    return y @ p["out_proj"], (state, conv_state)

@@ -1,0 +1,337 @@
+"""Decoder-LM assembly for the dense / moe / ssm / hybrid families.
+
+One spec builder + three entry points per family:
+
+  * ``loss_fn(params, batch, cfg)``          — training objective
+  * ``prefill(params, batch, cfg, max_len)`` — build decode caches
+  * ``decode_step(params, batch, cache, cfg)`` — one token for the batch
+
+Layer stacks are *stacked on a leading L axis* and executed with
+``lax.scan`` (+ rematerialization) so the lowered HLO stays compact enough
+to compile 80-layer models against a 512-device mesh on this CPU container.
+
+The hybrid (Zamba2) family interleaves a scan over Mamba2 layers with a
+single *shared* attention block applied every ``cfg.attn_every`` layers —
+the shared block's weights are scan-invariants, its KV cache is indexed by
+application number.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import ssm
+from .layers import (apply_mlp, apply_norm, attention, attention_specs,
+                     cross_entropy, embed_specs, embed_tokens, kv_cache_specs,
+                     lm_logits, mlp_specs, norm_specs)
+from .moe import apply_moe, moe_specs
+from .param import ParamSpec, SpecTree
+
+
+# ----------------------------------------------------------------------
+# Spec builders
+# ----------------------------------------------------------------------
+
+def frontend_specs(cfg: ModelConfig) -> dict:
+    if not cfg.frontend:
+        return {}
+    return {"proj": ParamSpec((cfg.frontend_dim, cfg.d_model),
+                              (None, "embed"))}
+
+
+def lm_specs(cfg: ModelConfig) -> SpecTree:
+    L = cfg.n_layers
+    specs: SpecTree = {"embed": embed_specs(cfg)}
+    fn = norm_specs(cfg)
+    if fn:
+        specs["final_norm"] = fn
+    if cfg.frontend:
+        specs["frontend"] = frontend_specs(cfg)
+
+    if cfg.family in ("dense", "moe"):
+        block = {"attn": attention_specs(cfg, L)}
+        an = norm_specs(cfg, L)
+        if an:
+            block["attn_norm"] = an
+            block["mlp_norm"] = norm_specs(cfg, L)
+        block["mlp"] = moe_specs(cfg, L) if cfg.family == "moe" \
+            else mlp_specs(cfg, L)
+        specs["blocks"] = block
+    elif cfg.family == "ssm":
+        assert cfg.ssm_type == "rwkv6"
+        block = dict(ssm.rwkv6_specs(cfg, L))
+        block["tm_norm"] = norm_specs(cfg, L)
+        block["cm_norm"] = norm_specs(cfg, L)
+        specs["blocks"] = block
+    elif cfg.family == "hybrid":
+        assert cfg.ssm_type == "mamba2"
+        block = dict(ssm.mamba2_specs(cfg, L))
+        block["norm"] = norm_specs(cfg, L)
+        specs["blocks"] = block
+        shared = {"attn": attention_specs(cfg),
+                  "attn_norm": norm_specs(cfg),
+                  "mlp_norm": norm_specs(cfg),
+                  "mlp": mlp_specs(cfg)}
+        specs["shared"] = shared
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+
+
+# ----------------------------------------------------------------------
+# Block bodies
+# ----------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _dense_block(pl, x, positions, cache_l, cfg: ModelConfig, decode: bool):
+    h = apply_norm(pl.get("attn_norm", {}), x, cfg)
+    a, new_cache = attention(pl["attn"], h, cfg, positions=positions,
+                             cache=cache_l, decode=decode)
+    x = x + a
+    h = apply_norm(pl.get("mlp_norm", {}), x, cfg)
+    m = apply_moe(pl["mlp"], h, cfg) if cfg.family == "moe" \
+        else apply_mlp(pl["mlp"], h, cfg)
+    return x + m, new_cache
+
+
+def _rwkv_block(pl, x, state_l, cfg: ModelConfig, decode: bool):
+    st, tm_carry, cm_carry = state_l
+    h = apply_norm(pl["tm_norm"], x, cfg)
+    y, (st2, tm2) = ssm.rwkv6_time_mix(pl, h, tm_carry, cfg, state=st,
+                                       decode=decode)
+    x = x + y
+    h = apply_norm(pl["cm_norm"], x, cfg)
+    y, cm2 = ssm.rwkv6_channel_mix(pl, h, cm_carry, cfg, decode=decode)
+    return x + y, (st2, tm2, cm2)
+
+
+def _mamba_block(pl, x, state_l, cfg: ModelConfig, decode: bool):
+    st, conv = state_l
+    h = apply_norm(pl["norm"], x, cfg)
+    y, (st2, conv2) = ssm.mamba2_block(pl, h, cfg, state=st,
+                                       conv_state=conv, decode=decode)
+    return x + y, (st2, conv2)
+
+
+def _shared_attn_block(ps, x, positions, cache_app, cfg: ModelConfig,
+                       decode: bool):
+    h = apply_norm(ps["attn_norm"], x, cfg)
+    a, new_cache = attention(ps["attn"], h, cfg, positions=positions,
+                             cache=cache_app, decode=decode)
+    x = x + a
+    h = apply_norm(ps["mlp_norm"], x, cfg)
+    return x + apply_mlp(ps["mlp"], h, cfg), new_cache
+
+
+# ----------------------------------------------------------------------
+# Stacks
+# ----------------------------------------------------------------------
+
+def _stack_dense(params, x, positions, cache, cfg: ModelConfig,
+                 decode: bool):
+    def body(carry, xs):
+        x = carry
+        pl, cache_l = xs
+        x, new_cache = _dense_block(pl, x, positions, cache_l, cfg, decode)
+        return x, new_cache
+
+    body = _maybe_remat(body, cfg) if not decode else body
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
+                                unroll=cfg.scan_unroll)
+    return x, new_cache
+
+
+def _stack_rwkv(params, x, state, cfg: ModelConfig, decode: bool):
+    def body(carry, xs):
+        x = carry
+        pl, state_l = xs
+        x, new_state = _rwkv_block(pl, x, state_l, cfg, decode)
+        return x, new_state
+
+    body = _maybe_remat(body, cfg) if not decode else body
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state),
+                                unroll=cfg.scan_unroll)
+    return x, new_state
+
+
+def _tree_split(tree, n: int, group: int):
+    """Split stacked (L, ...) leaves into ((G, group, ...), (tail, ...))."""
+    head = jax.tree.map(
+        lambda a: a[:n * group].reshape(n, group, *a.shape[1:]), tree)
+    tail = jax.tree.map(lambda a: a[n * group:], tree)
+    return head, tail
+
+
+def _tree_merge(head, tail, n: int, group: int):
+    def m(h, t):
+        flat = h.reshape(n * group, *h.shape[2:])
+        return jnp.concatenate([flat, t], axis=0) if t.shape[0] else flat
+    return jax.tree.map(m, head, tail)
+
+
+def _stack_hybrid(params, x, positions, state, cfg: ModelConfig,
+                  decode: bool):
+    """Nested scans: outer over shared-attention *groups* (``attn_every``
+    Mamba2 layers + one application of the shared block), then a tail scan
+    over the leftover Mamba2 layers.  The shared block's weights are scan
+    invariants; its KV cache is the outer scan's per-group xs."""
+    every = cfg.attn_every
+    G = n_attn_apps(cfg)
+    mamba_state, attn_cache = state
+    blocks_g, blocks_t = _tree_split(params["blocks"], G, every)
+    state_g, state_t = _tree_split(mamba_state, G, every)
+
+    def inner(carry, xs):
+        x = carry
+        pl, state_l = xs
+        x, new_state = _mamba_block(pl, x, state_l, cfg, decode)
+        return x, new_state
+
+    def group_body(carry, xs):
+        x = carry
+        pg, sg, cache_g = xs
+        x, sg2 = jax.lax.scan(inner, x, (pg, sg), unroll=cfg.scan_unroll)
+        x, cache_g2 = _shared_attn_block(params["shared"], x, positions,
+                                         cache_g, cfg, decode)
+        return x, (sg2, cache_g2)
+
+    group_fn = _maybe_remat(group_body, cfg) if not decode else group_body
+    x, (state_g2, attn_cache2) = jax.lax.scan(
+        group_fn, x, (blocks_g, state_g, attn_cache),
+        unroll=cfg.scan_unroll)
+
+    tail_fn = _maybe_remat(inner, cfg) if not decode else inner
+    x, state_t2 = jax.lax.scan(tail_fn, x, (blocks_t, state_t),
+                               unroll=cfg.scan_unroll)
+    new_mamba = _tree_merge(state_g2, state_t2, G, every)
+    return x, (new_mamba, attn_cache2)
+
+
+# ----------------------------------------------------------------------
+# Embedding of (tokens [+ frontend]) into the sequence
+# ----------------------------------------------------------------------
+
+def embed_input(params, batch, cfg: ModelConfig):
+    """Returns (x, positions, n_prefix) where n_prefix is the number of
+    frontend positions prepended ahead of the text tokens."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    n_prefix = 0
+    xs = []
+    if cfg.frontend == "vision" and "frontend" in batch:
+        emb = batch["frontend"].astype(cfg.dtype) @ params["frontend"]["proj"]
+        n_prefix = emb.shape[1]
+        xs.append(emb)
+    positions = jnp.broadcast_to(jnp.arange(S + n_prefix)[None],
+                                 (B, S + n_prefix))
+    tok_pos = positions[:, n_prefix:]
+    xs.append(embed_tokens(params["embed"], tokens, cfg, tok_pos))
+    x = jnp.concatenate(xs, axis=1) if len(xs) > 1 else xs[0]
+    return x, positions, n_prefix
+
+
+# ----------------------------------------------------------------------
+# Entry points
+# ----------------------------------------------------------------------
+
+def forward(params, batch, cfg: ModelConfig, cache=None, decode=False):
+    if decode:
+        length = _cache_length(cache, cfg)
+        B = batch["tokens"].shape[0]
+        positions = jnp.broadcast_to(length, (B, 1))
+        x = embed_tokens(params["embed"], batch["tokens"], cfg, positions)
+    else:
+        x, positions, _ = embed_input(params, batch, cfg)
+
+    if cfg.family in ("dense", "moe"):
+        x, cache = _stack_dense(params, x, positions, cache, cfg, decode)
+    elif cfg.family == "ssm":
+        state, counter = cache
+        x, state = _stack_rwkv(params, x, state, cfg, decode)
+        cache = (state, counter + x.shape[1])
+    else:
+        x, cache = _stack_hybrid(params, x, positions, cache, cfg, decode)
+
+    if "final_norm" in params:
+        x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params["embed"], x, cfg)
+    return logits, cache
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    cache = empty_cache(params, batch, cfg, train=True)
+    logits, _ = forward(params, batch, cfg, cache=cache)
+    n_prefix = logits.shape[1] - batch["labels"].shape[1]
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    return cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    cache = empty_cache(params, batch, cfg, train=False, max_len=max_len)
+    logits, cache = forward(params, batch, cfg, cache=cache)
+    return logits[:, -1:], cache
+
+
+def decode_step(params, batch, cache, cfg: ModelConfig):
+    logits, cache = forward(params, batch, cfg, cache=cache, decode=True)
+    return logits, cache
+
+
+# ----------------------------------------------------------------------
+# Caches / recurrent state
+# ----------------------------------------------------------------------
+
+def _cache_length(cache, cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return cache["length"][0]
+    if cfg.family == "hybrid":
+        return cache[1]["length"][0]
+    return cache[1]  # rwkv: explicit token counter
+
+
+def empty_cache(params, batch, cfg: ModelConfig, *, train: bool,
+                max_len: int = 0):
+    """Concrete zero cache (smoke tests / real decode).  For dense training
+    the per-layer cache is None-like (no KV retention)."""
+    B = batch["tokens"].shape[0]
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe"):
+        if train:
+            return None
+        from .layers import make_kv_cache
+        return make_kv_cache(cfg, B, max_len, n_layers=L, dtype=cfg.dtype)
+    if cfg.family == "ssm":
+        H, K = cfg.n_heads, cfg.d_model // cfg.n_heads
+        st = jnp.zeros((L, B, H, K, K), jnp.float32)
+        carry = jnp.zeros((L, B, 1, cfg.d_model), cfg.dtype)
+        return ((st, carry, carry), jnp.asarray(0, jnp.int32))
+    # hybrid
+    H, N = cfg.ssm_heads, cfg.ssm_state
+    P = cfg.d_model * cfg.ssm_expand // H
+    di = cfg.d_model * cfg.ssm_expand
+    st = jnp.zeros((L, B, H, N, P), jnp.float32)
+    conv = jnp.zeros((L, B, cfg.conv_width - 1, di + 2 * N), cfg.dtype)
+    mamba = (st, conv)
+    if train:
+        return (mamba, None)
+    from .layers import make_kv_cache
+    apps = max(1, n_attn_apps(cfg))
+    attn = make_kv_cache(cfg, B, max(max_len, 1), n_layers=apps,
+                         dtype=cfg.dtype)
+    return (mamba, attn)

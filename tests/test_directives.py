@@ -1,0 +1,87 @@
+"""Directive IR: parsing, validation, resolution, completion (paper §3)."""
+import pytest
+
+from repro.core import directives as dv
+from repro.core.directives import (Cluster, Dataflow, DataflowError,
+                                   SpatialMap, Sz, TemporalMap, complete,
+                                   parse, resolve)
+
+
+def test_parse_paper_syntax():
+    df = parse("""
+        SpatialMap(1,1) K
+        TemporalMap(64,64) C
+        TemporalMap(Sz(R),Sz(R)) R
+        TemporalMap(Sz(S),Sz(S)) S
+        TemporalMap(Sz(R),1) Y
+        TemporalMap(Sz(S),1) X
+        Cluster(64)
+        SpatialMap(1,1) C
+    """, name="kc-p")
+    assert df.cluster_sizes == (64,)
+    assert isinstance(df.directives[0], SpatialMap)
+    assert df.directives[2].size == Sz("R")
+    assert df.directives[4] == TemporalMap(Sz("R"), 1, "Y")
+    assert len(df.levels) == 2
+
+
+def test_parse_roundtrip():
+    from repro.core.dataflows import KC_P
+    df2 = parse(str(KC_P).split("{")[1].rsplit("}")[0], name="rt")
+    assert df2.directives == KC_P.directives
+
+
+def test_validation_rejects_bad_programs():
+    with pytest.raises(DataflowError):
+        Dataflow("bad", (TemporalMap(0, 1, "K"),))
+    with pytest.raises(DataflowError):
+        Dataflow("bad", (TemporalMap(1, 1, "K"), TemporalMap(2, 2, "K")))
+    with pytest.raises(DataflowError):
+        Dataflow("bad", (Cluster(0),))
+
+
+def test_dim_mapped_twice_allowed_across_levels():
+    # same dim at different cluster levels is legal (YR-P maps Y twice)
+    Dataflow("ok", (SpatialMap(3, 1, "Y"), Cluster(3),
+                    SpatialMap(1, 1, "Y")))
+
+
+def test_resolve_sz_references_other_dim():
+    df = Dataflow("t", (TemporalMap(Sz("R"), 1, "Y"),))
+    r = resolve(df, {"Y": 16, "R": 3})
+    assert r.directives[0].size == 3          # Sz(R) -> 3, not 16
+    assert r.directives[0].offset == 1
+
+
+def test_resolve_clamps_to_dim():
+    df = Dataflow("t", (TemporalMap(100, 100, "Y"),))
+    r = resolve(df, {"Y": 16})
+    assert r.directives[0].size == 16
+
+
+def test_complete_adds_missing_dims_and_extends():
+    df = Dataflow("t", (SpatialMap(1, 1, "C"),))
+    c = complete(df, {"C": 8, "K": 4})
+    assert {d.dim for d in c.directives} == {"C", "K"}
+    # K must come first (outermost implicit temporal map)
+    assert c.directives[0].dim == "K"
+    assert isinstance(c.directives[0], TemporalMap)
+
+
+def test_complete_handles_dataflow_dims_missing_from_layer():
+    # KC-P applied to a depthwise conv (no K dim): K resolves to extent 1
+    from repro.core.dataflows import KC_P
+    dims = dv.extended_dims(KC_P, {"C": 8, "Y": 8, "X": 8, "R": 3, "S": 3,
+                                   "N": 1})
+    assert dims["K"] == 1
+    c = complete(KC_P, {"C": 8, "Y": 8, "X": 8, "R": 3, "S": 3, "N": 1})
+    k_dirs = [d for d in c.directives
+              if not isinstance(d, Cluster) and d.dim == "K"]
+    assert k_dirs and k_dirs[0].size == 1
+
+
+def test_levels_split():
+    from repro.core.dataflows import YR_P
+    levels = YR_P.levels
+    assert len(levels) == 2
+    assert [d.dim for d in levels[1]] == ["Y", "R"]

@@ -1,0 +1,141 @@
+"""Performance/cost engine: conservation laws, monotonicity, hardware
+ablations (Table 5), and faithful-vs-vectorized equivalence."""
+import numpy as np
+import pytest
+
+from repro.core import dataflows as dfl
+from repro.core import tensor_analysis as ta
+from repro.core.model import analyze
+from repro.core.performance import HWConfig
+
+HW = HWConfig(num_pes=64, noc_bw=16.0, noc_latency=2.0)
+
+OPS = [
+    ta.conv2d("late", k=32, c=32, y=10, x=10, r=3, s=3),
+    ta.conv2d("strided", k=16, c=3, y=30, x=30, r=5, s=5, stride=2),
+    ta.dwconv2d("dw", c=24, y=12, x=12, r=3, s=3),
+    ta.fc("fc", k=64, c=96),
+    ta.pointwise_conv("pw", k=16, c=8, y=14, x=14),
+]
+FLOWS = ["C-P", "X-P", "YX-P", "YR-P", "KC-P"]
+
+
+@pytest.mark.parametrize("op", OPS, ids=lambda o: o.name)
+@pytest.mark.parametrize("flow", FLOWS)
+def test_mac_conservation(op, flow):
+    """Every MAC executes exactly once regardless of dataflow."""
+    df = dfl.table3_for_layer(flow, op)
+    s = analyze(op, df, HW)
+    assert s.total_macs == op.total_macs
+
+
+@pytest.mark.parametrize("op", OPS[:2], ids=lambda o: o.name)
+@pytest.mark.parametrize("flow", FLOWS)
+def test_runtime_lower_bound(op, flow):
+    """Runtime >= compute-bound bound MACs/PEs (utilization <= 1)."""
+    df = dfl.table3_for_layer(flow, op)
+    s = analyze(op, df, HW)
+    assert s.runtime >= op.total_macs / HW.num_pes
+    assert 0.0 < s.utilization <= 1.0 + 1e-9
+
+
+@pytest.mark.parametrize("flow", FLOWS)
+def test_more_bandwidth_never_slower(flow):
+    op = OPS[0]
+    df = dfl.table3_for_layer(flow, op)
+    prev = None
+    for bw in (2.0, 8.0, 32.0, 128.0):
+        s = analyze(op, df, HW.replace(noc_bw=bw))
+        if prev is not None:
+            assert s.runtime <= prev + 1e-9
+        prev = s.runtime
+
+
+def test_more_pes_never_more_cycles():
+    op = ta.conv2d("c", k=64, c=64, y=18, x=18, r=3, s=3)
+    df = dfl.table3_for_layer("KC-P", op)
+    prev = None
+    for p in (16, 64, 256, 1024):
+        s = analyze(op, df, HW.replace(num_pes=p, noc_bw=1e9))
+        if prev is not None:
+            assert s.runtime <= prev + 1e-9
+        prev = s.runtime
+
+
+def test_multicast_ablation_increases_energy():
+    """Table 5: removing spatial multicast support costs energy.  Needs
+    >1 top-level cluster so the K-spatial map actually multicasts inputs."""
+    op = OPS[0]
+    df = dfl.table3_for_layer("KC-P", op)
+    hw = HW.replace(num_pes=256)
+    e_with = analyze(op, df, hw).energy_pj
+    e_without = analyze(op, df, hw.replace(multicast=False)).energy_pj
+    assert e_without > e_with
+
+
+def test_reduction_ablation_increases_energy():
+    op = OPS[0]
+    df = dfl.table3_for_layer("KC-P", op)  # 64-wide C reduction
+    hw = HW.replace(num_pes=256)
+    e_with = analyze(op, df, hw).energy_pj
+    e_without = analyze(op, df,
+                        hw.replace(spatial_reduction=False)).energy_pj
+    assert e_without > e_with
+
+
+def test_bandwidth_ablation_hits_throughput_not_energy():
+    """Table 5 row 2: smaller bw -> lower throughput, ~same energy."""
+    op = OPS[0]
+    df = dfl.table3_for_layer("KC-P", op)
+    a = analyze(op, df, HW.replace(noc_bw=64.0))
+    b = analyze(op, df, HW.replace(noc_bw=2.0))
+    assert b.throughput < a.throughput
+    assert abs(b.energy_pj - a.energy_pj) / a.energy_pj < 0.05
+
+
+def test_reuse_factor_leq_algorithmic_max():
+    """Fig. 11: achieved reuse can never beat the algorithmic max 'A'."""
+    from repro.core.tensor_analysis import algorithmic_max_reuse
+    for op in OPS:
+        amax = algorithmic_max_reuse(op)
+        for flow in FLOWS:
+            s = analyze(op, dfl.table3_for_layer(flow, op), HW)
+            for t in ("F", "I"):
+                assert s.reuse_factor[t] <= amax[t] * (1 + 1e-6), \
+                    (op.name, flow, t)
+
+
+def test_buffer_requirements_positive():
+    for flow in FLOWS:
+        s = analyze(OPS[0], dfl.table3_for_layer(flow, OPS[0]), HW)
+        assert s.l1_req_kb > 0
+        assert s.l2_req_kb >= s.l1_req_kb * 0  # defined
+
+
+def test_energy_breakdown_sums():
+    s = analyze(OPS[0], dfl.table3_for_layer("KC-P", OPS[0]), HW)
+    total = sum(s.energy_breakdown.values())
+    assert np.isclose(total, s.energy_pj, rtol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# faithful == vectorized
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("flow", FLOWS)
+def test_vectorized_matches_faithful(flow):
+    import jax.numpy as jnp
+    from repro.core.vectorized import evaluate_grid
+    op = ta.conv2d("v", k=48, c=40, y=14, x=14, r=3, s=3)
+    df = dfl.table3_for_layer(flow, op)
+    pes = np.array([8, 60, 256, 500], np.int64)
+    bw = np.array([4.0, 16.0, 32.0, 64.0], np.float32)
+    bs = evaluate_grid(op, df, pes, bw)
+    for i in range(len(pes)):
+        s = analyze(op, df, HWConfig(num_pes=int(pes[i]),
+                                     noc_bw=float(bw[i]),
+                                     noc_latency=2.0))
+        assert np.isclose(float(bs.runtime[i]), s.runtime, rtol=1e-5), flow
+        assert np.isclose(float(bs.macs[i]), s.total_macs, rtol=1e-6)
+        assert np.isclose(float(bs.energy_pj[i]), s.energy_pj, rtol=1e-4)
+        assert np.isclose(float(bs.util[i]), s.utilization, rtol=1e-5)

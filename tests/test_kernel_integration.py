@@ -1,0 +1,32 @@
+"""Model-level kernel integration: the Pallas flash-attention path
+(forced via REPRO_USE_PALLAS=interpret) must match the pure-jnp model."""
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def test_model_with_pallas_attention_matches():
+    prog = textwrap.dedent("""
+        import os
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import REGISTRY
+        from repro.models import registry as R
+        from repro.models.param import init_params
+        cfg = REGISTRY['olmo-1b'].reduced().replace(chunk_size=128)
+        params = init_params(R.specs(cfg), jax.random.PRNGKey(0))
+        B, S = 1, 128
+        batch = {'tokens': jnp.ones((B, S), jnp.int32),
+                 'labels': jnp.ones((B, S), jnp.int32)}
+        base = float(R.loss_fn(params, batch, cfg))
+        os.environ['REPRO_USE_PALLAS'] = 'interpret'
+        pallas = float(R.loss_fn(params, batch, cfg))
+        rel = abs(base - pallas) / abs(base)
+        assert rel < 5e-3, (base, pallas)
+        print('OK', base, pallas)
+    """)
+    r = subprocess.run([sys.executable, "-c", prog],
+                       capture_output=True, text=True,
+                       env={**os.environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

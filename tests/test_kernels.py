@@ -1,0 +1,154 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.linear_scan import linear_scan, linear_scan_ref
+from repro.kernels.maestro_eval import (build_tables, maestro_eval,
+                                        maestro_eval_ref)
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hkv,D,causal",
+    [
+        (1, 128, 128, 2, 2, 64, True),
+        (2, 256, 256, 4, 1, 64, True),     # MQA
+        (1, 256, 256, 8, 2, 128, True),    # GQA group 4
+        (2, 128, 128, 2, 2, 64, False),    # bidirectional (encoder)
+        (1, 512, 512, 2, 2, 64, True),     # multiple k blocks
+    ])
+def test_flash_attention_matches_ref(B, Sq, Sk, Hq, Hkv, D, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, blk_q=128, blk_k=128,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_independent():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    a = flash_attention(q, k, v, blk_q=64, blk_k=64, interpret=True)
+    b = flash_attention(q, k, v, blk_q=128, blk_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# linear scan
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,T,H,K,V,post,use_u,chunk",
+    [
+        (1, 64, 1, 16, 16, False, True, 16),
+        (2, 128, 2, 32, 32, False, True, 32),    # RWKV-6 shape
+        (1, 256, 4, 64, 64, True, False, 64),    # Mamba-2 shape
+        (2, 128, 2, 16, 48, True, False, 64),    # K != V
+    ])
+def test_linear_scan_matches_ref(B, T, H, K, V, post, use_u, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, K), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, V), dtype)
+    lw = -jnp.abs(jax.random.normal(ks[3], (B, T, H, K))) * 0.2
+    u = jax.random.normal(ks[4], (H, K)) if use_u else None
+    s0 = jnp.zeros((B, H, K, V))
+    o, sT = linear_scan(r, k, v, lw, u, s0, chunk=chunk, post_update=post,
+                        interpret=True)
+    orf, srf = linear_scan_ref(r, k, v, lw, u=u, state0=s0, chunk=chunk,
+                               post_update=post)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(orf, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(srf),
+                               atol=tol, rtol=tol)
+
+
+def test_linear_scan_matches_stepwise_recurrence():
+    """Chunked form == literal per-token recurrence."""
+    from repro.models.ssm import linear_attn_step
+    B, T, H, K, V = 1, 32, 2, 8, 8
+    ks = jax.random.split(KEY, 4)
+    r = jax.random.normal(ks[0], (B, T, H, K))
+    k = jax.random.normal(ks[1], (B, T, H, K))
+    v = jax.random.normal(ks[2], (B, T, H, V))
+    lw = -jnp.abs(jax.random.normal(ks[3], (B, T, H, K))) * 0.3
+    o, sT = linear_scan(r, k, v, lw, chunk=8, post_update=True,
+                        interpret=True)
+    s = jnp.zeros((B, H, K, V))
+    outs = []
+    for t in range(T):
+        ot, s = linear_attn_step(r[:, t], k[:, t], v[:, t], lw[:, t],
+                                 state=s, post_update=True)
+        outs.append(ot)
+    o_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_seq), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(s), atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# maestro_eval
+# ----------------------------------------------------------------------
+
+def _cases():
+    from repro.core import dataflows as dfl
+    from repro.core import tensor_analysis as ta
+    ops = [
+        ta.conv2d("late", k=128, c=96, y=14, x=14, r=3, s=3),
+        ta.fc("fc", k=512, c=1024),
+        ta.conv2d("early", k=64, c=3, y=112, x=112, r=7, s=7, stride=2),
+    ]
+    for op in ops:
+        for flow in ("C-P", "X-P"):
+            yield op, dfl.table3_for_layer(flow, op)
+
+
+@pytest.mark.parametrize("op,df", list(_cases()),
+                         ids=lambda x: getattr(x, "name", None))
+def test_maestro_eval_kernel_vs_ref(op, df):
+    T = build_tables(op, df)
+    rng = np.random.default_rng(0)
+    pes = rng.integers(2, 1024, 64).astype(np.int32)
+    bw = rng.uniform(1, 128, 64).astype(np.float32)
+    krn = np.asarray(maestro_eval(jnp.asarray(pes), jnp.asarray(bw),
+                                  tables=T, interpret=True))
+    ref = np.asarray(maestro_eval_ref(pes, bw, tables=T))
+    np.testing.assert_allclose(krn, ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("op,df", list(_cases()),
+                         ids=lambda x: getattr(x, "name", None))
+def test_maestro_eval_matches_engine(op, df):
+    from repro.core.model import analyze
+    from repro.core.performance import HWConfig
+    T = build_tables(op, df)
+    rng = np.random.default_rng(1)
+    pes = rng.integers(2, 512, 8).astype(np.int32)
+    bw = rng.uniform(2, 64, 8).astype(np.float32)
+    feats = np.asarray(maestro_eval_ref(pes, bw, tables=T))
+    for i in range(len(pes)):
+        s = analyze(op, df, HWConfig(num_pes=int(pes[i]),
+                                     noc_bw=float(bw[i]),
+                                     noc_latency=2.0))
+        assert np.isclose(feats[i, 0], s.runtime, rtol=1e-4)
+        assert np.isclose(feats[i, 1], s.total_macs, rtol=1e-4)
+        assert np.isclose(feats[i, 3], s.utilization, atol=1e-5)

@@ -1,0 +1,154 @@
+"""Reuse analysis vs the paper: Table 1, Fig. 5 playground, Fig. 6
+row-stationary pattern."""
+import pytest
+
+from repro.core import dataflows as dfl
+from repro.core import tensor_analysis as ta
+from repro.core.cluster_analysis import py_backend, unit_counts
+from repro.core.directives import complete, extended_dims
+from repro.core.model import _build_level
+from repro.core.reuse_analysis import (HALO, MULTICAST, NONE, PARTIAL,
+                                       REDUCTION, STATIONARY, UNIQUE,
+                                       classify_level,
+                                       reuse_opportunity_table,
+                                       spatial_reduction_active)
+
+XP = py_backend()
+
+
+def conv():
+    return ta.conv2d("c", k=8, c=8, y=12, x=12, r=3, s=3)
+
+
+def build_level0(df, op, pes=16):
+    cdf = complete(df, op.dims)
+    counts = unit_counts(XP, pes, cdf.cluster_sizes)
+    dims = extended_dims(df, op.dims)
+    return _build_level(XP, cdf.levels[0], dims, counts[0], 0,
+                        len(cdf.levels) == 1, op)
+
+
+# ----------------------------------------------------------------------
+# Table 1: spatially mapped dim -> reuse opportunities
+# ----------------------------------------------------------------------
+
+def test_table1_spatial_K():
+    t = reuse_opportunity_table(conv())
+    e = t[("K", "C")]
+    assert e["spatial"]["I"] == MULTICAST          # I decoupled from K
+    assert e["spatial"]["F"] == "-"
+    assert e["temporal"]["O"] == REDUCTION         # C innermost -> reduction
+
+
+def test_table1_spatial_C():
+    t = reuse_opportunity_table(conv())
+    e = t[("C", "K")]
+    assert e["spatial"]["O"] == REDUCTION          # C is a reduction dim
+    assert e["temporal"]["I"] == MULTICAST         # K innermost: I unchanged
+
+
+def test_table1_spatial_RS():
+    t = reuse_opportunity_table(conv())
+    e = t[("R", "X")]
+    assert e["spatial"]["I"] == MULTICAST          # input-centric: I vs R
+    assert e["temporal"]["F"] == MULTICAST         # X innermost: F unchanged
+
+
+def test_table1_spatial_XY():
+    t = reuse_opportunity_table(conv())
+    e = t[("X", "C")]
+    assert e["spatial"]["F"] == MULTICAST          # F decoupled from X
+    assert e["temporal"]["O"] == REDUCTION
+
+
+# ----------------------------------------------------------------------
+# Fig. 5 playground (1-D conv, output-centric dims X' and S)
+# ----------------------------------------------------------------------
+
+def conv1d_os():
+    return ta.conv1d_outputs("f5", x_out=6, s=3)
+
+
+def test_fig5_A_output_stationary():
+    lvl = build_level0(dfl.FIG5_A, conv1d_os(), pes=6)
+    cl = classify_level(conv1d_os(), lvl)
+    assert cl["O"].temporal == STATIONARY          # psums stay in place
+    assert cl["F"].spatial == MULTICAST            # weights broadcast
+    assert cl["F"].temporal == NONE or cl["F"].temporal == PARTIAL
+
+
+def test_fig5_B_weight_stationary():
+    op = conv1d_os()
+    # 3 PEs over X'=6 -> the X' map folds; weights stay put across folds
+    lvl = build_level0(dfl.FIG5_B, op, pes=3)
+    cl = classify_level(op, lvl)
+    assert cl["F"].temporal == STATIONARY          # weight-stationary
+    assert cl["O"].spatial != REDUCTION            # X' spatial: no psum mix
+
+
+def test_fig5_C_weight_spatial():
+    op = conv1d_os()
+    lvl = build_level0(dfl.FIG5_C, op, pes=3)
+    cl = classify_level(op, lvl)
+    # S spatially mapped: PEs hold different taps of the same window ->
+    # partial sums for the same outputs = spatial reduction
+    assert cl["O"].spatial == REDUCTION
+    assert spatial_reduction_active(op, lvl)
+
+
+def test_fig5_input_halo():
+    op = conv1d_os()
+    lvl = build_level0(dfl.FIG5_A, op, pes=6)
+    cl = classify_level(op, lvl)
+    # consecutive PEs read overlapping input windows (skewed iteration)
+    assert cl["I"].spatial in (HALO, UNIQUE)
+
+
+# ----------------------------------------------------------------------
+# Fig. 6 row-stationary on the 2-cluster × 3-PE accelerator
+# ----------------------------------------------------------------------
+
+def rs_op():
+    return ta.conv2d("rs", k=1, c=1, y=5, x=6, r=3, s=3)
+
+
+def test_row_stationary_pattern():
+    op = rs_op()
+    df = dfl.ROW_STATIONARY_6PE
+    cdf = complete(df, op.dims)
+    counts = unit_counts(XP, 6, cdf.cluster_sizes)
+    assert counts == [2, 3]                        # 2 clusters × 3 PEs
+    dims = extended_dims(df, op.dims)
+    lvl0 = _build_level(XP, cdf.levels[0], dims, counts[0], 0, False, op)
+    cl0 = classify_level(op, lvl0)
+    # inputs replicated across clusters in a skewed manner -> halo reuse
+    assert cl0["I"].spatial == HALO
+    # weights identical across clusters within a step -> spatial multicast,
+    # and stationary across X steps (the paper's horizontal filter reuse)
+    assert cl0["F"].spatial == MULTICAST
+    assert cl0["F"].temporal == STATIONARY
+
+    inner_dims = lvl0.steady_tile()
+    lvl1 = _build_level(XP, cdf.levels[1], inner_dims, counts[1], 1, True,
+                        op)
+    # aligned Y/R diagonal: every PE of a cluster computes psums for the
+    # same output row -> vertical spatial reduction (paper Fig. 6)
+    assert spatial_reduction_active(op, lvl1)
+    cl1 = classify_level(op, lvl1)
+    assert cl1["O"].spatial == REDUCTION
+
+
+def test_row_stationary_output_extent_is_one_row():
+    from repro.core.reuse_analysis import level_tile_sizes, tensor_volume
+    op = rs_op()
+    df = dfl.ROW_STATIONARY_6PE
+    cdf = complete(df, op.dims)
+    counts = unit_counts(XP, 6, cdf.cluster_sizes)
+    dims = extended_dims(df, op.dims)
+    lvl0 = _build_level(XP, cdf.levels[0], dims, counts[0], 0, False, op)
+    lvl1 = _build_level(XP, cdf.levels[1], lvl0.steady_tile(), counts[1],
+                        1, True, op)
+    tiles = level_tile_sizes(lvl1, XP)
+    # 3 PEs with aligned (Y, R) cover one output row of X'-S+1 columns
+    oy = (tiles["Y"] - tiles["R"]) + 1
+    assert oy == 1
