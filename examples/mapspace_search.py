@@ -1,0 +1,70 @@
+"""Mapping-space auto-search walkthrough (repro.mapspace).
+
+Three stages, mirroring how the paper's co-design story generalizes beyond
+the five fixed Table 3 dataflows:
+
+  1. define + search the mapping space of one VGG16 conv layer;
+  2. compare the found mapping against every Table 3 dataflow;
+  3. joint co-DSE: cross the winners with the hardware grid and print the
+     merged Pareto frontier.
+
+Run:  PYTHONPATH=src python examples/mapspace_search.py
+"""
+import numpy as np
+
+from repro.core import tensor_analysis as ta
+from repro.core.dataflows import TABLE3, table3_for_layer
+from repro.core.dse import DSEConfig
+from repro.core.model import analyze
+from repro.core.performance import HWConfig
+from repro.mapspace import build_space, co_search, search
+
+PES, BW = 256, 32.0
+
+# VGG16 conv5-class layer (the paper's Fig. 12/13 workhorse).
+op = ta.conv2d("vgg16-conv11", k=512, c=512, y=16, x=16, r=3, s=3)
+
+# ----------------------------------------------------------------------
+# 1. Space definition + search.  A compact space keeps the demo snappy:
+#    every structural group is a separate XLA compile; tile axes are free.
+# ----------------------------------------------------------------------
+space = build_space(op, dims=("K", "C", "X"), spatial_dims=("K", "C"),
+                    perm_mode="rotations", cluster_sizes=(64,))
+print(f"space: {space.size} legal mappings "
+      f"({space.n_groups} structure groups)")
+
+result = search(op, objective="edp", budget=600, space=space,
+                num_pes=PES, noc_bw=BW, seed=0, max_groups=6)
+print(f"searched {result.n_evaluated} mappings "
+      f"({result.strategy}; {result.mappings_per_s / 1e6:.2f}M mappings/s "
+      f"steady-state, {result.compile_s:.0f}s one-off jit)")
+print(f"\nbest EDP = {result.best_value:.3e}")
+print(result.best_dataflow)
+
+# ----------------------------------------------------------------------
+# 2. Table 3 comparison at the same hardware point.
+# ----------------------------------------------------------------------
+hw = HWConfig(num_pes=PES, noc_bw=BW, noc_latency=2.0)
+print("\nTable 3 baselines:")
+best_t3 = np.inf
+for name in TABLE3:
+    s = analyze(op, table3_for_layer(name, op), hw)
+    print(f"  {name:5s} edp={float(s.edp):.3e}")
+    best_t3 = min(best_t3, float(s.edp))
+print(f"mapping search vs best Table 3: {best_t3 / result.best_value:.2f}x "
+      f"better EDP")
+
+# ----------------------------------------------------------------------
+# 3. Joint mapping x hardware co-DSE on a coarse grid.
+# ----------------------------------------------------------------------
+cfg = DSEConfig(pe_range=tuple(range(64, 513, 64)),
+                bw_range=(8.0, 16.0, 32.0, 64.0))
+co = co_search(op, objective="edp", mapping_budget=600, top_k=3, cfg=cfg,
+               num_pes=PES, noc_bw=BW, seed=0, space=space,
+               include_table3=("KC-P",))
+print(f"\nco-DSE: {co.n_evaluated} total designs; merged Pareto frontier:")
+for p in co.pareto[:10]:
+    print(f"  {p['mapping']:28s} pes={p['num_pes']:4d} bw={p['noc_bw']:5.1f}"
+          f" energy={p['energy_pj']:.3e} thr={p['throughput']:.1f}")
+print(f"best EDP design: {co.best['edp']['mapping']} "
+      f"@ pes={co.best['edp']['num_pes']} bw={co.best['edp']['noc_bw']}")

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Smoke gate: quick tier-1 subset + quick benchmarks.
+# Full tier-1 is `PYTHONPATH=src python -m pytest -x -q` (see ROADMAP.md).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 quick subset =="
+python -m pytest -x -q \
+    tests/test_directives.py \
+    tests/test_reuse.py \
+    tests/test_engine.py \
+    tests/test_mapper.py \
+    tests/test_mapspace.py
+
+echo "== benchmarks --quick =="
+python -m benchmarks.run --quick
+
+echo "CI smoke gate passed."

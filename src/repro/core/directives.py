@@ -41,6 +41,15 @@ class Sz:
 Size = Union[int, Sz]
 
 
+def is_static_size(v) -> bool:
+    """True for plain Python ints (including FULL); False for Sz symbols and
+    traced jnp scalars.  Traced sizes appear when the mapping-space engine
+    vectorizes tile sizes (``repro.mapspace``): structural checks that would
+    force concretization are skipped for them — legality is enforced upstream
+    by the space definition."""
+    return isinstance(v, int) and not isinstance(v, bool)
+
+
 @dataclasses.dataclass(frozen=True)
 class TemporalMap:
     size: Size
@@ -85,11 +94,19 @@ def _resolve_size(v: Size, own_dim: str | None, dims: Mapping[str, int]):
             raise DataflowError(f"Sz({v.dim}) refers to unknown dim; "
                                 f"layer dims: {sorted(dims)}")
         return dims[v.dim]
-    if v == FULL:
+    if is_static_size(v) and v == FULL:
         if own_dim is None:
             raise DataflowError("Cluster size cannot be FULL")
         return dims[own_dim]
     return v
+
+
+def _clamp(v, full):
+    """min(v, full) that works for static ints and traced jnp scalars."""
+    if is_static_size(v):
+        return min(v, full)
+    import jax.numpy as jnp
+    return jnp.minimum(v, full)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,11 +179,13 @@ def validate(directives: Sequence[Directive]) -> None:
     seen_dims: set[str] = set()
 
     def _ok(v) -> bool:
-        return isinstance(v, Sz) or v == FULL or v > 0
+        if isinstance(v, Sz) or not is_static_size(v):
+            return True  # symbolic / traced — legality enforced upstream
+        return v == FULL or v > 0
 
     for d in directives:
         if isinstance(d, Cluster):
-            if not isinstance(d.size, Sz) and d.size <= 0:
+            if is_static_size(d.size) and d.size <= 0:
                 raise DataflowError(f"Cluster size must be > 0, got {d.size}")
             level += 1
             seen_dims = set()
@@ -199,8 +218,8 @@ def resolve(df: Dataflow, dims: dict[str, int]) -> Dataflow:
                 f"dataflow {df.name!r} maps unknown dim {d.dim!r}; "
                 f"layer dims: {sorted(dims)}")
         full = dims[d.dim]
-        size = min(_resolve_size(d.size, d.dim, dims), full)
-        offset = min(_resolve_size(d.offset, d.dim, dims), full)
+        size = _clamp(_resolve_size(d.size, d.dim, dims), full)
+        offset = _clamp(_resolve_size(d.offset, d.dim, dims), full)
         out.append(type(d)(size, offset, d.dim))
     return Dataflow(df.name, tuple(out))
 
@@ -302,3 +321,59 @@ def _parse_num(tok: str) -> Size:
     if m:
         return Sz(m.group(1).upper())
     return int(tok)
+
+
+# ----------------------------------------------------------------------
+# Divisor / legality helpers (used by the mapping-space engine)
+# ----------------------------------------------------------------------
+
+def divisors(n: int) -> tuple[int, ...]:
+    """All positive divisors of ``n`` in ascending order."""
+    if n <= 0:
+        raise ValueError(f"divisors() needs n > 0, got {n}")
+    small, large = [], []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            small.append(d)
+            if d != n // d:
+                large.append(n // d)
+        d += 1
+    return tuple(small + large[::-1])
+
+
+def tile_candidates(extent: int, max_candidates: int | None = None
+                    ) -> tuple[int, ...]:
+    """Candidate tile sizes for a dim of ``extent``: its divisor set, thinned
+    evenly (keeping 1 and the full extent) when larger than
+    ``max_candidates`` so space sizes stay controllable."""
+    divs = divisors(extent)
+    if max_candidates is None or len(divs) <= max_candidates or \
+            max_candidates < 2:
+        return divs
+    idx = {0, len(divs) - 1}
+    for i in range(1, max_candidates - 1):
+        idx.add(round(i * (len(divs) - 1) / (max_candidates - 1)))
+    return tuple(divs[i] for i in sorted(idx))
+
+
+def is_legal(df: Dataflow, dims: Mapping[str, int]) -> bool:
+    """Legality of a concrete directive program against layer dims: every
+    static map size/offset must be positive and no larger than the (extended)
+    extent of its dim.  Symbolic sizes are legal by construction (``resolve``
+    clamps them)."""
+    ext = dict(dims)
+    for d in df.directives:
+        for ref in _referenced_dims(d):
+            ext.setdefault(ref, 1)
+    for d in df.directives:
+        if isinstance(d, Cluster):
+            if is_static_size(d.size) and d.size <= 0:
+                return False
+            continue
+        for v in (d.size, d.offset):
+            if not is_static_size(v) or v == FULL:
+                continue
+            if v <= 0 or v > ext[d.dim]:
+                return False
+    return True

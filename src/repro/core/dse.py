@@ -151,20 +151,36 @@ def tile_variants(df: Dataflow, scales: Iterable[int] = (1, 2, 4),
                   dims: Iterable[str] = ("C", "K")) -> list[tuple[str, Dataflow]]:
     """Scale the concrete (non-symbolic) tile sizes of selected temporal
     maps — each variant implies a different buffer placement, which is how
-    the DSE explores the L1/L2 axes."""
+    the DSE explores the L1/L2 axes.
+
+    Symbolic (``Sz``/``FULL``) sizes are never scaled — they already mean
+    "the whole dim".  The variant tag names only the dims actually scaled
+    (e.g. ``x4[C]``); scales that scale nothing (every candidate directive
+    symbolic) are dropped instead of silently emitting duplicates of the
+    base dataflow under a misleading tag."""
     out: list[tuple[str, Dataflow]] = []
+    seen: set[tuple] = set()
     for sc in scales:
         dirs = []
+        scaled: list[str] = []
         for d in df.directives:
-            if (isinstance(d, TemporalMap) and d.dim in dims
+            if (sc != 1 and isinstance(d, TemporalMap) and d.dim in dims
                     and isinstance(d.size, int) and d.size > 0):
                 dirs.append(TemporalMap(max(1, d.size * sc),
                                         max(1, d.offset * sc)
                                         if isinstance(d.offset, int)
+                                        and d.offset > 0
                                         else d.offset, d.dim))
+                scaled.append(d.dim)
             else:
                 dirs.append(d)
-        out.append((f"x{sc}", Dataflow(df.name, tuple(dirs))))
+        variant = Dataflow(df.name, tuple(dirs))
+        if variant.directives in seen:
+            continue
+        seen.add(variant.directives)
+        tag = "base" if sc == 1 or not scaled \
+            else f"x{sc}[{','.join(scaled)}]"
+        out.append((tag, variant))
     return out
 
 

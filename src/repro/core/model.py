@@ -25,7 +25,7 @@ from .cluster_analysis import (Backend, LevelSpec, LoopInfo, py_backend,
                                spatial_phases, temporal_phases, unit_counts,
                                enumerate_cases)
 from .directives import (FULL, Dataflow, MapDirective, SpatialMap, complete,
-                         extended_dims)
+                         extended_dims, is_static_size)
 from .energy import DEFAULT_ENERGY, EnergyModel
 from .performance import (HWConfig, comm_delay, compute_delay,
                           reduction_fwd_delay)
@@ -91,8 +91,11 @@ def _build_level(xp: Backend, maps: tuple[MapDirective, ...],
     loops: list[LoopInfo] = []
     for d in maps:
         D = dims[d.dim]
-        size = D if d.size == FULL else d.size
-        offset = D if d.offset == FULL else d.offset
+        # FULL survives resolve() only for static programs; traced sizes
+        # (mapspace vectorization) can never be the sentinel.
+        size = D if is_static_size(d.size) and d.size == FULL else d.size
+        offset = D if is_static_size(d.offset) and d.offset == FULL \
+            else d.offset
         if d.dim not in aligned:
             offset = offset * op.stride_of(d.dim)  # CLA stride handling
         if isinstance(d, SpatialMap):

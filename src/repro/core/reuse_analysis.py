@@ -102,6 +102,24 @@ def advancing_loop(level: LevelSpec) -> LoopInfo | None:
     return None
 
 
+def _is_advancing(level: LevelSpec, inner: LoopInfo, xp: Backend):
+    """1/0 indicator that ``inner`` is this level's advancing loop — the
+    innermost temporal map that actually iterates (see
+    :func:`advancing_loop`).  Equivalent to ``inner is advancing_loop(level)``
+    for static trip counts, but expressed through the backend facade so the
+    vectorized engine (traced tile sizes) evaluates the same rule instead of
+    concretizing a Python branch."""
+    if inner.is_spatial:
+        return 0
+    ind = xp.where(inner.total_steps() > 1, 1, 0)
+    for lp in reversed(level.loops):
+        if lp is inner:
+            break
+        if not lp.is_spatial:
+            ind = ind * xp.eq(lp.total_steps(), 1)
+    return ind
+
+
 def spatial_reduction_active(op: LayerOp, level: LevelSpec) -> bool:
     """True when sub-units produce partial sums for the *same* outputs:
     either a reduction dim (C) is spatially mapped, or an aligned pair of
@@ -158,8 +176,12 @@ def classify_tensor(op: LayerOp, t: TensorSpec, level: LevelSpec
 def _lt(a, b) -> bool:
     try:
         return bool(a < b)
-    except Exception:  # traced — halo decision must be static
-        raise ValueError("directive size/offset must be static Python ints")
+    except Exception:
+        # Traced size/offset (mapspace vectorization).  The classification is
+        # reporting-only metadata — the traffic math below is closed-form and
+        # never consumes it — so fall back to the disjoint-tiling class
+        # rather than forcing concretization.
+        return False
 
 
 def classify_level(op: LayerOp, level: LevelSpec) -> dict[str, TensorReuse]:
@@ -274,8 +296,6 @@ def analyze_level_traffic(op: LayerOp, level: LevelSpec, xp: Backend,
     for lp in loops:
         total_steps = total_steps * lp.total_steps()
 
-    adv = advancing_loop(level)
-
     for t in op.input_tensors():
         coupled = [lp for lp in loops if t.coupled_to(lp.dim)]
         tile = tensor_volume(t, tiles, xp)
@@ -292,7 +312,11 @@ def analyze_level_traffic(op: LayerOp, level: LevelSpec, xp: Backend,
                                  override=_tile_override(inner, xp))
             dvol = xp.minimum(dvol, tile)
             ing = outer_prod * (tile + (n_in - 1) * dvol)
-            delta = dvol if (adv is not None and inner is adv) else tile
+            # delta = dvol iff `inner` is the advancing loop (the innermost
+            # temporal map with >1 steps); computed branch-free so traced
+            # tile sizes (mapspace) give the exact same rule as static ints.
+            ind = _is_advancing(level, inner, xp)
+            delta = ind * dvol + (1 - ind) * tile
         ingress[t.name] = ing
         # destinations per datum across sub-units
         if sps and not any(t.coupled_to(d) for d in sdims):
@@ -316,7 +340,10 @@ def analyze_level_traffic(op: LayerOp, level: LevelSpec, xp: Backend,
     # reduction loops outer to the innermost O-coupled loop force spills
     spill = 1
     if o_coupled:
-        inner_idx = loops.index(o_coupled[-1])
+        # identity search — list.index would value-compare LoopInfo
+        # dataclasses, concretizing traced phase fields
+        inner_idx = next(i for i, lp in enumerate(loops)
+                         if lp is o_coupled[-1])
         for i, lp in enumerate(loops):
             if i < inner_idx and lp.dim in red_dims:
                 spill = spill * lp.total_steps()

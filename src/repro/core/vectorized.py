@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from .cluster_analysis import hybrid_backend
-from .directives import Dataflow
+from .directives import Cluster, Dataflow
 from .model import analyze
 from .performance import HWConfig
 from .tensor_analysis import LayerOp
@@ -126,3 +126,69 @@ def evaluate_grid(op: LayerOp, df: Dataflow, num_pes, noc_bw,
     f = batched_evaluator(op, df, **kw)
     feats = f(jnp.asarray(num_pes), jnp.asarray(noc_bw))
     return BatchStats.from_features(feats)
+
+
+# ----------------------------------------------------------------------
+# Tile-size-traced twin: the mapping-space axis (repro.mapspace)
+# ----------------------------------------------------------------------
+#
+# The hardware DSE above holds the dataflow fixed and traces (num_pes,
+# noc_bw).  The mapping search needs the dual: hardware fixed, *tile sizes*
+# traced, so thousands of candidate mappings that share one directive
+# structure (same dims, order, spatial choice, cluster nesting) run through
+# a single jit+vmap executable.  Trip counts, iteration-case occurrences and
+# tile volumes all become traced values; the case *structure* (number of
+# cases, loop order) stays static per template, which is exactly what the
+# mapspace engine groups candidates by.
+#
+# Sizes are traced as float32: volume products reach ~1e10 on real layers,
+# which would overflow int32 (JAX's default int width).  Small-integer phase
+# arithmetic (trip counts, equality tests) stays exact in float32 far beyond
+# any realistic dim extent (< 2^24).
+
+@functools.lru_cache(maxsize=512)
+def _build_tile_eval(op_key, df_key, var_slots: tuple[int, ...],
+                     num_pes: int, noc_bw: float, multicast: bool,
+                     reduction: bool, latency: float,
+                     macs_per_pe: int) -> Callable:
+    op, template = _OP_REG[op_key], _DF_REG[df_key]
+    hw = HWConfig(num_pes=num_pes, noc_bw=noc_bw, noc_latency=latency,
+                  multicast=multicast, spatial_reduction=reduction,
+                  macs_per_pe=macs_per_pe)
+
+    def eval_one(sizes, offsets):
+        sizes = sizes.astype(jnp.float32)
+        offsets = offsets.astype(jnp.float32)
+        dirs = list(template.directives)
+        for j, slot in enumerate(var_slots):
+            d = dirs[slot]
+            if isinstance(d, Cluster):
+                dirs[slot] = Cluster(sizes[j])
+            else:
+                dirs[slot] = type(d)(sizes[j], offsets[j], d.dim)
+        df = Dataflow(template.name, tuple(dirs))
+        return stats_vector(op, df, hw)
+
+    return jax.jit(jax.vmap(eval_one))
+
+
+def batched_tile_evaluator(op: LayerOp, template: Dataflow,
+                           var_slots: tuple[int, ...], *,
+                           num_pes: int, noc_bw: float,
+                           multicast: bool = True,
+                           spatial_reduction: bool = True,
+                           noc_latency: float = 2.0,
+                           macs_per_pe: int = 1) -> Callable:
+    """Returns ``f(sizes[i, S], offsets[i, S]) -> features[i, F]``.
+
+    ``template`` is a structurally-complete directive program whose
+    directives at positions ``var_slots`` have placeholder size/offset; the
+    evaluator substitutes row ``i`` of the operand arrays for them (a
+    ``Cluster`` slot consumes only its size column).  Hardware parameters
+    are static per executable — the mapping search runs at a fixed reference
+    design, and the co-DSE re-enters :func:`batched_evaluator` with the
+    winning concrete mappings."""
+    ok, dk = _reg(op, template)
+    return _build_tile_eval(ok, dk, tuple(var_slots), int(num_pes),
+                            float(noc_bw), multicast, spatial_reduction,
+                            noc_latency, macs_per_pe)

@@ -1,0 +1,159 @@
+"""CLI for the mapping-space search engine (``repro.mapspace``).
+
+Examples::
+
+    # best EDP mapping for VGG16 conv1_2 at the Fig. 10 reference design
+    PYTHONPATH=src python -m repro.launch.mapsearch --model vgg16 --layer 1
+
+    # joint mapping x hardware co-DSE with Table 3 baselines on the frontier
+    PYTHONPATH=src python -m repro.launch.mapsearch --model resnet50 \
+        --layer conv2 --objective edp --co-dse --budget 1500
+
+    # list a model's layers
+    PYTHONPATH=src python -m repro.launch.mapsearch --model vgg16 \
+        --list-layers
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.core import dnn_models as zoo
+from repro.core.dataflows import TABLE3, table3_for_layer
+from repro.core.dse import DSEConfig
+from repro.core.model import analyze
+from repro.core.performance import HWConfig
+from repro.mapspace import build_space, co_search, search
+
+DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache",
+                             "repro-mapspace")
+
+
+def _pick_layer(layers, which: str):
+    if which.isdigit():
+        return layers[int(which)]
+    matches = [l for l in layers if which in l.name]
+    if not matches:
+        raise SystemExit(f"no layer matching {which!r}; "
+                         f"try --list-layers")
+    return matches[0]
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.4g}"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="vgg16",
+                    choices=sorted(zoo.MODELS))
+    ap.add_argument("--layer", default="0",
+                    help="layer index or name substring (default: 0)")
+    ap.add_argument("--list-layers", action="store_true")
+    ap.add_argument("--objective", default="edp",
+                    choices=["edp", "energy", "runtime", "throughput"])
+    ap.add_argument("--budget", type=int, default=1000,
+                    help="max mappings to evaluate")
+    ap.add_argument("--pes", type=int, default=256)
+    ap.add_argument("--bw", type=float, default=32.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "exhaustive", "random", "greedy"])
+    ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--dims", default=None,
+                    help="comma-separated searched dims (default: auto)")
+    ap.add_argument("--no-cluster", action="store_true",
+                    help="exclude two-level (Cluster) mappings")
+    ap.add_argument("--max-groups", type=int, default=12,
+                    help="structure groups to explore (one jit each)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny space + budget (smoke test)")
+    ap.add_argument("--co-dse", action="store_true",
+                    help="cross top-k mappings with the hardware DSE grid")
+    ap.add_argument("--cache-dir", default=DEFAULT_CACHE,
+                    help="on-disk result cache ('' disables)")
+    args = ap.parse_args(argv)
+
+    layers = zoo.MODELS[args.model]()
+    if args.list_layers:
+        for i, l in enumerate(layers):
+            print(f"{i:3d} {l.op_type:10s} {l.name} {l.dims}")
+        return
+    op = _pick_layer(layers, args.layer)
+    print(f"# layer {op.name} {op.op_type} {op.dims}")
+
+    if args.quick:
+        dims = tuple(args.dims.split(",")) if args.dims else \
+            (("K", "C") if "K" in op.dims else None)
+        space = build_space(op, dims=dims, cluster=False)
+        budget = min(args.budget, 200)
+    else:
+        dims = tuple(args.dims.split(",")) if args.dims else None
+        space = build_space(op, dims=dims, cluster=not args.no_cluster)
+        budget = args.budget
+    print(f"# space: {space.size} mappings in {space.n_groups} "
+          f"structure groups")
+
+    r = search(op, objective=args.objective, budget=budget, space=space,
+               num_pes=args.pes, noc_bw=args.bw, strategy=args.strategy,
+               seed=args.seed, top_k=args.top_k,
+               max_groups=args.max_groups,
+               cache_dir=args.cache_dir or None)
+    tag = " (cached)" if r.cached else ""
+    print(f"# strategy={r.strategy}{tag} evaluated={r.n_evaluated} "
+          f"groups={r.n_groups} eval={r.eval_s:.2f}s "
+          f"compile={r.compile_s:.1f}s "
+          f"rate={r.mappings_per_s / 1e6:.2f}M mappings/s")
+    print(f"\nbest {args.objective} = {_fmt(r.best_value)}")
+    print(r.best_dataflow)
+    s = r.best_stats
+    print(f"runtime={_fmt(s['runtime'])}cy energy={_fmt(s['energy_pj'])}pJ "
+          f"util={s['util']:.2f} l1={_fmt(s['l1_kb'])}KB "
+          f"l2={_fmt(s['l2_kb'])}KB")
+
+    # Table 3 baselines at the same hardware point
+    hw = HWConfig(num_pes=args.pes, noc_bw=args.bw, noc_latency=2.0)
+    print("\n# Table 3 baselines (same hardware):")
+    best_t3 = None
+    for f in TABLE3:
+        st = analyze(op, table3_for_layer(f, op), hw)
+        vals = {"edp": float(st.edp), "energy": float(st.energy_pj),
+                "runtime": float(st.runtime),
+                "throughput": float(st.throughput)}
+        v = vals[args.objective]
+        print(f"  {f:5s} {args.objective}={_fmt(v)}")
+        if best_t3 is None or \
+                (v > best_t3 if args.objective == "throughput"
+                 else v < best_t3):
+            best_t3 = v
+    if args.objective == "throughput":
+        imp = r.best_value / best_t3
+    else:
+        imp = best_t3 / r.best_value
+    print(f"# best-found vs best-Table-3: {imp:.2f}x")
+
+    if args.co_dse:
+        cfg = DSEConfig(pe_range=tuple(range(32, 513, 32)),
+                        bw_range=tuple(float(b) for b in range(4, 65, 4)))
+        co = co_search(op, objective=args.objective,
+                       mapping_budget=budget, top_k=min(args.top_k, 4),
+                       cfg=cfg, num_pes=args.pes, noc_bw=args.bw,
+                       seed=args.seed, space=space,
+                       include_table3=list(TABLE3),
+                       cache_dir=args.cache_dir or None)
+        print(f"\n# co-DSE: {co.n_evaluated} designs in "
+              f"{co.elapsed_s:.1f}s; merged Pareto frontier "
+              f"({len(co.pareto)} points, energy vs throughput):")
+        for p in co.pareto[:12]:
+            print(f"  {p['mapping']:28s} pes={p['num_pes']:4d} "
+                  f"bw={p['noc_bw']:5.1f} energy={_fmt(p['energy_pj'])} "
+                  f"thr={_fmt(p['throughput'])}")
+        for obj, p in co.best.items():
+            if p:
+                print(f"  best {obj:10s}: {p['mapping']} "
+                      f"pes={p['num_pes']} bw={p['noc_bw']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Mapping-space search engine: auto-search over legal data-centric
+directive programs plus joint mapping × hardware co-DSE.
+
+Quick start::
+
+    from repro.core import tensor_analysis as ta
+    from repro.mapspace import search
+
+    op = ta.conv2d("conv", k=128, c=64, y=32, x=32, r=3, s=3)
+    result = search(op, objective="edp", budget=1000)
+    print(result.best_dataflow)
+    print(result.best_stats["edp"], result.mappings_per_s)
+
+See ``repro.launch.mapsearch`` for the CLI.
+"""
+from .batched import EvalStats, evaluate_points, measure_rate
+from .codse import CoDSEResult, co_search, merged_pareto
+from .search import OBJECTIVES, SearchResult, search
+from .space import (ClusterOption, MapSpace, MapSpaceError, TileAxis,
+                    build_space, enumerate_points, group_template,
+                    point_dataflow, sample_points)
+
+__all__ = [
+    "ClusterOption", "CoDSEResult", "EvalStats", "MapSpace",
+    "MapSpaceError", "OBJECTIVES", "SearchResult", "TileAxis",
+    "build_space", "co_search", "enumerate_points", "evaluate_points",
+    "group_template", "measure_rate", "merged_pareto", "point_dataflow",
+    "sample_points", "search",
+]

@@ -1,0 +1,63 @@
+"""On-disk result cache for mapping searches.
+
+Keyed by ``(layer, space, hardware, objective, budget, strategy, seed)`` so
+a repeated query — same layer swept again in a bigger co-DSE, a re-run CLI
+invocation, a notebook re-execution — returns instantly instead of paying
+the jit + evaluation cost.  Values are small JSON payloads (the winning
+gene tuples and their feature rows), not feature matrices, so the cache
+stays tiny and diff-friendly.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Any
+
+from ..core.tensor_analysis import LayerOp
+from .space import MapSpace
+
+CACHE_VERSION = 1
+
+
+def op_fingerprint(op: LayerOp) -> str:
+    txt = f"{op.name}|{op.op_type}|{sorted(op.dims.items())}"
+    return hashlib.sha256(txt.encode()).hexdigest()[:16]
+
+
+def search_key(op: LayerOp, space: MapSpace, num_pes: int, noc_bw: float,
+               objective: str, budget: int, strategy: str, seed: int,
+               extra: str = "") -> str:
+    txt = "|".join([
+        f"v{CACHE_VERSION}", op_fingerprint(op), space.fingerprint(),
+        f"pes={num_pes}", f"bw={noc_bw}", objective, f"budget={budget}",
+        strategy, f"seed={seed}", extra])
+    return hashlib.sha256(txt.encode()).hexdigest()[:24]
+
+
+def _path(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, f"mapsearch-{key}.json")
+
+
+def load(cache_dir: str | None, key: str) -> dict[str, Any] | None:
+    if not cache_dir:
+        return None
+    try:
+        with open(_path(cache_dir, key)) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if payload.get("version") != CACHE_VERSION:
+        return None
+    return payload
+
+
+def store(cache_dir: str | None, key: str, payload: dict[str, Any]) -> None:
+    if not cache_dir:
+        return
+    os.makedirs(cache_dir, exist_ok=True)
+    payload = dict(payload, version=CACHE_VERSION)
+    tmp = _path(cache_dir, key) + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, _path(cache_dir, key))

@@ -1,0 +1,111 @@
+"""Joint mapping × hardware co-DSE (the paper's full 480M-design search,
+both axes at once).
+
+``co_search`` first runs the mapping search at a reference hardware point,
+then crosses the top-k distinct mappings with the existing hardware DSE grid
+(``core.dse.run_dse``: PEs × NoC bandwidth under area/power budgets, buffers
+placed per MAESTRO's reported requirement) and merges everything into one
+Pareto frontier.  Table 3 baselines can ride along in the same sweep so the
+frontier directly answers "what does mapping search buy over the paper's
+fixed dataflows?".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import numpy as np
+
+from ..core.dataflows import table3_for_layer
+from ..core.directives import Dataflow
+from ..core.dse import DSEConfig, DSEResult, run_dse
+from ..core.tensor_analysis import LayerOp
+from .search import SearchResult, search
+from .space import MapSpace
+
+
+@dataclasses.dataclass
+class CoDSEResult:
+    search: SearchResult
+    dse: list[tuple[str, DSEResult]]      # (mapping label, hw sweep)
+    pareto: list[dict[str, Any]]          # merged frontier, energy-sorted
+    best: dict[str, dict[str, Any] | None]  # per objective, across all
+    n_evaluated: int                      # mappings + hw designs
+    elapsed_s: float
+
+
+def merged_pareto(results: Sequence[tuple[str, DSEResult]],
+                  x: str = "energy_pj", y: str = "throughput"
+                  ) -> list[dict[str, Any]]:
+    """Valid-design Pareto frontier (min x, max y) across several hardware
+    sweeps; each frontier point carries its mapping label."""
+    pts = []
+    for label, r in results:
+        xs = np.asarray(getattr(r.stats, x))
+        ys = np.asarray(getattr(r.stats, y))
+        for i in np.where(r.valid)[0]:
+            pts.append((float(xs[i]), float(ys[i]), label, r, int(i)))
+    pts.sort(key=lambda t: (t[0], -t[1]))
+    front: list[dict[str, Any]] = []
+    best_y = -np.inf
+    for xv, yv, label, r, i in pts:
+        if yv > best_y:
+            best_y = yv
+            front.append({"mapping": label, x: xv, y: yv, **r.point(i)})
+    return front
+
+
+def co_search(op: LayerOp, objective: str = "edp",
+              mapping_budget: int = 2000, top_k: int = 4,
+              cfg: DSEConfig | None = None, *, num_pes: int = 256,
+              noc_bw: float = 32.0, seed: int = 0,
+              space: MapSpace | None = None,
+              include_table3: Sequence[str] = (),
+              cache_dir: str | None = None,
+              search_kwargs: dict[str, Any] | None = None) -> CoDSEResult:
+    """Joint DSE: mapping search at ``(num_pes, noc_bw)``, then the hardware
+    grid for each of the ``top_k`` distinct found mappings (plus any
+    requested Table 3 baselines), merged into one Pareto frontier."""
+    t0 = time.perf_counter()
+    sr = search(op, objective=objective, budget=mapping_budget,
+                space=space, num_pes=num_pes, noc_bw=noc_bw, seed=seed,
+                cache_dir=cache_dir, **(search_kwargs or {}))
+
+    flows: list[tuple[str, Dataflow]] = []
+    seen: set[tuple] = set()
+    from .space import point_dataflow
+    for entry in sr.top_k:
+        df = point_dataflow(sr.space, entry["point"])
+        if df.directives in seen:
+            continue
+        seen.add(df.directives)
+        flows.append((df.name, df))
+        if len(flows) >= top_k:
+            break
+    for name in include_table3:
+        flows.append((f"table3:{name}", table3_for_layer(name, op)))
+
+    cfg = cfg or DSEConfig()
+    sweeps: list[tuple[str, DSEResult]] = []
+    for label, df in flows:
+        sweeps.append((label, run_dse(op, df, cfg, tile_tag=label)))
+
+    best: dict[str, dict[str, Any] | None] = {}
+    for obj in ("throughput", "energy", "edp"):
+        cands = [dict(r.best(obj), mapping=label)
+                 for label, r in sweeps if r.n_valid]
+        if not cands:
+            best[obj] = None
+            continue
+        sign = (lambda p: -p["throughput"]) if obj == "throughput" else \
+            (lambda p: p["energy_pj"] if obj == "energy" else p["edp"])
+        best[obj] = min(cands, key=sign)
+
+    return CoDSEResult(
+        search=sr,
+        dse=sweeps,
+        pareto=merged_pareto(sweeps),
+        best=best,
+        n_evaluated=sr.n_evaluated + sum(r.n_evaluated for _, r in sweeps),
+        elapsed_s=time.perf_counter() - t0)

@@ -1,0 +1,341 @@
+"""Mapping-space definition: the legal data-centric programs for a layer.
+
+The paper's 480M-design search has two axes: hardware (``core.dse``) and
+*mapping* — which this module defines.  A candidate mapping is encoded as a
+small integer gene tuple::
+
+    point = (spatial_idx, perm_idx, cluster_idx, tile_0, ..., tile_{A-1})
+
+over a :class:`MapSpace` with
+
+  * one :class:`TileAxis` per searched layer dim, whose candidate tile sizes
+    come from the dim's divisor set (``directives.tile_candidates``) — for
+    sliding-window outer dims (Y/X of a conv) candidates tile the *output*
+    extent and carry the input halo, so every tile yields whole outputs;
+  * a choice of which axis is spatially mapped (the paper's partitioning
+    strategy, Table 3's "-P" suffix);
+  * a permutation of the axes (the data-movement order);
+  * an optional second cluster level (``Cluster(c); SpatialMap(1,1) d`` —
+    the NVDLA/Eyeriss-style nesting of Table 3).
+
+Window dims themselves (R/S) are pinned fully-unrolled with symbolic
+``Sz(...)`` sizes, exercising ``resolve``/``complete`` exactly like the
+Table 3 programs.  Legality is enforced at construction: every tile size
+divides (window dims: tiles the output of) its dim, so no directive ever
+exceeds its extent — points never need post-hoc filtering.
+
+Points sharing ``(spatial_idx, perm_idx, cluster_idx)`` share one directive
+*structure* and differ only in tile sizes, which is precisely the grouping
+the batched evaluator (``mapspace.batched``) vectorizes over.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from ..core.directives import (Cluster, Dataflow, SpatialMap, Sz,
+                               TemporalMap, tile_candidates)
+from ..core.tensor_analysis import ConvExpr, LayerOp
+
+Point = tuple  # (spatial_idx, perm_idx, cluster_idx, *tile_idxs)
+GroupKey = tuple  # (spatial_idx, perm_idx, cluster_idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileAxis:
+    """Candidate (size, offset) pairs for one searched dim.  For window-outer
+    dims the offset is in *output* steps (the engine stride-scales it), for
+    plain dims offset == size (disjoint tiling — no recompute)."""
+    dim: str
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.sizes) != len(self.offsets) or not self.sizes:
+            raise ValueError(f"axis {self.dim}: sizes/offsets mismatch")
+
+    @property
+    def n(self) -> int:
+        return len(self.sizes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterOption:
+    """Second cluster level: ``Cluster(size); SpatialMap(inner_size,
+    inner_offset) inner_dim``.  For window-outer inner dims (X/Y of a conv)
+    the inner map slides — ``SpatialMap(Sz(S),1) X`` — which is exactly the
+    ShiDianNao/Eyeriss-style nesting of Table 3's YX-P/YR-P; plain dims get
+    the NVDLA-style unit mapping ``SpatialMap(1,1)``."""
+    size: int
+    inner_dim: str
+    inner_size: int | Sz = 1
+    inner_offset: int | Sz = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MapSpace:
+    op_name: str
+    dims: tuple[tuple[str, int], ...]       # layer dims (fingerprint anchor)
+    axes: tuple[TileAxis, ...]
+    perms: tuple[tuple[int, ...], ...]      # axis-index orderings
+    spatial_choices: tuple[int, ...]        # axis indices
+    cluster_options: tuple[ClusterOption | None, ...]
+    pinned: tuple[str, ...]                 # window dims, fully unrolled
+
+    # ------------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        n = len(self.spatial_choices) * len(self.perms) \
+            * len(self.cluster_options)
+        for ax in self.axes:
+            n *= ax.n
+        return n
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.spatial_choices) * len(self.perms) \
+            * len(self.cluster_options)
+
+    def group_key(self, point: Point) -> GroupKey:
+        return tuple(point[:3])
+
+    def group_keys(self) -> list[GroupKey]:
+        return [  # deterministic order: spatial outer, then perm, cluster
+            (s, p, c)
+            for s in range(len(self.spatial_choices))
+            for p in range(len(self.perms))
+            for c in range(len(self.cluster_options))]
+
+    def gene_ranges(self) -> tuple[int, ...]:
+        return (len(self.spatial_choices), len(self.perms),
+                len(self.cluster_options)) + tuple(ax.n for ax in self.axes)
+
+    def fingerprint(self) -> str:
+        txt = "|".join([
+            self.op_name, str(self.dims),
+            str([(ax.dim, ax.sizes, ax.offsets) for ax in self.axes]),
+            str(self.perms), str(self.spatial_choices),
+            str(self.cluster_options), str(self.pinned)])
+        return hashlib.sha256(txt.encode()).hexdigest()[:16]
+
+
+class MapSpaceError(ValueError):
+    pass
+
+
+# ----------------------------------------------------------------------
+# Construction
+# ----------------------------------------------------------------------
+
+def _window_info(op: LayerOp) -> dict[str, tuple[str, int]]:
+    """outer dim -> (window dim, stride) for the op's output sliding
+    windows (input-centric convs)."""
+    out = {}
+    for e in op.output.entries:
+        if isinstance(e, ConvExpr):
+            out[e.outer] = (e.window, e.stride)
+    return out
+
+
+def _pinned_dims(op: LayerOp) -> tuple[str, ...]:
+    """Window (filter-tap) dims: R/S of a conv — pinned fully unrolled."""
+    pinned = []
+    for t in (op.output, op.input):
+        for e in t.entries:
+            w = getattr(e, "window", None)
+            if w and w in op.dims and w not in pinned:
+                pinned.append(w)
+    return tuple(pinned)
+
+
+def build_space(op: LayerOp, *,
+                dims: Sequence[str] | None = None,
+                spatial_dims: Sequence[str] | None = None,
+                max_tiles_per_dim: int = 6,
+                perm_mode: str = "auto",
+                cluster: bool = True,
+                cluster_sizes: Sequence[int] = (64,),
+                cluster_inner_dims: Sequence[str] | None = None) -> MapSpace:
+    """Derive the default legal mapping space for ``op``.
+
+    ``perm_mode``: ``"all"`` enumerates every axis ordering, ``"rotations"``
+    only the cyclic shifts of the canonical order (one choice of innermost
+    axis each — the order decision that dominates reuse), ``"auto"`` picks
+    ``all`` for ≤3 axes else ``rotations``.  Keeping the structural axes
+    small matters: each (spatial × perm × cluster) combination is a separate
+    XLA executable; tile axes are free (vectorized).
+    """
+    windows = _window_info(op)
+    pinned = _pinned_dims(op)
+    if dims is None:
+        dims = [d for d in op.dims
+                if op.dims[d] > 1 and d not in pinned and d != "N"]
+    dims = list(dims)
+    if not dims:
+        raise MapSpaceError(f"{op.name}: no searchable dims")
+    for d in dims:
+        if d not in op.dims:
+            raise MapSpaceError(f"{op.name}: unknown dim {d!r}")
+        if d in pinned:
+            raise MapSpaceError(f"{op.name}: {d!r} is a window dim (pinned)")
+
+    axes = []
+    for d in dims:
+        extent = op.dims[d]
+        if d in windows:
+            w, stride = windows[d]
+            out_extent = (extent - op.dims[w]) // stride + 1
+            cand = tile_candidates(max(out_extent, 1), max_tiles_per_dim)
+            sizes = tuple((t - 1) * stride + op.dims[w] for t in cand)
+            offsets = cand  # output steps; the CLA engine stride-scales
+        else:
+            cand = tile_candidates(extent, max_tiles_per_dim)
+            sizes = offsets = cand
+        axes.append(TileAxis(d, sizes, offsets))
+
+    a = len(axes)
+    if perm_mode == "auto":
+        perm_mode = "all" if a <= 3 else "rotations"
+    if perm_mode == "all":
+        perms = tuple(itertools.permutations(range(a)))
+    elif perm_mode == "rotations":
+        base = tuple(range(a))
+        perms = tuple(base[r:] + base[:r] for r in range(a))
+    else:
+        raise MapSpaceError(f"unknown perm_mode {perm_mode!r}")
+
+    if spatial_dims is None:
+        spatial_dims = dims
+    spatial_choices = tuple(dims.index(d) for d in spatial_dims)
+
+    options: list[ClusterOption | None] = [None]
+    if cluster:
+        if cluster_inner_dims is None:
+            red = op.reduction_dims()
+            cluster_inner_dims = [d for d in dims
+                                  if d in red and op.dims[d] > 1][:1]
+            # plus one sliding-window inner (the YX-P/YR-P nesting style)
+            win_outer = [d for d in windows if op.dims[d] > 1]
+            cluster_inner_dims += win_outer[-1:]
+        for d in cluster_inner_dims:
+            if d in windows:
+                w, stride = windows[d]
+                useful = (op.dims[d] - op.dims[w]) // stride + 1
+                inner: tuple = (Sz(w), 1)
+            else:
+                useful = op.dims[d]
+                inner = (1, 1)
+            for c in dict.fromkeys(min(c, useful) for c in cluster_sizes):
+                if c > 1:
+                    options.append(ClusterOption(c, d, *inner))
+
+    return MapSpace(
+        op_name=op.name,
+        dims=tuple(sorted(op.dims.items())),
+        axes=tuple(axes),
+        perms=perms,
+        spatial_choices=spatial_choices,
+        cluster_options=tuple(options),
+        pinned=pinned,
+    )
+
+
+# ----------------------------------------------------------------------
+# Point <-> Dataflow
+# ----------------------------------------------------------------------
+
+def point_dataflow(space: MapSpace, point: Point,
+                   name: str | None = None) -> Dataflow:
+    """Materialize one gene tuple as a concrete directive program."""
+    s_i, p_i, c_i = point[:3]
+    tiles = point[3:]
+    spatial_axis = space.spatial_choices[s_i]
+    dirs = []
+    for ai in space.perms[p_i]:
+        ax = space.axes[ai]
+        t = tiles[ai]
+        cls = SpatialMap if ai == spatial_axis else TemporalMap
+        dirs.append(cls(ax.sizes[t], ax.offsets[t], ax.dim))
+    for d in space.pinned:
+        dirs.append(TemporalMap(Sz(d), Sz(d), d))
+    copt = space.cluster_options[c_i]
+    if copt is not None:
+        dirs.append(Cluster(copt.size))
+        dirs.append(SpatialMap(copt.inner_size, copt.inner_offset,
+                               copt.inner_dim))
+    if name is None:
+        name = f"ms:{space.op_name}:" + "-".join(str(g) for g in point)
+    return Dataflow(name, tuple(dirs))
+
+
+def group_template(space: MapSpace, key: GroupKey
+                   ) -> tuple[Dataflow, tuple[int, ...]]:
+    """Placeholder program + variable directive slots for one structural
+    group.  Operand column ``j`` of the batched evaluator corresponds to the
+    ``j``-th directive, i.e. axis ``space.perms[p][j]``."""
+    s_i, p_i, c_i = key
+    point = (s_i, p_i, c_i) + tuple(0 for _ in space.axes)
+    df = point_dataflow(space, point, name=f"ms-tmpl:{space.op_name}:"
+                                           f"{s_i}-{p_i}-{c_i}")
+    return df, tuple(range(len(space.axes)))
+
+
+def point_operands(space: MapSpace, points: Sequence[Point]
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Stack (sizes, offsets) operand rows for points of ONE group, columns
+    in the group's perm order."""
+    p_i = points[0][1]
+    perm = space.perms[p_i]
+    n, a = len(points), len(space.axes)
+    sizes = np.empty((n, a), np.float32)
+    offsets = np.empty((n, a), np.float32)
+    for i, pt in enumerate(points):
+        tiles = pt[3:]
+        for j, ai in enumerate(perm):
+            ax = space.axes[ai]
+            sizes[i, j] = ax.sizes[tiles[ai]]
+            offsets[i, j] = ax.offsets[tiles[ai]]
+    return sizes, offsets
+
+
+# ----------------------------------------------------------------------
+# Enumeration / sampling
+# ----------------------------------------------------------------------
+
+def enumerate_points(space: MapSpace) -> Iterator[Point]:
+    """All points, grouped (structural genes outermost) so consumers hit
+    each jit group exactly once."""
+    for s, p, c in space.group_keys():
+        for tiles in itertools.product(*[range(ax.n) for ax in space.axes]):
+            yield (s, p, c) + tiles
+
+
+def sample_points(space: MapSpace, rng: np.random.Generator, n: int,
+                  group_keys: Sequence[GroupKey] | None = None,
+                  exclude: set[Point] | None = None) -> list[Point]:
+    """Up to ``n`` distinct uniform points (optionally restricted to a group
+    subset), deterministic under the caller's rng."""
+    keys = list(group_keys) if group_keys is not None \
+        else space.group_keys()
+    out: list[Point] = []
+    seen = set(exclude) if exclude else set()
+    tiles_per_group = 1
+    for ax in space.axes:
+        tiles_per_group *= ax.n
+    limit = len(keys) * tiles_per_group
+    attempts = 0
+    while len(out) < n and attempts < 20 * n and len(seen) < limit + \
+            (len(exclude) if exclude else 0):
+        attempts += 1
+        key = keys[int(rng.integers(len(keys)))]
+        tiles = tuple(int(rng.integers(ax.n)) for ax in space.axes)
+        pt = key + tiles
+        if pt in seen:
+            continue
+        seen.add(pt)
+        out.append(pt)
+    return out

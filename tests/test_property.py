@@ -1,4 +1,10 @@
 """Hypothesis property tests on the analytical engine's invariants."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install hypothesis)")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
