@@ -233,14 +233,20 @@ def bench_dse_rate(quick: bool) -> None:
 
 def bench_mapspace(quick: bool) -> None:
     """Mapping-space auto-search (repro.mapspace): batched mappings/s vs
-    the paper's 0.17M designs/s, and best-found-vs-Table-3 EDP improvement
-    per VGG16/ResNet50 layer."""
+    the paper's 0.17M designs/s, best-found-vs-Table-3 EDP improvement per
+    VGG16/ResNet50 layer, and the universal evaluator's compile count
+    (must stay O(1) per layer family, not O(structure groups)).
+
+    Also writes ``BENCH_mapspace.json`` next to the CSVs so CI can track
+    the perf trajectory (rate, compiles, wall-clock) per PR."""
+    import json
     from repro.mapspace import build_space, measure_rate, search
+    from repro.mapspace.universal import compile_count
     t0 = time.perf_counter()
     if quick:
         layers = [l for l in zoo.vgg16() if l.op_type == "CONV2D"][-1:]
         mk_space = lambda l: build_space(l, dims=("K", "C"), cluster=False)
-        budget, max_groups = 200, 4
+        budget = 200
     else:
         vgg = [l for l in zoo.vgg16() if l.op_type == "CONV2D"]
         rn = [l for l in zoo.resnet50() if l.op_type == "CONV2D"]
@@ -249,34 +255,54 @@ def bench_mapspace(quick: bool) -> None:
             l, dims=tuple(d for d in ("K", "C", "X") if l.dims.get(d, 1) > 1),
             spatial_dims=tuple(d for d in ("K", "C") if l.dims.get(d, 1) > 1),
             perm_mode="rotations", cluster_sizes=(64,))
-        budget, max_groups = 600, 6
+        budget = 600
     rows = []
     min_imp = float("inf")
     n_eval = 0
+    n_compiles = 0
+    compile_s = 0.0
     rate = 0.0
+    c_before = compile_count()
     for li, l in enumerate(layers):
         space = mk_space(l)
         r = search(l, objective="edp", budget=budget, space=space,
-                   seed=0, num_pes=HW.num_pes, noc_bw=HW.noc_bw,
-                   max_groups=max_groups)
+                   seed=0, num_pes=HW.num_pes, noc_bw=HW.noc_bw)
         n_eval += r.n_evaluated
+        n_compiles += r.n_compiles
+        compile_s += r.compile_s
         best_t3 = min(float(analyze(l, table3_for_layer(f, l), HW).edp)
                       for f in FLOWS)
         imp = best_t3 / r.best_value
         min_imp = min(min_imp, imp)
         if li == 0:
-            # steady-state batched rate on one already-built space (the
+            # steady-state batched rate over mixed-structure rows (the
             # number comparable to the paper's DSE designs/s)
             rate = measure_rate(l, space, num_pes=HW.num_pes,
                                 noc_bw=HW.noc_bw, seconds=1.5)
-        rows.append([l.name, space.size, r.strategy, r.n_evaluated,
-                     r.best_value, best_t3, imp])
+        rows.append([l.name, space.size, space.n_groups, r.strategy,
+                     r.n_evaluated, r.n_compiles, r.best_value, best_t3,
+                     imp])
     _csv("mapspace_search.csv",
-         ["layer", "space_size", "strategy", "evaluated", "best_edp",
-          "best_table3_edp", "improvement"], rows)
-    us = (time.perf_counter() - t0) / max(n_eval, 1) * 1e6
+         ["layer", "space_size", "n_groups", "strategy", "evaluated",
+          "compiles", "best_edp", "best_table3_edp", "improvement"], rows)
+    elapsed = time.perf_counter() - t0
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "BENCH_mapspace.json"), "w") as f:
+        json.dump({
+            "quick": quick,
+            "layers": [l.name for l in layers],
+            "n_evaluated": n_eval,
+            "n_compiles": n_compiles,
+            "universal_compiles_process": compile_count() - c_before,
+            "compile_s": round(compile_s, 3),
+            "elapsed_s": round(elapsed, 3),
+            "steady_rate_mappings_per_s": rate,
+            "min_improvement_vs_table3": min_imp,
+        }, f, indent=2)
+    us = elapsed / max(n_eval, 1) * 1e6
     _emit("mapspace", us,
           f"rate={rate / 1e6:.2f}M_mappings_per_s;paper=0.17M/s;"
+          f"compiles={n_compiles};"
           f"min_improvement_vs_table3={min_imp:.2f}x")
 
 

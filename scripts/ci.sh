@@ -12,9 +12,25 @@ python -m pytest -x -q \
     tests/test_reuse.py \
     tests/test_engine.py \
     tests/test_mapper.py \
-    tests/test_mapspace.py
+    tests/test_mapspace.py \
+    tests/test_universal.py
 
 echo "== benchmarks --quick =="
 python -m benchmarks.run --quick
+
+echo "== bench_mapspace smoke artifact =="
+# BENCH_mapspace.json (written by the mapspace benchmark above) tracks the
+# perf trajectory per PR: mappings/s, universal-evaluator compile count,
+# and wall-clock.  CI uploads everything matching benchmarks/out/BENCH_*.
+test -f benchmarks/out/BENCH_mapspace.json
+python - <<'EOF'
+import json
+d = json.load(open("benchmarks/out/BENCH_mapspace.json"))
+print(json.dumps(d, indent=2))
+# <= 2 per (layer, level-count) + 2 for the rate-measure batch shapes;
+# the point is O(1) per layer family, never O(structure groups)
+assert d["universal_compiles_process"] <= 2 * len(d["layers"]) + 2, \
+    "compile count must stay O(1) per (layer, level-count), not O(groups)"
+EOF
 
 echo "CI smoke gate passed."

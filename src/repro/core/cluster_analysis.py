@@ -183,6 +183,138 @@ def spatial_phases(xp: Backend, D, size, offset, n_units
 
 
 # ----------------------------------------------------------------------
+# Order-oblivious (dense) level representation
+# ----------------------------------------------------------------------
+#
+# The universal structure-as-operand evaluator (core.vectorized /
+# repro.mapspace.universal) cannot branch on loop *order* or on which
+# directive is spatial — those are traced operands.  A DenseLevel therefore
+# carries per-dim quantities over a fixed dim universe: the loop order as a
+# rank vector (higher rank = closer to the innermost position), the spatial
+# choice as a 0/1 one-hot, and per-dim phases blended between their
+# temporal and spatial forms by that one-hot.  Dims that are not loops at a
+# level pass their extent through untouched (trip-count-1 behaviour), which
+# is exactly how ``complete()`` treats unmentioned dims in the faithful
+# engine.
+
+def mix(xp: Backend, s, a, b):
+    """Branch-free select ``s ? a : b`` for a 0/1 indicator ``s`` (exact for
+    the small-integer quantities the analysis manipulates).  Static 0/1
+    indicators short-circuit so the hybrid backend keeps Python ints."""
+    if isinstance(s, (int, float, bool)):
+        return a if s else b
+    return s * a + (1 - s) * b
+
+
+@dataclasses.dataclass
+class DenseLevel:
+    """Order-oblivious twin of :class:`LevelSpec`.
+
+    ``rank`` holds each loop's position in the data-movement order (any
+    strictly increasing outer->inner numbering; values may be traced).
+    ``sp`` holds the spatial one-hot.  ``steady``/``edge`` hold per-dim
+    phases already blended between spatial and temporal semantics, and
+    ``off_eff`` the stride-scaled offsets (the CLA stride rule)."""
+    index: int
+    ext: dict[str, Any]                # dim universe extents at this level
+    loop_dims: tuple[str, ...]         # dims that are loops here (static)
+    edge_dims: tuple[str, ...]         # loops whose edge phase is enumerated
+    rank: dict[str, Any]               # loop-order position per loop dim
+    sp: dict[str, Any]                 # spatial one-hot per loop dim
+    steady: dict[str, Phase]
+    edge: dict[str, Phase]
+    off_eff: dict[str, Any]            # stride-scaled offsets per loop dim
+    n_units: Any
+    is_innermost: bool
+    single_edge: bool = False          # divisor-tiled: A+1 cases, not 2^A
+
+    def trips(self, d: str):
+        return self.steady[d].count + self.edge[d].count
+
+
+def build_dense_level(xp: Backend, op: LayerOp, *, index: int,
+                      ext: Mapping[str, Any], sizes: Mapping[str, Any],
+                      offsets: Mapping[str, Any], rank: Mapping[str, Any],
+                      sp: Mapping[str, Any], loop_dims: Sequence[str],
+                      edge_dims: Sequence[str], n_units: Any,
+                      innermost: bool, single_edge: bool = False
+                      ) -> DenseLevel:
+    """Instantiate one dense level: per-dim phases computed both ways
+    (temporal and spatial) and blended by the spatial one-hot, extending the
+    branch-free advancing-loop rule from tile sizes to structure."""
+    steady: dict[str, Phase] = {}
+    edge: dict[str, Phase] = {}
+    off_eff: dict[str, Any] = {}
+    for d in loop_dims:
+        D = ext[d]
+        off = offsets[d] * op.stride_of(d)
+        off_eff[d] = off
+        st_t, ed_t = temporal_phases(xp, D, sizes[d], off)
+        s = sp.get(d, 0)
+        if isinstance(s, (int, float)) and s == 0:
+            steady[d], edge[d] = st_t, ed_t
+            continue
+        st_s, ed_s = spatial_phases(xp, D, sizes[d], off, n_units)
+        steady[d] = Phase(
+            count=mix(xp, s, st_s.count, st_t.count),
+            size=st_t.size,  # min(size, D) either way
+            active=mix(xp, s, st_s.active, 1),
+            partial_size=mix(xp, s, st_s.partial_size, 0))
+        edge[d] = Phase(
+            count=mix(xp, s, ed_s.count, ed_t.count),
+            size=mix(xp, s, ed_s.size, ed_t.size),
+            active=mix(xp, s, ed_s.active, 1),
+            partial_size=mix(xp, s, ed_s.partial_size, 0))
+    return DenseLevel(
+        index=index, ext=dict(ext), loop_dims=tuple(loop_dims),
+        edge_dims=tuple(edge_dims), rank=dict(rank), sp=dict(sp),
+        steady=steady, edge=edge, off_eff=off_eff, n_units=n_units,
+        is_innermost=innermost, single_edge=single_edge)
+
+
+def enumerate_cases_dense(level: DenseLevel, xp: Backend,
+                          single_edge: bool = False
+                          ) -> list["IterationCase"]:
+    """Dense twin of :func:`enumerate_cases`: the phase cross product runs
+    over ``edge_dims`` only (loops whose sizes are operands and may or may
+    not divide their dim); every other loop contributes its steady phase.
+    The first case is the all-steady case, as in the faithful engine.
+
+    ``single_edge`` restricts the product to the all-steady case plus one
+    edge per dim (A+1 cases instead of 2^A).  Exact for divisor-tiled
+    spaces (``repro.mapspace``): temporal divisor tiles never produce an
+    edge phase, so at most one loop — the spatially mapped one, which
+    folds over the PE array — has a non-zero edge count, and every
+    multi-edge case carries zero occurrences."""
+    if single_edge:
+        masks = [tuple(0 for _ in level.edge_dims)]
+        for i in range(len(level.edge_dims)):
+            masks.append(tuple(int(j == i)
+                               for j in range(len(level.edge_dims))))
+    else:
+        masks = itertools.product((0, 1), repeat=len(level.edge_dims))
+    cases: list[IterationCase] = []
+    for mask in masks:
+        choice = dict(zip(level.edge_dims, mask))
+        occ = 1
+        sizes = dict(level.ext)
+        active = 1
+        partials: dict[str, Any] = {}
+        for d in level.loop_dims:
+            ph = level.edge[d] if choice.get(d, 0) else level.steady[d]
+            sizes[d] = ph.size
+            occ = occ * ph.count
+            # temporal phases have active == 1 / partial == 0, so plain
+            # products reproduce the engine's min-over-spatial-loops
+            active = active * ph.active
+            partials[d] = ph.partial_size
+        cases.append(IterationCase(
+            occurrences=occ, sizes=sizes, active_units=active,
+            partial_unit_sizes=partials, phase_ids=tuple(mask)))
+    return cases
+
+
+# ----------------------------------------------------------------------
 # Level construction
 # ----------------------------------------------------------------------
 

@@ -19,19 +19,22 @@ the faithful integer engine and the traced-jnp DSE twin share this file.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Sequence
 
-from .cluster_analysis import (Backend, LevelSpec, LoopInfo, py_backend,
-                               spatial_phases, temporal_phases, unit_counts,
-                               enumerate_cases)
+from .cluster_analysis import (Backend, DenseLevel, LevelSpec, LoopInfo,
+                               enumerate_cases, enumerate_cases_dense,
+                               py_backend, spatial_phases, temporal_phases,
+                               unit_counts)
 from .directives import (FULL, Dataflow, MapDirective, SpatialMap, complete,
                          extended_dims, is_static_size)
 from .energy import DEFAULT_ENERGY, EnergyModel
-from .performance import (HWConfig, comm_delay, compute_delay,
+from .performance import (HWConfig, comm_delay, compute_delay, log2_ceil,
                           reduction_fwd_delay)
 from .reuse_analysis import (OUTPUT, TensorReuse, analyze_level_traffic,
-                             classify_level, psums_volume,
-                             spatial_reduction_active, tensor_volume,
+                             analyze_level_traffic_dense, classify_level,
+                             dense_level_tile_sizes, psums_volume,
+                             spatial_reduction_active,
+                             spatial_reduction_indicator, tensor_volume,
                              level_tile_sizes)
 from .tensor_analysis import LayerOp
 
@@ -270,6 +273,171 @@ def _analyze_level(op: LayerOp, level_maps, counts_units, li: int,
 
 
 # ----------------------------------------------------------------------
+# Order-oblivious (dense) level driver — structure as operands
+# ----------------------------------------------------------------------
+
+def analyze_dense_level(op: LayerOp, level: DenseLevel, xp: Backend,
+                        hw: HWConfig, child_fn=None) -> LevelResult:
+    """Dense twin of :func:`_analyze_level` for a :class:`DenseLevel` whose
+    loop order / spatial choice / sizes may all be traced operands.
+
+    ``child_fn(case_sizes) -> LevelResult`` analyzes the inner cluster
+    level for one iteration case; ``None`` marks the innermost level.  The
+    accumulation mirrors the faithful engine case for case (phantom cases
+    with zero occurrences contribute zero-weighted terms, exactly like the
+    grouped traced engine), so results are bit-equal modulo float32."""
+    li = level.index
+    traffic = analyze_level_traffic_dense(op, level, xp, hw.multicast,
+                                          hw.spatial_reduction)
+    cases = enumerate_cases_dense(level, xp, level.single_edge)
+    sra = spatial_reduction_indicator(op, level, xp)
+
+    counts: dict[tuple[int, str, str], Any] = {}
+    buf_req: dict[tuple[int, str], Any] = {}
+    peak_bw: dict[int, Any] = {}
+
+    def bump(k, v):
+        counts[k] = counts.get(k, 0) + v
+
+    def req(k, v):
+        prev = buf_req.get(k, 0)
+        buf_req[k] = xp.maximum(prev, v)
+
+    # ---- steady-state delays (per step) -------------------------------
+    delta_total = 0
+    for t in op.input_tensors():
+        delta_total = delta_total + traffic.step_delta[t.name]
+    ingress_sd = comm_delay(xp, delta_total, hw)
+    egress_sd = comm_delay(xp, traffic.step_egress, hw)
+    fwd = sra * log2_ceil(xp, level.n_units)
+
+    # ---- per-case compute + accumulation ------------------------------
+    runtime = 0
+    macs = 0
+    active_pe_steps = 0
+    total_pe_steps = 0
+    steady_compute = None
+
+    for case in cases:
+        occ = case.occurrences
+        m_unit = case.sizes
+        if child_fn is None:
+            psums = psums_volume(op, m_unit, xp)
+            comp = compute_delay(xp, psums, hw)
+            child_macs = psums
+            child_active, child_total = 1, 1
+        else:
+            child = child_fn(m_unit)
+            comp = child.runtime
+            child_macs = child.macs
+            child_active, child_total = (child.active_pe_steps,
+                                         child.total_pe_steps)
+            for k, v in child.counts.items():
+                bump(k, v * occ * case.active_units)
+            for k, v in child.buf_req.items():
+                req(k, v)
+            for tier, bw in child.peak_bw.items():
+                peak_bw[tier] = xp.maximum(peak_bw.get(tier, 0), bw)
+
+        # trailing partially-filled unit: only the spatial dim carries a
+        # non-zero (one-hot-blended) partial, so one override suffices
+        p_total = 0
+        mp = dict(m_unit)
+        for d, psz in case.partial_unit_sizes.items():
+            p_total = p_total + psz
+            mp[d] = (1 - level.sp.get(d, 0)) * m_unit[d] + psz
+        has_partial = xp.where(p_total > 0, 1, 0)
+        partial_macs = psums_volume(op, mp, xp) * has_partial
+
+        step = xp.maximum(xp.maximum(comp + fwd, ingress_sd), egress_sd)
+        runtime = runtime + occ * step
+        macs = macs + occ * (case.active_units * child_macs + partial_macs)
+        active_pe_steps = active_pe_steps + occ * (
+            case.active_units * child_active + has_partial * child_active)
+        total_pe_steps = total_pe_steps + occ * level.n_units * child_total
+        if steady_compute is None:
+            steady_compute = comp  # first case = all-steady phases
+
+        unit_ws = 0
+        for t in op.tensors():
+            unit_ws = unit_ws + tensor_volume(t, m_unit, xp)
+        req((li + 1, "ALL"), 2 * unit_ws)
+
+    # ---- init case: first iteration is serial (no double buffering) ---
+    full_ingress = 0
+    tiles = dense_level_tile_sizes(level, xp)
+    for t in op.input_tensors():
+        v = tensor_volume(t, tiles, xp)
+        if not hw.multicast:
+            v = v * traffic.multicast_factor[t.name]
+        full_ingress = full_ingress + v
+    ing_full_d = comm_delay(xp, full_ingress, hw)
+    sc = steady_compute if steady_compute is not None else 0
+    serial = ing_full_d + sc + fwd + egress_sd
+    overlapped = xp.maximum(xp.maximum(sc + fwd, ingress_sd), egress_sd)
+    runtime = runtime + (serial - overlapped)
+
+    # ---- this level's own traffic counts ------------------------------
+    for t in op.input_tensors():
+        unique = traffic.ingress[t.name]
+        delivered = unique * (traffic.multicast_factor[t.name]
+                              if hw.multicast else 1)
+        bump((li, t.name, "read"), unique)
+        bump((li + 1, t.name, "write"), delivered)
+    bump((li, OUTPUT, "read"), traffic.psum_readback)
+    bump((li, OUTPUT, "write"), traffic.egress[OUTPUT])
+
+    if child_fn is None:
+        for t in op.input_tensors():
+            bump((li + 1, t.name, "read"), macs)
+        bump((li + 1, OUTPUT, "read"), macs)
+        bump((li + 1, OUTPUT, "write"), macs)
+
+    lvl_ws = 0
+    for t in op.tensors():
+        lvl_ws = lvl_ws + tensor_volume(t, tiles, xp)
+    req((li, "ALL"), 2 * lvl_ws)
+
+    comp_floor = xp.maximum(sc, 1)
+    peak_bw[li] = xp.maximum(
+        peak_bw.get(li, 0),
+        (delta_total + traffic.step_egress) / comp_floor)
+
+    return LevelResult(
+        runtime=runtime, macs=macs, counts=counts, buf_req=buf_req,
+        peak_bw=peak_bw, active_pe_steps=active_pe_steps,
+        total_pe_steps=total_pe_steps, reuse={li: {}})
+
+
+def blend_level_results(xp: Backend, sel: Sequence[Any],
+                        results: Sequence[LevelResult]) -> LevelResult:
+    """One-hot blend of per-candidate :class:`LevelResult` objects (the
+    cluster inner-dim selector of the universal evaluator).  All candidates
+    share the same static key structure."""
+    def scalar(vals):
+        out = 0
+        for s, v in zip(sel, vals):
+            out = out + s * v
+        return out
+
+    def dicts(ds):
+        keys = set()
+        for d in ds:
+            keys |= set(d)
+        return {k: scalar([d.get(k, 0) for d in ds]) for k in keys}
+
+    return LevelResult(
+        runtime=scalar([r.runtime for r in results]),
+        macs=scalar([r.macs for r in results]),
+        counts=dicts([r.counts for r in results]),
+        buf_req=dicts([r.buf_req for r in results]),
+        peak_bw=dicts([r.peak_bw for r in results]),
+        active_pe_steps=scalar([r.active_pe_steps for r in results]),
+        total_pe_steps=scalar([r.total_pe_steps for r in results]),
+        reuse={})
+
+
+# ----------------------------------------------------------------------
 
 def analyze(op: LayerOp, df: Dataflow, hw: HWConfig,
             xp: Backend | None = None,
@@ -282,8 +450,18 @@ def analyze(op: LayerOp, df: Dataflow, hw: HWConfig,
     cache: dict = {}
     top = _analyze_level(op, level_maps, counts_units, 0,
                          extended_dims(df, op.dims), xp, hw, cache)
+    return assemble_stats(op, top, len(level_maps), hw, xp, energy_model)
 
-    n_levels = len(level_maps)
+
+def assemble_stats(op: LayerOp, top: LevelResult, n_levels: int,
+                   hw: HWConfig, xp: Backend,
+                   energy_model: EnergyModel = DEFAULT_ENERGY) -> Stats:
+    """Turn a top-level :class:`LevelResult` into end-to-end :class:`Stats`
+    (buffer sizing, CACTI-style energy, utilization, reuse factors).
+
+    Shared by the faithful/grouped engines (via :func:`analyze`) and the
+    universal structure-as-operand evaluator, which builds the top
+    ``LevelResult`` densely with mapping structure as traced operands."""
     em = energy_model
     bytes_ = hw.dtype_bytes
     l1_req = top.buf_req.get((n_levels, "ALL"), 0)

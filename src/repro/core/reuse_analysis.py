@@ -21,9 +21,9 @@ trip counts, so the same code runs on ints and traced jnp scalars.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping
+from typing import Any, Mapping, Sequence
 
-from .cluster_analysis import Backend, LevelSpec, LoopInfo
+from .cluster_analysis import Backend, DenseLevel, LevelSpec, LoopInfo, mix
 from .tensor_analysis import (FILTER, INPUT, OUTPUT, ConvExpr, DimExpr,
                               LayerOp, TensorSpec, WindowExpr)
 
@@ -267,6 +267,189 @@ def level_tile_sizes(level: LevelSpec, xp: Backend) -> dict[str, Any]:
         span = sp.steady.size + (sp.n_units - 1) * d.offset
         m[sp.dim] = xp.minimum(span, level.dims[sp.dim])
     return m
+
+
+# ----------------------------------------------------------------------
+# Order-oblivious (dense) traffic model — structure as operands
+# ----------------------------------------------------------------------
+#
+# The grouped engine above walks Python lists in directive order, so loop
+# order and spatial choice are compile-time structure.  The dense twins
+# below compute the same closed forms with the order as a *rank vector* and
+# the spatial choice as a *one-hot*: "the innermost coupled loop" becomes a
+# branch-free one-hot gather over ranks, and "is the advancing loop"
+# becomes an indicator product — the permutation gathers that let one XLA
+# executable cover every (perm × spatial) structure group.
+
+def innermost_one_hot(xp: Backend, ranks: Sequence[Any]) -> list[Any]:
+    """0/1 indicator per entry: 1 at the maximum rank (the innermost loop in
+    data-movement order), 0 elsewhere.  Ranks must be pairwise distinct."""
+    out = []
+    for i, ri in enumerate(ranks):
+        ind = 1
+        for j, rj in enumerate(ranks):
+            if j != i:
+                ind = ind * xp.where(ri > rj, 1, 0)
+        out.append(ind)
+    return out
+
+
+def advancing_indicators(xp: Backend, level: DenseLevel) -> dict[str, Any]:
+    """Dense twin of :func:`_is_advancing`: per loop dim, a 0/1 indicator
+    that it is the level's advancing loop — temporal, actually iterating,
+    with every temporal loop inner to it sitting at one trip."""
+    out: dict[str, Any] = {}
+    for d in level.loop_dims:
+        ind = (1 - level.sp.get(d, 0)) * xp.where(level.trips(d) > 1, 1, 0)
+        for d2 in level.loop_dims:
+            if d2 == d:
+                continue
+            outer = xp.where(level.rank[d2] < level.rank[d], 1, 0)
+            one_trip = xp.eq(level.trips(d2), 1)
+            term = mix(xp, level.sp.get(d2, 0), 1,
+                       outer + (1 - outer) * one_trip)
+            ind = ind * term
+        out[d] = ind
+    return out
+
+
+def spatial_reduction_indicator(op: LayerOp, level: DenseLevel,
+                                xp: Backend) -> Any:
+    """Dense 0/1 twin of :func:`spatial_reduction_active`: a reduction dim
+    is spatially mapped, or an aligned (outer, window) output pair is."""
+    red = op.reduction_dims()
+    s = 0
+    for d in level.loop_dims:
+        if d in red:
+            s = s + level.sp.get(d, 0)
+        for e in op.output.entries:
+            if isinstance(e, ConvExpr) and e.outer == d \
+                    and e.window in level.loop_dims:
+                s = s + level.sp.get(d, 0) * level.sp.get(e.window, 0)
+    return xp.minimum(s, 1)
+
+
+def dense_level_tile_sizes(level: DenseLevel, xp: Backend
+                           ) -> dict[str, Any]:
+    """Dense twin of :func:`level_tile_sizes`: per-step level extents —
+    steady per-unit size, except spatially mapped dims which span all
+    active units (blended by the spatial one-hot)."""
+    m = dict(level.ext)
+    for d in level.loop_dims:
+        s = level.steady[d].size
+        span = s + (level.n_units - 1) * level.off_eff[d]
+        m[d] = mix(xp, level.sp.get(d, 0),
+                   xp.minimum(span, level.ext[d]), s)
+    return m
+
+
+def _dense_advance(level: DenseLevel, d: str, xp: Backend) -> Any:
+    """Axis extent of the new data when loop ``d`` advances one step —
+    dense twin of :func:`_tile_override` (spatial/temporal blended)."""
+    s = level.steady[d].size
+    o = level.off_eff[d]
+    span = s + (level.n_units - 1) * o
+    adv_sp = xp.minimum(level.n_units * o, span)
+    adv_t = xp.minimum(o, s)
+    return mix(xp, level.sp.get(d, 0), adv_sp, adv_t)
+
+
+def analyze_level_traffic_dense(op: LayerOp, level: DenseLevel,
+                                xp: Backend, multicast_hw: bool = True,
+                                reduction_hw: bool = True) -> LevelTraffic:
+    """Order-oblivious twin of :func:`analyze_level_traffic`.
+
+    Produces bit-equal quantities for any single-spatial-map level: the
+    innermost-coupled-loop choice, the advancing-loop rule and the
+    psum-spill rule are all evaluated through rank/one-hot indicators
+    instead of list positions, so loop order and spatial choice can be
+    traced operands.  Reuse *classification* (reporting-only metadata) is
+    structural and therefore omitted."""
+    tiles = dense_level_tile_sizes(level, xp)
+    trips = {d: level.trips(d) for d in level.loop_dims}
+    total_steps = 1
+    for d in level.loop_dims:
+        total_steps = total_steps * trips[d]
+    adv_ind = advancing_indicators(xp, level)
+
+    ingress: dict[str, Any] = {}
+    mfac: dict[str, Any] = {}
+    step_delta: dict[str, Any] = {}
+
+    for t in op.input_tensors():
+        cl = [d for d in level.loop_dims if t.coupled_to(d)]
+        tile = tensor_volume(t, tiles, xp)
+        if not cl:
+            ing = tile
+            delta = 0
+        else:
+            inner = innermost_one_hot(xp, [level.rank[d] for d in cl])
+            n_in = 0
+            dvol = 0
+            outer_prod = 1
+            for w, d in zip(inner, cl):
+                n_in = n_in + w * trips[d]
+                dv = tensor_volume(t, tiles, xp,
+                                   override={d: _dense_advance(level, d, xp)})
+                dvol = dvol + w * xp.minimum(dv, tile)
+                outer_prod = outer_prod * (1 + (1 - w) * (trips[d] - 1))
+            ing = outer_prod * (tile + (n_in - 1) * dvol)
+            ind = 0
+            for w, d in zip(inner, cl):
+                ind = ind + w * adv_ind[d]
+            delta = ind * dvol + (1 - ind) * tile
+        coupled_sp = 0
+        for d in cl:
+            coupled_sp = coupled_sp + level.sp.get(d, 0)
+        mfac[t.name] = 1 + (1 - coupled_sp) * (level.n_units - 1)
+        ingress[t.name] = ing
+        step_delta[t.name] = delta if t.has_data else 0
+        if not multicast_hw:
+            ingress[t.name] = ingress[t.name] * mfac[t.name]
+            step_delta[t.name] = step_delta[t.name] * mfac[t.name]
+
+    # ---- output tensor ------------------------------------------------
+    o = op.output
+    o_tile = tensor_volume(o, tiles, xp)
+    red_dims = op.reduction_dims()
+    ocl = [d for d in level.loop_dims if o.coupled_to(d)]
+    if ocl:
+        commits = 1
+        for d in ocl:
+            commits = commits * trips[d]
+        inner_o = innermost_one_hot(xp, [level.rank[d] for d in ocl])
+        spill = 1
+        for d in level.loop_dims:
+            if d not in red_dims:
+                continue
+            outer = 0
+            for w, di in zip(inner_o, ocl):
+                outer = outer + w * xp.where(level.rank[d] < level.rank[di],
+                                             1, 0)
+            spill = spill * (1 + outer * (trips[d] - 1))
+    else:
+        commits = 1
+        spill = 1
+    egress_o = o_tile * commits * spill
+    readback = o_tile * commits * (spill - 1)
+    sra = spatial_reduction_indicator(op, level, xp)
+    if not reduction_hw:
+        m = 1 + sra * (level.n_units - 1)
+        egress_o = egress_o * m
+        readback = readback * m
+    step_egress = xp.ceil_div(egress_o, xp.maximum(total_steps, 1))
+
+    ingress[OUTPUT] = readback
+    return LevelTraffic(
+        ingress=ingress,
+        egress={OUTPUT: egress_o},
+        psum_readback=readback,
+        multicast_factor=mfac,
+        step_delta=step_delta,
+        step_egress=step_egress,
+        total_steps=total_steps,
+        reuse={},
+    )
 
 
 def analyze_level_traffic(op: LayerOp, level: LevelSpec, xp: Backend,

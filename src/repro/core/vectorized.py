@@ -23,9 +23,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from .cluster_analysis import hybrid_backend
+from .cluster_analysis import build_dense_level, hybrid_backend
 from .directives import Cluster, Dataflow
-from .model import analyze
+from .model import analyze, analyze_dense_level, assemble_stats, \
+    blend_level_results
 from .performance import HWConfig
 from .tensor_analysis import LayerOp
 
@@ -34,10 +35,8 @@ FEATURES = ("runtime", "energy_pj", "macs", "l1_kb", "l2_kb", "util",
             "bw_req", "throughput", "edp")
 
 
-def stats_vector(op: LayerOp, df: Dataflow, hw: HWConfig) -> jnp.ndarray:
-    """One design point -> fixed-shape feature vector (traceable)."""
-    xp = hybrid_backend()
-    s = analyze(op, df, hw, xp=xp)
+def _features(s) -> jnp.ndarray:
+    """Pack a Stats object into the fixed FEATURES vector (traceable)."""
     runtime = jnp.asarray(s.runtime, jnp.float32)
     energy = jnp.asarray(s.energy_pj, jnp.float32)
     macs = jnp.asarray(s.total_macs, jnp.float32)
@@ -52,6 +51,12 @@ def stats_vector(op: LayerOp, df: Dataflow, hw: HWConfig) -> jnp.ndarray:
         macs / runtime,
         energy * runtime,
     ])
+
+
+def stats_vector(op: LayerOp, df: Dataflow, hw: HWConfig) -> jnp.ndarray:
+    """One design point -> fixed-shape feature vector (traceable)."""
+    xp = hybrid_backend()
+    return _features(analyze(op, df, hw, xp=xp))
 
 
 @functools.lru_cache(maxsize=512)
@@ -191,4 +196,153 @@ def batched_tile_evaluator(op: LayerOp, template: Dataflow,
     ok, dk = _reg(op, template)
     return _build_tile_eval(ok, dk, tuple(var_slots), int(num_pes),
                             float(noc_bw), multicast, spatial_reduction,
+                            noc_latency, macs_per_pe)
+
+
+# ----------------------------------------------------------------------
+# Universal structure-as-operand evaluator: one XLA compile per
+# (op × level-count) for the WHOLE mapping space
+# ----------------------------------------------------------------------
+#
+# The tile-traced twin above still compiles once per (spatial × perm ×
+# cluster) structure group, because loop order and spatial choice are
+# Python-level structure of the directive program.  The universal evaluator
+# moves that structure into operands too:
+#
+#   * the loop permutation is a *rank vector* (per searched axis, its
+#     position in the data-movement order) — "innermost coupled loop" and
+#     "advancing loop" become one-hot gathers over ranks;
+#   * the spatial-dim choice is a *one-hot selector* blending each axis's
+#     temporal and spatial phase quantities;
+#   * the cluster option is a traced cluster size plus a one-hot over the
+#     space's (inner dim, inner map) candidates;
+#   * hardware (#PEs, NoC bandwidth) are traced per row, so a joint
+#     mapping × hardware frontier runs through the same executable.
+#
+# Per-dim quantities are computed densely over the op's full dim universe
+# (unused dims are trip-count-1 loops, exactly like ``complete()``), so a
+# single jit+vmap executable per (op, level-count) evaluates every mapping
+# in the space — the per-group compile cost becomes O(1).
+
+@dataclasses.dataclass(frozen=True)
+class UniversalSpec:
+    """Static structure of one universal executable: everything that is
+    *not* an operand.  ``cluster`` lists the (inner_dim, inner_size,
+    inner_offset) candidates of the 2-level family; empty = 1 level."""
+    dim_names: tuple[str, ...]
+    axis_dims: tuple[str, ...]
+    pinned: tuple[str, ...]
+    cluster: tuple[tuple[str, int, int], ...] = ()
+    # divisor-tiled spaces: only the spatial axis can produce a non-empty
+    # edge phase, so case enumeration shrinks from 2^A to A+1
+    single_edge: bool = False
+
+    @property
+    def n_levels(self) -> int:
+        return 2 if self.cluster else 1
+
+
+def _universal_eval_one(op: LayerOp, spec: UniversalSpec, hw_static: dict):
+    """Build the single-row evaluator closed over static structure."""
+    axis_dims = spec.axis_dims
+    a = len(axis_dims)
+    missing = [d for d in spec.dim_names
+               if d not in axis_dims and d not in spec.pinned]
+
+    def eval_one(ops):
+        xp = hybrid_backend()
+        hw = HWConfig(num_pes=ops["pes"], noc_bw=ops["bw"], **hw_static)
+        ext0 = {d: op.dims[d] for d in spec.dim_names}
+        sizes: dict = dict(ext0)   # non-searched dims: fully unrolled
+        offsets: dict = dict(ext0)
+        rank: dict = {}
+        sp: dict = {d: 0 for d in spec.dim_names}
+        for j, d in enumerate(axis_dims):
+            sizes[d] = ops["sizes"][j]
+            offsets[d] = ops["offsets"][j]
+            rank[d] = ops["rank"][j]
+            sp[d] = ops["sp"][j]
+        # loop order mirrors the grouped templates: implicit (missing) dims
+        # outermost, searched axes in permutation order, pinned window dims
+        # innermost.  Trip-count-1 loops only need order-consistent ranks.
+        for i, d in enumerate(missing):
+            rank[d] = -1 - i
+        for j, d in enumerate(spec.pinned):
+            rank[d] = a + j
+
+        pes = xp.maximum(ops["pes"], 1)
+        if spec.cluster:
+            c_eff = xp.maximum(xp.minimum(ops["csize"], pes), 1)
+            top_units = xp.maximum(xp.floordiv(pes, c_eff), 1)
+        else:
+            c_eff = None
+            top_units = pes
+
+        level0 = build_dense_level(
+            xp, op, index=0, ext=ext0, sizes=sizes, offsets=offsets,
+            rank=rank, sp=sp, loop_dims=spec.dim_names,
+            edge_dims=axis_dims, n_units=top_units,
+            innermost=not spec.cluster, single_edge=spec.single_edge)
+
+        if spec.cluster:
+            def child_fn(m_unit):
+                results = []
+                for cd, csz, coff in spec.cluster:
+                    lvl1 = build_dense_level(
+                        xp, op, index=1, ext=m_unit, sizes={cd: csz},
+                        offsets={cd: coff}, rank={cd: 0}, sp={cd: 1},
+                        loop_dims=(cd,), edge_dims=(cd,), n_units=c_eff,
+                        innermost=True)
+                    results.append(
+                        analyze_dense_level(op, lvl1, xp, hw))
+                if len(results) == 1:
+                    return results[0]
+                return blend_level_results(xp, ops["csel"], results)
+            top = analyze_dense_level(op, level0, xp, hw,
+                                      child_fn=child_fn)
+        else:
+            top = analyze_dense_level(op, level0, xp, hw)
+        return _features(
+            assemble_stats(op, top, spec.n_levels, hw, xp))
+
+    return eval_one
+
+
+@functools.lru_cache(maxsize=256)
+def _build_universal(op_key: str, spec: UniversalSpec, multicast: bool,
+                     reduction: bool, latency: float,
+                     macs_per_pe: int) -> Callable:
+    op = _OP_REG[op_key]
+    hw_static = dict(noc_latency=latency, multicast=multicast,
+                     spatial_reduction=reduction, macs_per_pe=macs_per_pe)
+    return jax.jit(jax.vmap(_universal_eval_one(op, spec, hw_static)))
+
+
+def universal_evaluator(op: LayerOp, spec: UniversalSpec, *,
+                        multicast: bool = True,
+                        spatial_reduction: bool = True,
+                        noc_latency: float = 2.0,
+                        macs_per_pe: int = 1) -> Callable:
+    """Returns ``f(ops) -> features[i, F]`` where ``ops`` is a dict of
+    per-row operand arrays encoding the ENTIRE mapping plus the hardware
+    point:
+
+    ``sizes``/``offsets`` (i, A)
+        tile sizes / offsets per searched axis, canonical axis order;
+    ``rank`` (i, A)
+        each axis's position in the loop order (0 = outermost searched);
+    ``sp`` (i, A)
+        one-hot spatial-axis selector;
+    ``csize`` (i,), ``csel`` (i, K)
+        cluster size and one-hot over ``spec.cluster`` candidates
+        (2-level specs only);
+    ``pes``/``bw`` (i,)
+        hardware design point per row (joint mapping × hardware search).
+
+    One XLA executable per (op, level-count): every structure group of the
+    mapping space is an operand pattern of the same compiled computation.
+    See ``repro.mapspace.universal`` for the MapSpace-point encoder."""
+    ok = f"{op.name}|{sorted(op.dims.items())}|{op.op_type}"
+    _OP_REG[ok] = op
+    return _build_universal(ok, spec, multicast, spatial_reduction,
                             noc_latency, macs_per_pe)

@@ -24,10 +24,12 @@ from repro.core.dataflows import TABLE3, table3_for_layer
 from repro.core.dse import DSEConfig
 from repro.core.model import analyze
 from repro.core.performance import HWConfig
-from repro.mapspace import build_space, co_search, search
+from repro.mapspace import (build_space, co_search,
+                            enable_compilation_cache, search)
 
 DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache",
                              "repro-mapspace")
+DEFAULT_JAX_CACHE = os.path.join(DEFAULT_CACHE, "xla")
 
 
 def _pick_layer(layers, which: str):
@@ -59,21 +61,36 @@ def main(argv=None) -> None:
     ap.add_argument("--bw", type=float, default=32.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--strategy", default="auto",
-                    choices=["auto", "exhaustive", "random", "greedy"])
+                    choices=["auto", "exhaustive", "random", "greedy",
+                             "genetic"])
     ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--population", type=int, default=None,
+                    help="genetic strategy population per generation")
     ap.add_argument("--dims", default=None,
                     help="comma-separated searched dims (default: auto)")
     ap.add_argument("--no-cluster", action="store_true",
                     help="exclude two-level (Cluster) mappings")
-    ap.add_argument("--max-groups", type=int, default=12,
-                    help="structure groups to explore (one jit each)")
+    ap.add_argument("--l1-budget-kb", type=float, default=None,
+                    help="prune tile sets over this L1 budget")
+    ap.add_argument("--l2-budget-kb", type=float, default=None,
+                    help="prune tile sets over this L2 budget")
     ap.add_argument("--quick", action="store_true",
                     help="tiny space + budget (smoke test)")
     ap.add_argument("--co-dse", action="store_true",
                     help="cross top-k mappings with the hardware DSE grid")
     ap.add_argument("--cache-dir", default=DEFAULT_CACHE,
                     help="on-disk result cache ('' disables)")
+    ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
+                    help="persistent XLA compilation cache: the universal "
+                         "evaluator's one compile also amortizes across "
+                         "processes ('' disables)")
     args = ap.parse_args(argv)
+
+    if args.jax_cache_dir:
+        if not enable_compilation_cache(args.jax_cache_dir):
+            print(f"# warning: could not enable XLA compilation cache at "
+                  f"{args.jax_cache_dir!r}; compiles will not persist "
+                  f"across processes", file=sys.stderr)
 
     layers = zoo.MODELS[args.model]()
     if args.list_layers:
@@ -98,12 +115,14 @@ def main(argv=None) -> None:
     r = search(op, objective=args.objective, budget=budget, space=space,
                num_pes=args.pes, noc_bw=args.bw, strategy=args.strategy,
                seed=args.seed, top_k=args.top_k,
-               max_groups=args.max_groups,
+               population=args.population,
+               l1_budget_kb=args.l1_budget_kb,
+               l2_budget_kb=args.l2_budget_kb,
                cache_dir=args.cache_dir or None)
     tag = " (cached)" if r.cached else ""
     print(f"# strategy={r.strategy}{tag} evaluated={r.n_evaluated} "
           f"groups={r.n_groups} eval={r.eval_s:.2f}s "
-          f"compile={r.compile_s:.1f}s "
+          f"compiles={r.n_compiles} ({r.compile_s:.1f}s) "
           f"rate={r.mappings_per_s / 1e6:.2f}M mappings/s")
     print(f"\nbest {args.objective} = {_fmt(r.best_value)}")
     print(r.best_dataflow)

@@ -1,6 +1,12 @@
 """Mapping-space search engine: auto-search over legal data-centric
 directive programs plus joint mapping × hardware co-DSE.
 
+Evaluation runs through the *universal* structure-as-operand evaluator:
+one XLA executable per (op, level-count) whose vmapped operands encode the
+entire mapping — tile sizes, loop permutation (rank vector), spatial
+choice (one-hot), cluster option, and the hardware point — so exploring
+every structure group costs at most two compiles.
+
 Quick start::
 
     from repro.core import tensor_analysis as ta
@@ -14,16 +20,24 @@ Quick start::
 See ``repro.launch.mapsearch`` for the CLI.
 """
 from .batched import EvalStats, evaluate_points, measure_rate
+from .cache import enable_compilation_cache
 from .codse import CoDSEResult, co_search, merged_pareto
-from .search import OBJECTIVES, SearchResult, search
+from .search import OBJECTIVES, STRATEGIES, SearchResult, search
 from .space import (ClusterOption, MapSpace, MapSpaceError, TileAxis,
-                    build_space, enumerate_points, group_template,
-                    point_dataflow, sample_points)
+                    build_space, buffer_estimate_kb, canonical_signature,
+                    dedupe_equivalent_points, enumerate_points,
+                    group_template, point_dataflow, prune_by_budget,
+                    sample_points)
+from .universal import (compile_count, evaluate_points_universal,
+                        universal_specs)
 
 __all__ = [
     "ClusterOption", "CoDSEResult", "EvalStats", "MapSpace",
-    "MapSpaceError", "OBJECTIVES", "SearchResult", "TileAxis",
-    "build_space", "co_search", "enumerate_points", "evaluate_points",
-    "group_template", "measure_rate", "merged_pareto", "point_dataflow",
-    "sample_points", "search",
+    "MapSpaceError", "OBJECTIVES", "STRATEGIES", "SearchResult",
+    "TileAxis", "build_space", "buffer_estimate_kb", "canonical_signature",
+    "co_search", "compile_count", "dedupe_equivalent_points",
+    "enable_compilation_cache", "enumerate_points",
+    "evaluate_points", "evaluate_points_universal", "group_template",
+    "measure_rate", "merged_pareto", "point_dataflow", "prune_by_budget",
+    "sample_points", "search", "universal_specs",
 ]

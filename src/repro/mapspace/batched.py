@@ -1,13 +1,18 @@
-"""Batched mapping evaluation: one jit+vmap executable per structure group.
+"""Batched mapping evaluation.
 
-Candidates sharing a :class:`~repro.mapspace.space.MapSpace` group key
-(spatial choice × permutation × cluster option) trace the same iteration-
-case structure, so their tile sizes become vmapped operands of a single XLA
-computation (``core.vectorized.batched_tile_evaluator``).  Batches are
-padded to a fixed block so each group compiles exactly once regardless of
-how many candidates the search throws at it; timing separates that one-off
-compile from the steady-state evaluation the mappings/s rate is quoted on
-(mirroring how ``core.dse`` reports designs/s).
+Default engine: the **universal** structure-as-operand evaluator
+(``mapspace.universal``) — one jit+vmap executable per (op, level-count)
+whose operands encode the entire mapping (tile sizes, permutation rank,
+spatial one-hot, cluster option, hardware point).  A mapping space costs at
+most TWO compiles no matter how many (spatial × perm × cluster) structure
+groups the evaluated points span.
+
+The legacy **grouped** engine (one executable per structure group, tile
+sizes as the only operands) is kept behind ``engine="grouped"`` as a
+cross-check and for spaces outside the universal family.  Batches are
+padded to a fixed block so each executable compiles exactly once per
+(block, structure) shape; timing separates that one-off compile from the
+steady-state evaluation the mappings/s rate is quoted on.
 """
 from __future__ import annotations
 
@@ -21,14 +26,16 @@ import jax.numpy as jnp
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES, batched_tile_evaluator
 from .space import GroupKey, MapSpace, Point, group_template, point_operands
+from .universal import evaluate_points_universal
 
 # Column indices into the feature matrix, re-exported for consumers.
 FEATURE_INDEX = {name: i for i, name in enumerate(FEATURES)}
 
-# Executables already warmed at a given block shape this process, keyed by
-# the deterministic (op, template, hardware, block) tuple — NOT id(f), which
-# the interpreter may reuse after the evaluator lru_cache evicts an entry,
-# misclassifying a fresh multi-second compile as a steady-state call.
+# Grouped-engine executables already warmed at a given block shape this
+# process, keyed by the deterministic (op, template, hardware, block) tuple
+# — NOT id(f), which the interpreter may reuse after the evaluator
+# lru_cache evicts an entry, misclassifying a fresh multi-second compile as
+# a steady-state call.
 _WARMED: set[tuple] = set()
 
 
@@ -41,10 +48,16 @@ def _warm_key(op: LayerOp, template_name: str, var_slots, num_pes,
 
 @dataclasses.dataclass
 class EvalStats:
-    """Bookkeeping for one evaluate_points call."""
+    """Bookkeeping for one evaluate_points call.
+
+    ``mappings_per_s`` is THE steady-state rate definition shared by every
+    consumer (``SearchResult`` delegates here): rows actually evaluated in
+    steady-timed calls (padding rows excluded, first-call compile re-runs
+    excluded) divided by the steady evaluation time."""
     n_points: int = 0
     n_groups: int = 0
     n_steady: int = 0        # rows evaluated in steady-timed calls
+    n_compiles: int = 0      # first-call (XLA compile) executions
     compile_s: float = 0.0   # first call per (executable, block shape)
     eval_s: float = 0.0      # steady-state batched evaluation time
 
@@ -60,19 +73,35 @@ class EvalStats:
         self.n_points += other.n_points
         self.n_groups += other.n_groups
         self.n_steady += other.n_steady
+        self.n_compiles += other.n_compiles
         self.compile_s += other.compile_s
         self.eval_s += other.eval_s
 
 
 def evaluate_points(op: LayerOp, space: MapSpace, points: Sequence[Point],
                     *, num_pes: int, noc_bw: float, block: int = 1024,
-                    multicast: bool = True, spatial_reduction: bool = True
+                    multicast: bool = True, spatial_reduction: bool = True,
+                    engine: str = "universal"
                     ) -> tuple[np.ndarray, EvalStats]:
     """Evaluate mappings at a fixed hardware point.
 
     Returns ``(features[n, F], stats)`` with rows aligned to ``points``
-    order.  Points are regrouped internally; callers need not pre-sort.
-    """
+    order.  Points may mix structure groups freely: the universal engine
+    needs at most two compiles regardless; the grouped engine regroups
+    internally and compiles once per group."""
+    if engine == "universal":
+        feats, run = evaluate_points_universal(
+            op, space, points, num_pes=num_pes, noc_bw=noc_bw,
+            block=block, multicast=multicast,
+            spatial_reduction=spatial_reduction)
+        groups = {space.group_key(p) for p in points}
+        return feats, EvalStats(
+            n_points=len(points), n_groups=len(groups),
+            n_steady=len(points), n_compiles=run.n_compiles,
+            compile_s=run.compile_s, eval_s=run.eval_s)
+    if engine != "grouped":
+        raise ValueError(f"unknown engine {engine!r}")
+
     groups: dict[GroupKey, list[int]] = {}
     for i, pt in enumerate(points):
         groups.setdefault(space.group_key(pt), []).append(i)
@@ -104,6 +133,7 @@ def evaluate_points(op: LayerOp, space: MapSpace, points: Sequence[Point],
                 t0 = time.perf_counter()
                 out = np.asarray(f(sj, oj))
                 stats.compile_s += time.perf_counter() - t0
+                stats.n_compiles += 1
                 _WARMED.add(warm_key)
             t0 = time.perf_counter()
             out = np.asarray(f(sj, oj))
@@ -116,11 +146,51 @@ def evaluate_points(op: LayerOp, space: MapSpace, points: Sequence[Point],
 def measure_rate(op: LayerOp, space: MapSpace, *, num_pes: int,
                  noc_bw: float, block: int = 4096, seconds: float = 2.0,
                  seed: int = 0, group: GroupKey | None = None,
-                 multicast: bool = True, spatial_reduction: bool = True
-                 ) -> float:
-    """Steady-state batched evaluation rate (mappings/s) on one group —
-    the number comparable to the paper's 0.17M designs/s DSE rate."""
+                 multicast: bool = True, spatial_reduction: bool = True,
+                 engine: str = "universal") -> float:
+    """Steady-state batched evaluation rate (mappings/s) — the number
+    comparable to the paper's 0.17M designs/s DSE rate.
+
+    The universal engine times mixed-structure rows sampled uniformly over
+    the whole space (or one ``group``); the grouped engine times one
+    structure group, as before."""
     rng = np.random.default_rng(seed)
+    if engine == "universal":
+        from .universal import encode_points, mark_warmed, universal_specs
+        from ..core.vectorized import universal_evaluator
+        keys = space.group_keys() if group is None else [group]
+        pts = []
+        for _ in range(block):
+            key = keys[int(rng.integers(len(keys)))]
+            tiles = tuple(int(rng.integers(ax.n)) for ax in space.axes)
+            pts.append(tuple(key) + tiles)
+        spec1, spec2 = universal_specs(op, space)
+        batches = []
+        for spec, sub in (
+                (spec1, [p for p in pts
+                         if space.cluster_options[p[2]] is None]),
+                (spec2, [p for p in pts
+                         if space.cluster_options[p[2]] is not None])):
+            if not sub:
+                continue
+            ops = encode_points(op, space, sub, spec,
+                                num_pes=num_pes, noc_bw=noc_bw)
+            f = universal_evaluator(op, spec, multicast=multicast,
+                                    spatial_reduction=spatial_reduction)
+            batch = {k: jnp.asarray(v) for k, v in ops.items()}
+            # timed batches have their own shape: count the compile so the
+            # process-wide O(1)-compile gate sees it
+            mark_warmed(op, spec, multicast, spatial_reduction, len(sub))
+            f(batch).block_until_ready()   # compile + warm
+            batches.append((f, batch))
+        n = 0
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < seconds:
+            for f, batch in batches:
+                f(batch).block_until_ready()
+            n += block
+        return n / (time.perf_counter() - t0)
+
     key = group if group is not None else space.group_keys()[0]
     template, var_slots = group_template(space, key)
     f = batched_tile_evaluator(

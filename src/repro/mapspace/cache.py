@@ -1,11 +1,19 @@
-"""On-disk result cache for mapping searches.
+"""On-disk caches for mapping searches.
 
-Keyed by ``(layer, space, hardware, objective, budget, strategy, seed)`` so
-a repeated query — same layer swept again in a bigger co-DSE, a re-run CLI
-invocation, a notebook re-execution — returns instantly instead of paying
-the jit + evaluation cost.  Values are small JSON payloads (the winning
-gene tuples and their feature rows), not feature matrices, so the cache
-stays tiny and diff-friendly.
+Two layers:
+
+  * a *result* cache keyed by ``(layer, space, hardware, objective,
+    budget, strategy, seed)`` so a repeated query — same layer swept again
+    in a bigger co-DSE, a re-run CLI invocation, a notebook re-execution —
+    returns instantly instead of paying the jit + evaluation cost.  Values
+    are small JSON payloads (the winning gene tuples and their feature
+    rows), not feature matrices, so the cache stays tiny and
+    diff-friendly;
+  * JAX's *persistent compilation cache*
+    (:func:`enable_compilation_cache`), which stores the compiled XLA
+    executables themselves.  With the universal evaluator there is exactly
+    one executable per (op, level-count, block) — persisting it means even
+    the first search of a fresh process skips the multi-second compile.
 """
 from __future__ import annotations
 
@@ -17,7 +25,40 @@ from typing import Any
 from ..core.tensor_analysis import LayerOp
 from .space import MapSpace
 
-CACHE_VERSION = 1
+CACHE_VERSION = 2
+
+# Set once per process; repeated calls with the same directory are no-ops.
+_COMPILATION_CACHE_DIR: str | None = None
+
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Point JAX's persistent compilation cache at ``cache_dir`` so the
+    universal evaluator's one-off XLA compiles amortize across processes,
+    not just within one.  Returns True when the cache is active.
+
+    Safe to call repeatedly; a different directory after the first call is
+    ignored (JAX initializes the cache lazily but only honours one
+    location per process)."""
+    global _COMPILATION_CACHE_DIR
+    if not cache_dir:
+        return False
+    if _COMPILATION_CACHE_DIR is not None:
+        return True
+    try:
+        import jax
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        # persist even quick compiles: the universal executables are the
+        # dominant cost and always worth keeping
+        try:
+            jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                              0.0)
+        except (AttributeError, ValueError):
+            pass  # older jax: default threshold still persists big compiles
+    except Exception:
+        return False
+    _COMPILATION_CACHE_DIR = cache_dir
+    return True
 
 
 def op_fingerprint(op: LayerOp) -> str:

@@ -1,13 +1,16 @@
 """Joint mapping × hardware co-DSE (the paper's full 480M-design search,
 both axes at once).
 
-``co_search`` first runs the mapping search at a reference hardware point,
-then crosses the top-k distinct mappings with the existing hardware DSE grid
-(``core.dse.run_dse``: PEs × NoC bandwidth under area/power budgets, buffers
-placed per MAESTRO's reported requirement) and merges everything into one
-Pareto frontier.  Table 3 baselines can ride along in the same sweep so the
-frontier directly answers "what does mapping search buy over the paper's
-fixed dataflows?".
+``co_search`` runs the mapping search at a reference hardware point, then
+crosses the top-k distinct mappings with the (PEs × NoC bandwidth) grid in
+a SINGLE merged frontier: the hardware point is a traced operand of the
+same universal executable the mapping search already compiled
+(``mapspace.universal``), so the joint sweep triggers **no additional XLA
+compiles** — mapping genes and hardware axes are one operand space, not
+two staged searches.  Area/power budgets and leakage energy follow
+``core.dse.run_dse`` exactly, and Table 3 baselines can ride along (via the
+legacy per-dataflow evaluator) so the frontier directly answers "what does
+mapping search buy over the paper's fixed dataflows?".
 """
 from __future__ import annotations
 
@@ -18,11 +21,12 @@ from typing import Any, Sequence
 import numpy as np
 
 from ..core.dataflows import table3_for_layer
-from ..core.directives import Dataflow
 from ..core.dse import DSEConfig, DSEResult, run_dse
 from ..core.tensor_analysis import LayerOp
+from ..core.vectorized import BatchStats
 from .search import SearchResult, search
-from .space import MapSpace
+from .space import MapSpace, point_dataflow
+from .universal import evaluate_points_universal
 
 
 @dataclasses.dataclass
@@ -31,8 +35,9 @@ class CoDSEResult:
     dse: list[tuple[str, DSEResult]]      # (mapping label, hw sweep)
     pareto: list[dict[str, Any]]          # merged frontier, energy-sorted
     best: dict[str, dict[str, Any] | None]  # per objective, across all
-    n_evaluated: int                      # mappings + hw designs
+    n_evaluated: int                      # mappings + joint hw designs
     elapsed_s: float
+    n_compiles: int = 0                   # XLA compiles for the joint sweep
 
 
 def merged_pareto(results: Sequence[tuple[str, DSEResult]],
@@ -56,6 +61,38 @@ def merged_pareto(results: Sequence[tuple[str, DSEResult]],
     return front
 
 
+def _joint_sweep(op: LayerOp, space: MapSpace, point, label: str,
+                 cfg: DSEConfig, *, block: int, multicast: bool,
+                 spatial_reduction: bool) -> tuple[DSEResult, int]:
+    """One mapping × full (PEs × bw) grid through the universal executable
+    — hardware as operands, identical budget/leakage accounting to
+    ``core.dse.run_dse``."""
+    pes_g, bw_g = np.meshgrid(np.asarray(cfg.pe_range, np.int64),
+                              np.asarray(cfg.bw_range, np.float32),
+                              indexing="ij")
+    pes, bws = pes_g.ravel(), bw_g.ravel()
+    t0 = time.perf_counter()
+    feats, run = evaluate_points_universal(
+        op, space, [point] * len(pes), num_pes=pes, noc_bw=bws,
+        block=block, multicast=multicast,
+        spatial_reduction=spatial_reduction)
+    elapsed = time.perf_counter() - t0
+    stats = BatchStats.from_features(feats)
+
+    sram_kb = np.asarray(stats.l1_kb) * pes + np.asarray(stats.l2_kb)
+    area = cfg.area_power.area(pes, sram_kb, bws)
+    power = cfg.area_power.power(pes, sram_kb, bws)
+    valid = (area <= cfg.area_budget_mm2) & (power <= cfg.power_budget_mw)
+    static = cfg.area_power.static_energy_pj(area, np.asarray(stats.runtime))
+    stats.energy_pj = np.asarray(stats.energy_pj) + static
+    stats.edp = stats.energy_pj * np.asarray(stats.runtime)
+    return DSEResult(
+        num_pes=pes, noc_bw=bws, stats=stats, area_mm2=area,
+        power_mw=power, valid=np.asarray(valid), n_evaluated=len(pes),
+        n_valid=int(np.sum(valid)), elapsed_s=elapsed,
+        tile_tag=label), run.n_compiles
+
+
 def co_search(op: LayerOp, objective: str = "edp",
               mapping_budget: int = 2000, top_k: int = 4,
               cfg: DSEConfig | None = None, *, num_pes: int = 256,
@@ -64,32 +101,47 @@ def co_search(op: LayerOp, objective: str = "edp",
               include_table3: Sequence[str] = (),
               cache_dir: str | None = None,
               search_kwargs: dict[str, Any] | None = None) -> CoDSEResult:
-    """Joint DSE: mapping search at ``(num_pes, noc_bw)``, then the hardware
-    grid for each of the ``top_k`` distinct found mappings (plus any
-    requested Table 3 baselines), merged into one Pareto frontier."""
+    """Joint DSE in one frontier: mapping search at ``(num_pes, noc_bw)``,
+    then the hardware grid for each of the ``top_k`` distinct found
+    mappings — evaluated through the same universal executable with the
+    hardware point as a per-row operand (no staging, no re-compilation) —
+    plus any requested Table 3 baselines, merged into one Pareto
+    frontier."""
     t0 = time.perf_counter()
+    search_kwargs = dict(search_kwargs or {})
+    block = search_kwargs.get("block", 1024)
+    multicast = search_kwargs.get("multicast", True)
+    spatial_reduction = search_kwargs.get("spatial_reduction", True)
     sr = search(op, objective=objective, budget=mapping_budget,
                 space=space, num_pes=num_pes, noc_bw=noc_bw, seed=seed,
-                cache_dir=cache_dir, **(search_kwargs or {}))
+                cache_dir=cache_dir, **search_kwargs)
 
-    flows: list[tuple[str, Dataflow]] = []
+    picked: list[tuple[str, tuple]] = []
     seen: set[tuple] = set()
-    from .space import point_dataflow
     for entry in sr.top_k:
         df = point_dataflow(sr.space, entry["point"])
         if df.directives in seen:
             continue
         seen.add(df.directives)
-        flows.append((df.name, df))
-        if len(flows) >= top_k:
+        picked.append((df.name, entry["point"]))
+        if len(picked) >= top_k:
             break
-    for name in include_table3:
-        flows.append((f"table3:{name}", table3_for_layer(name, op)))
 
     cfg = cfg or DSEConfig()
     sweeps: list[tuple[str, DSEResult]] = []
-    for label, df in flows:
-        sweeps.append((label, run_dse(op, df, cfg, tile_tag=label)))
+    n_compiles = 0
+    for label, point in picked:
+        r, nc = _joint_sweep(op, sr.space, point, label, cfg, block=block,
+                             multicast=multicast,
+                             spatial_reduction=spatial_reduction)
+        n_compiles += nc
+        sweeps.append((label, r))
+    for name in include_table3:
+        sweeps.append((f"table3:{name}",
+                       run_dse(op, table3_for_layer(name, op), cfg,
+                               multicast=multicast,
+                               spatial_reduction=spatial_reduction,
+                               tile_tag=f"table3:{name}")))
 
     best: dict[str, dict[str, Any] | None] = {}
     for obj in ("throughput", "energy", "edp"):
@@ -108,4 +160,5 @@ def co_search(op: LayerOp, objective: str = "edp",
         pareto=merged_pareto(sweeps),
         best=best,
         n_evaluated=sr.n_evaluated + sum(r.n_evaluated for _, r in sweeps),
-        elapsed_s=time.perf_counter() - t0)
+        elapsed_s=time.perf_counter() - t0,
+        n_compiles=sr.n_compiles + n_compiles)

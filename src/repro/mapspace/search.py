@@ -1,15 +1,22 @@
 """Mapping-space search strategies behind one ``search()`` API.
 
-Three strategies, auto-selected by space size vs budget:
+Four strategies, auto-selected by space size vs budget:
 
-  * ``exhaustive`` — every point, when the space (and its jit-group count)
-    fits the budget;
-  * ``random`` — uniform sampling over a deterministic subset of structure
-    groups (each group is a separate XLA compile, so unbounded group
-    exploration would spend the budget on compiles, not evaluations);
-  * ``greedy`` — hill-climbing refinement of the random phase's best point:
-    neighbors mutate one gene at a time, structural moves are restricted to
-    already-compiled groups.
+  * ``exhaustive`` — every point, when the space fits the budget;
+  * ``random`` — uniform sampling over the whole space;
+  * ``greedy`` — hill-climbing refinement of the random phase's best
+    point: neighbors mutate one gene at a time, *including* structural
+    genes (spatial / permutation / cluster);
+  * ``genetic`` — crossover + mutation over the gene encoding with large
+    populations.
+
+Structure genes are ordinary search moves because evaluation runs through
+the universal structure-as-operand evaluator (``mapspace.universal``): the
+whole space costs at most two XLA compiles, so nothing clamps how many
+(spatial × perm × cluster) groups a strategy may visit.  Before
+evaluation, candidate points are deduped against analysis-equivalent
+permutations and optionally bounded by L1/L2 buffer budgets
+(``space.prune_by_budget``).
 
 Everything is deterministic under ``seed``.  Objective values come from the
 batched feature vector (``core.vectorized.FEATURES``); lower-is-better
@@ -29,8 +36,8 @@ from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES
 from . import cache as _cache
 from .batched import FEATURE_INDEX, EvalStats, evaluate_points
-from .space import MapSpace, Point, build_space, enumerate_points, \
-    point_dataflow, sample_points
+from .space import MapSpace, Point, build_space, dedupe_equivalent_points, \
+    enumerate_points, point_dataflow, prune_by_budget, sample_points
 
 # objective -> (feature column, maximize?)
 OBJECTIVES = {
@@ -39,6 +46,8 @@ OBJECTIVES = {
     "runtime": ("runtime", False),
     "throughput": ("throughput", True),
 }
+
+STRATEGIES = ("exhaustive", "random", "greedy", "genetic")
 
 
 @dataclasses.dataclass
@@ -55,6 +64,8 @@ class SearchResult:
     elapsed_s: float
     eval_s: float
     compile_s: float
+    n_steady: int = 0                 # rows in steady-timed batched calls
+    n_compiles: int = 0               # XLA compiles triggered
     cached: bool = False
 
     @property
@@ -63,10 +74,14 @@ class SearchResult:
 
     @property
     def mappings_per_s(self) -> float:
-        """Steady-state batched evaluation rate (compiles excluded — they
-        are a one-off amortized across repeated queries, cf. the on-disk
-        cache)."""
-        return self.n_evaluated / max(self.eval_s, 1e-9)
+        """Steady-state batched evaluation rate, on the SAME definition as
+        :class:`EvalStats.mappings_per_s`: steady-timed rows (padding and
+        first-call compile re-runs excluded) over steady evaluation time.
+        Compiles are a one-off amortized across repeated queries (cf. the
+        on-disk result cache and the jax compilation cache)."""
+        if not self.n_steady:
+            return 0.0
+        return self.n_steady / max(self.eval_s, 1e-9)
 
 
 def _objective_column(feats: np.ndarray, objective: str) -> np.ndarray:
@@ -80,23 +95,10 @@ def _stats_dict(row: np.ndarray) -> dict[str, float]:
     return {name: float(row[i]) for i, name in enumerate(FEATURES)}
 
 
-def _select_groups(space: MapSpace, max_groups: int,
-                   rng: np.random.Generator) -> list:
-    keys = space.group_keys()
-    if len(keys) <= max_groups:
-        return keys
-    # evenly-strided subset with a seeded phase: spreads across spatial /
-    # perm / cluster choices instead of clustering at the list head
-    stride = len(keys) / max_groups
-    phase = float(rng.uniform(0, stride))
-    return [keys[int(phase + i * stride) % len(keys)]
-            for i in range(max_groups)]
-
-
-def _neighbors(space: MapSpace, pt: Point,
-               allowed_groups: set) -> list[Point]:
-    """One-gene mutations; structural genes only move within groups that
-    are already compiled (allowed_groups)."""
+def _neighbors(space: MapSpace, pt: Point) -> list[Point]:
+    """One-gene mutations.  Structural genes (spatial / perm / cluster)
+    move freely: with the universal evaluator a new structure group is just
+    a different operand pattern, not a new XLA compile."""
     ranges = space.gene_ranges()
     out = []
     for gi in range(len(pt)):
@@ -104,23 +106,82 @@ def _neighbors(space: MapSpace, pt: Point,
             g = pt[gi] + delta
             if not 0 <= g < ranges[gi]:
                 continue
-            cand = pt[:gi] + (g,) + pt[gi + 1:]
-            if gi < 3 and space.group_key(cand) not in allowed_groups:
-                continue
-            out.append(cand)
+            out.append(pt[:gi] + (g,) + pt[gi + 1:])
     return out
+
+
+def _random_point(space: MapSpace, rng: np.random.Generator) -> Point:
+    return tuple(int(rng.integers(r)) for r in space.gene_ranges())
+
+
+def _genetic_loop(space: MapSpace, rng: np.random.Generator, budget: int,
+                  run, evaluated: dict[Point, float], *,
+                  population: int, mutate_p: float = 0.15,
+                  tournament: int = 3) -> None:
+    """Crossover + mutation over the gene encoding (ROADMAP item).  Large
+    populations are practical because structural genes no longer trigger
+    compiles — the whole generation is one batched evaluate call."""
+    ranges = space.gene_ranges()
+    population = max(4, min(population, budget))
+    run(sample_points(space, rng, population))
+    stalls = 0
+    while len(evaluated) < budget and evaluated and stalls < 8:
+        before = len(evaluated)
+        pool = sorted(evaluated, key=evaluated.get)[:population]
+
+        def pick() -> Point:
+            idx = rng.integers(len(pool), size=tournament).min()
+            return pool[int(idx)]
+
+        children: list[Point] = []
+        seen: set[Point] = set()
+        attempts = 0
+        want = min(population, budget - len(evaluated))
+        while len(children) < want and attempts < 20 * want:
+            attempts += 1
+            a, b = pick(), pick()
+            mask = rng.random(len(ranges))
+            child = tuple(
+                (int(rng.integers(r)) if m < mutate_p else
+                 (ga if m < (1 + mutate_p) / 2 else gb))
+                for ga, gb, m, r in zip(a, b, mask, ranges))
+            if child in seen or child in evaluated:
+                continue
+            seen.add(child)
+            children.append(child)
+        if not children:
+            # population converged: re-seed with fresh uniform points
+            children = sample_points(space, rng, want, exclude=set(evaluated))
+            if not children:
+                break
+        run(children)
+        # budget pruning may silently drop every child: bound the loop so
+        # a feasible set smaller than the budget terminates instead of
+        # spinning forever
+        stalls = stalls + 1 if len(evaluated) == before else 0
 
 
 def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
            space: MapSpace | None = None, num_pes: int = 256,
            noc_bw: float = 32.0, strategy: str = "auto", seed: int = 0,
-           top_k: int = 8, max_groups: int = 12, refine_frac: float = 0.3,
-           block: int = 1024, cache_dir: str | None = None,
+           top_k: int = 8, max_groups: int | None = None,
+           refine_frac: float = 0.3, block: int = 1024,
+           population: int | None = None,
+           l1_budget_kb: float | None = None,
+           l2_budget_kb: float | None = None,
+           cache_dir: str | None = None, engine: str = "universal",
            multicast: bool = True, spatial_reduction: bool = True
            ) -> SearchResult:
     """Search the mapping space of ``op`` for the best dataflow at a fixed
     hardware point.  ``budget`` caps evaluated mappings; ``strategy`` is
-    ``auto`` / ``exhaustive`` / ``random`` / ``greedy``."""
+    ``auto`` or one of ``exhaustive`` / ``random`` / ``greedy`` /
+    ``genetic``.
+
+    ``max_groups`` is legacy: the universal evaluator made structure-group
+    exploration compile-free, so nothing is clamped anymore (the value
+    still participates in the result-cache key for reproducibility).
+    ``l1_budget_kb``/``l2_budget_kb`` drop over-budget tile sets before
+    evaluation."""
     if objective not in OBJECTIVES:
         raise ValueError(f"objective must be one of {sorted(OBJECTIVES)}")
     space = space or build_space(op)
@@ -128,16 +189,16 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
     t_start = time.perf_counter()
 
     if strategy == "auto":
-        strategy = "exhaustive" \
-            if space.size <= budget and space.n_groups <= max_groups \
-            else "greedy"
-    if strategy not in ("exhaustive", "random", "greedy"):
+        strategy = "exhaustive" if space.size <= budget else "greedy"
+    if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}")
 
     key = _cache.search_key(
         op, space, num_pes, noc_bw, objective, budget, strategy, seed,
         extra=f"mc={multicast},sr={spatial_reduction},mg={max_groups},"
-              f"rf={refine_frac},blk={block},tk={top_k}")
+              f"rf={refine_frac},blk={block},tk={top_k},"
+              f"pop={population},l1={l1_budget_kb},l2={l2_budget_kb},"
+              f"eng={engine}")
     hit = _cache.load(cache_dir, key)
     if hit is not None:
         return SearchResult(
@@ -148,24 +209,31 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
                     "stats": e["stats"]} for e in hit["top_k"]],
             n_evaluated=hit["n_evaluated"], n_groups=hit["n_groups"],
             elapsed_s=time.perf_counter() - t_start,
-            eval_s=hit["eval_s"], compile_s=hit["compile_s"], cached=True)
+            eval_s=hit["eval_s"], compile_s=hit["compile_s"],
+            n_steady=hit.get("n_steady", 0),
+            n_compiles=hit.get("n_compiles", 0), cached=True)
 
     ev = dict(num_pes=num_pes, noc_bw=noc_bw, block=block,
-              multicast=multicast, spatial_reduction=spatial_reduction)
+              multicast=multicast, spatial_reduction=spatial_reduction,
+              engine=engine)
     stats = EvalStats()
     evaluated: dict[Point, float] = {}
     rows: dict[Point, np.ndarray] = {}
 
     def run(points: Sequence[Point]) -> None:
         points = [p for p in points if p not in evaluated]
+        points = prune_by_budget(op, space, points, l1_kb=l1_budget_kb,
+                                 l2_kb=l2_budget_kb)
         if not points:
             return
-        feats, st = evaluate_points(op, space, points, **ev)
+        # analysis-equivalent permutations collapse to one evaluated row
+        reps, back = dedupe_equivalent_points(op, space, points)
+        feats, st = evaluate_points(op, space, reps, **ev)
         stats.merge(st)
         vals = _objective_column(feats, objective)
         for i, p in enumerate(points):
-            evaluated[p] = float(vals[i])
-            rows[p] = feats[i]
+            evaluated[p] = float(vals[back[i]])
+            rows[p] = feats[back[i]]
 
     if strategy == "exhaustive":
         pts = list(itertools.islice(enumerate_points(space), budget))
@@ -175,18 +243,18 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
             # so rather than reporting a full sweep
             strategy = "exhaustive[truncated]"
         run(pts)
-        groups = {space.group_key(p) for p in evaluated}
+    elif strategy == "genetic":
+        pop = population or max(32, min(10_000, budget // 4))
+        _genetic_loop(space, rng, budget, run, evaluated, population=pop)
     else:
-        groups_list = _select_groups(space, max_groups, rng)
-        groups = set(groups_list)
         n_refine = int(budget * refine_frac) if strategy == "greedy" else 0
-        run(sample_points(space, rng, budget - n_refine, groups_list))
+        run(sample_points(space, rng, budget - n_refine))
         if strategy == "greedy" and evaluated:
             spent_guard = 0
             while len(evaluated) < budget and spent_guard < 64:
                 spent_guard += 1
                 best = min(evaluated, key=evaluated.get)
-                nbrs = [p for p in _neighbors(space, best, groups)
+                nbrs = [p for p in _neighbors(space, best)
                         if p not in evaluated][:budget - len(evaluated)]
                 if not nbrs:
                     break
@@ -196,8 +264,10 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
                     break  # converged: no neighbor improved
 
     if not evaluated:
-        raise RuntimeError("search evaluated no mappings (empty space?)")
+        raise RuntimeError("search evaluated no mappings "
+                           "(empty space, or budgets pruned everything?)")
 
+    groups = {space.group_key(p) for p in evaluated}
     order = sorted(evaluated, key=evaluated.get)
     _, maximize = OBJECTIVES[objective]
 
@@ -213,7 +283,8 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
                 "stats": _stats_dict(rows[p])} for p in order[:top_k]],
         n_evaluated=len(evaluated), n_groups=len(groups),
         elapsed_s=time.perf_counter() - t_start,
-        eval_s=stats.eval_s, compile_s=stats.compile_s)
+        eval_s=stats.eval_s, compile_s=stats.compile_s,
+        n_steady=stats.n_steady, n_compiles=stats.n_compiles)
 
     _cache.store(cache_dir, key, {
         "strategy": result.strategy,
@@ -222,5 +293,6 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
         "top_k": [{"point": list(e["point"]), "value": e["value"],
                    "stats": e["stats"]} for e in result.top_k],
         "n_evaluated": result.n_evaluated, "n_groups": result.n_groups,
-        "eval_s": result.eval_s, "compile_s": result.compile_s})
+        "eval_s": result.eval_s, "compile_s": result.compile_s,
+        "n_steady": result.n_steady, "n_compiles": result.n_compiles})
     return result

@@ -303,6 +303,142 @@ def point_operands(space: MapSpace, points: Sequence[Point]
 
 
 # ----------------------------------------------------------------------
+# Space pruning: equivalent-permutation dedupe + buffer-budget bounds
+# ----------------------------------------------------------------------
+
+def _resolve_sz(v, op: LayerOp) -> int:
+    return op.dims[v.dim] if isinstance(v, Sz) else int(v)
+
+
+def _point_ranks(space: MapSpace, op: LayerOp, point: Point
+                 ) -> tuple[dict[str, float], dict[str, int]]:
+    """Loop-order ranks (higher = inner) and trip counts per dim for one
+    point, mirroring the grouped templates: implicit dims outermost,
+    searched axes in permutation order, pinned window dims innermost."""
+    s_i, p_i, c_i = point[:3]
+    tiles = point[3:]
+    a = len(space.axes)
+    rank: dict[str, float] = {}
+    trips: dict[str, int] = {}
+    searched = {ax.dim for ax in space.axes}
+    missing = [d for d in op.dims
+               if d not in searched and d not in space.pinned]
+    for i, d in enumerate(missing):
+        rank[d] = -1 - i
+        trips[d] = 1
+    spatial_axis = space.spatial_choices[s_i]
+    for pos, ai in enumerate(space.perms[p_i]):
+        ax = space.axes[ai]
+        rank[ax.dim] = pos
+        ext = op.dims[ax.dim]
+        size = min(ax.sizes[tiles[ai]], ext)
+        off = ax.offsets[tiles[ai]] * op.stride_of(ax.dim)
+        if ai == spatial_axis:
+            # spatial folding depends on the PE count, unknown here —
+            # conservatively treat the spatial loop as multi-trip so it is
+            # never deduped out of the order signature
+            trips[ax.dim] = 2
+        else:
+            trips[ax.dim] = 1 + -(-max(ext - size, 0) // off)
+    for j, d in enumerate(space.pinned):
+        rank[d] = a + j
+        trips[d] = 1
+    return rank, trips
+
+
+def canonical_signature(op: LayerOp, space: MapSpace, point: Point
+                        ) -> tuple:
+    """Equivalence signature: two points with equal signatures produce
+    bit-identical analysis results even when their permutation genes
+    differ.
+
+    Permutations that differ only in the position of trip-count-1 loops
+    (tile size covering the whole dim) are *almost* interchangeable; the
+    engine's residual order sensitivities are the identity of each
+    tensor's innermost coupled loop and which reduction loops sit outer to
+    the output's innermost coupled loop (the psum-spill rule).  The
+    signature captures exactly those, so deduping on it is lossless."""
+    s_i, p_i, c_i = point[:3]
+    tiles = point[3:]
+    rank, trips = _point_ranks(space, op, point)
+    perm_order = tuple(ai for ai in space.perms[p_i]
+                       if trips[space.axes[ai].dim] > 1)
+    inners = []
+    for t in op.tensors():
+        cl = [d for d in rank if t.coupled_to(d)]
+        inners.append(max(cl, key=rank.get) if cl else None)
+    ocl = [d for d in rank if op.output.coupled_to(d)]
+    red_flags: tuple = ()
+    if ocl:
+        inner_o = max(ocl, key=rank.get)
+        red_flags = tuple(
+            sorted(d for d in rank
+                   if d in op.reduction_dims() and trips[d] > 1
+                   and rank[d] < rank[inner_o]))
+    return (s_i, c_i, tiles, perm_order, tuple(inners), red_flags)
+
+
+def dedupe_equivalent_points(op: LayerOp, space: MapSpace,
+                             points: Sequence[Point]
+                             ) -> tuple[list[Point], list[int]]:
+    """Collapse analysis-equivalent points (ROADMAP "richer space
+    pruning").  Returns ``(representatives, rep_index_per_point)`` so
+    callers evaluate only the representatives and scatter features back."""
+    reps: list[Point] = []
+    index: dict[tuple, int] = {}
+    back: list[int] = []
+    for pt in points:
+        sig = canonical_signature(op, space, pt)
+        at = index.get(sig)
+        if at is None:
+            at = len(reps)
+            index[sig] = at
+            reps.append(pt)
+        back.append(at)
+    return reps, back
+
+
+def buffer_estimate_kb(op: LayerOp, space: MapSpace, point: Point,
+                       dtype_bytes: int = 2) -> tuple[float, float]:
+    """Closed-form (L1, L2) working-set lower bounds in KB for one point —
+    double-buffered per-PE tile and per-level steady tile.  Lower bounds by
+    construction (spatial spans only grow the true L2 requirement), so
+    budget pruning never drops a feasible mapping."""
+    sizes = dict(op.dims)
+    for ai, ax in enumerate(space.axes):
+        sizes[ax.dim] = min(ax.sizes[point[3 + ai]], op.dims[ax.dim])
+    l2 = 2 * sum(t.volume(sizes) for t in op.tensors())
+    inner = dict(sizes)
+    copt = space.cluster_options[point[2]]
+    if copt is not None:
+        inner[copt.inner_dim] = min(_resolve_sz(copt.inner_size, op),
+                                    inner[copt.inner_dim])
+    l1 = 2 * sum(t.volume(inner) for t in op.tensors())
+    return (l1 * dtype_bytes / 1024.0, l2 * dtype_bytes / 1024.0)
+
+
+def prune_by_budget(op: LayerOp, space: MapSpace,
+                    points: Sequence[Point], *,
+                    l1_kb: float | None = None,
+                    l2_kb: float | None = None,
+                    dtype_bytes: int = 2) -> list[Point]:
+    """Drop points whose working-set lower bound exceeds the L1/L2 buffer
+    budget — before any evaluation (ROADMAP "bound tile sets by buffer
+    budgets")."""
+    if l1_kb is None and l2_kb is None:
+        return list(points)
+    out = []
+    for pt in points:
+        e1, e2 = buffer_estimate_kb(op, space, pt, dtype_bytes)
+        if l1_kb is not None and e1 > l1_kb:
+            continue
+        if l2_kb is not None and e2 > l2_kb:
+            continue
+        out.append(pt)
+    return out
+
+
+# ----------------------------------------------------------------------
 # Enumeration / sampling
 # ----------------------------------------------------------------------
 

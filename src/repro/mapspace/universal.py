@@ -1,0 +1,244 @@
+"""Universal batched evaluation: the whole mapping space through ONE
+XLA executable per (op, level-count).
+
+``repro.mapspace.batched`` groups candidates by (spatial × perm × cluster)
+structure and compiles one executable per group — ~5–20 s of XLA time
+each, which forced ``search()`` to clamp how many structure groups it
+explores.  This module encodes the *entire* gene tuple as vmapped operands
+of ``core.vectorized.universal_evaluator`` instead:
+
+  * tile sizes / offsets — as before;
+  * the permutation — a rank vector (axis -> position in the loop order);
+  * the spatial choice — a one-hot selector;
+  * the cluster option — a traced cluster size + a one-hot over the
+    space's (inner dim, inner map) candidates;
+  * the hardware point (#PEs, NoC bandwidth) — traced per row, so the
+    co-DSE's mapping × hardware frontier needs no re-compilation either.
+
+A mapping space therefore costs at most TWO compiles (its 1-level and
+2-level families), no matter how many structure groups it spans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.tensor_analysis import LayerOp
+from ..core.vectorized import FEATURES, UniversalSpec, universal_evaluator
+from .space import ClusterOption, MapSpace, Point, _resolve_sz
+
+# Executables warmed at a given block shape this process (same role as
+# ``batched._WARMED``), plus a monotone compile counter for regression
+# tests and benchmarks: the whole point of the universal evaluator is that
+# this counter stays O(1) per (op, level-count), not O(groups).
+_WARMED: set[tuple] = set()
+_COMPILE_COUNT = 0
+
+
+def compile_count() -> int:
+    """Process-wide number of first-call (compiling) universal executions."""
+    return _COMPILE_COUNT
+
+
+def mark_warmed(op: LayerOp, spec, multicast: bool, reduction: bool,
+                n_rows: int) -> bool:
+    """Record a first-call (compiling) universal execution at an ad-hoc
+    batch shape — e.g. ``measure_rate``'s timing batches, which bypass
+    :func:`evaluate_encoded`.  Returns True when the shape was new.  Keeps
+    :func:`compile_count` honest for every universal execution path (the
+    bench/CI O(1)-compile gate counts through it)."""
+    global _COMPILE_COUNT
+    key = _warm_key(op, spec, multicast, reduction, n_rows)
+    if key in _WARMED:
+        return False
+    _WARMED.add(key)
+    _COMPILE_COUNT += 1
+    return True
+
+
+def _cluster_candidate(copt: ClusterOption, op: LayerOp
+                       ) -> tuple[str, int, int]:
+    """Resolved (inner_dim, inner_size, inner_offset) of a cluster option —
+    the static inner-map identity the csel one-hot selects over (the
+    cluster *size* stays a traced operand)."""
+    ext = op.dims[copt.inner_dim]
+    return (copt.inner_dim,
+            min(_resolve_sz(copt.inner_size, op), ext),
+            min(_resolve_sz(copt.inner_offset, op), ext))
+
+
+def universal_specs(op: LayerOp, space: MapSpace
+                    ) -> tuple[UniversalSpec, UniversalSpec | None]:
+    """The (1-level, 2-level) executable specs for a space; the 2-level
+    spec is ``None`` when the space has no Cluster options."""
+    dim_names = tuple(op.dims)
+    axis_dims = tuple(ax.dim for ax in space.axes)
+    for d in axis_dims:
+        if d not in op.dims:
+            raise ValueError(f"axis dim {d!r} not an op dim")
+    cands: list[tuple[str, int, int]] = []
+    for copt in space.cluster_options:
+        if copt is None:
+            continue
+        cand = _cluster_candidate(copt, op)
+        if cand not in cands:
+            cands.append(cand)
+    # MapSpace tiles are divisor-legal by construction: temporal axes never
+    # produce an edge phase, so the A+1 single-edge enumeration is exact
+    spec1 = UniversalSpec(dim_names=dim_names, axis_dims=axis_dims,
+                          pinned=tuple(space.pinned), single_edge=True)
+    spec2 = UniversalSpec(dim_names=dim_names, axis_dims=axis_dims,
+                          pinned=tuple(space.pinned), cluster=tuple(cands),
+                          single_edge=True) if cands else None
+    return spec1, spec2
+
+
+def _candidate_index(space: MapSpace, op: LayerOp,
+                     cands: tuple[tuple[str, int, int], ...]
+                     ) -> dict[int, tuple[int, int]]:
+    """cluster_idx -> (candidate index, cluster size) for non-None options."""
+    out: dict[int, tuple[int, int]] = {}
+    for ci, copt in enumerate(space.cluster_options):
+        if copt is None:
+            continue
+        out[ci] = (cands.index(_cluster_candidate(copt, op)),
+                   int(copt.size))
+    return out
+
+
+def encode_points(op: LayerOp, space: MapSpace, points: Sequence[Point],
+                  spec: UniversalSpec, *, num_pes, noc_bw
+                  ) -> dict[str, np.ndarray]:
+    """Operand arrays for points of ONE level-count family.
+
+    ``num_pes``/``noc_bw`` may be scalars (fixed hardware) or per-point
+    arrays (joint mapping × hardware rows)."""
+    n, a = len(points), len(space.axes)
+    ops = {
+        "sizes": np.empty((n, a), np.float32),
+        "offsets": np.empty((n, a), np.float32),
+        "rank": np.empty((n, a), np.float32),
+        "sp": np.zeros((n, a), np.float32),
+        "pes": np.broadcast_to(
+            np.asarray(num_pes, np.float32), (n,)).copy(),
+        "bw": np.broadcast_to(
+            np.asarray(noc_bw, np.float32), (n,)).copy(),
+    }
+    if spec.cluster:
+        ops["csize"] = np.empty((n,), np.float32)
+        ops["csel"] = np.zeros((n, len(spec.cluster)), np.float32)
+        cidx = _candidate_index(space, op, spec.cluster)
+    for i, pt in enumerate(points):
+        s_i, p_i, c_i = pt[:3]
+        tiles = pt[3:]
+        for ai, ax in enumerate(space.axes):
+            ops["sizes"][i, ai] = ax.sizes[tiles[ai]]
+            ops["offsets"][i, ai] = ax.offsets[tiles[ai]]
+        for pos, ai in enumerate(space.perms[p_i]):
+            ops["rank"][i, ai] = pos
+        ops["sp"][i, space.spatial_choices[s_i]] = 1.0
+        if spec.cluster:
+            if c_i not in cidx:
+                raise ValueError(f"point {pt} is not a 2-level mapping")
+            k, csize = cidx[c_i]
+            ops["csel"][i, k] = 1.0
+            ops["csize"][i] = csize
+        elif space.cluster_options[c_i] is not None:
+            raise ValueError(f"point {pt} is not a 1-level mapping")
+    return ops
+
+
+@dataclasses.dataclass
+class UniversalRun:
+    """Timing bookkeeping of one universal evaluation pass."""
+    n_rows: int = 0
+    n_compiles: int = 0
+    compile_s: float = 0.0
+    eval_s: float = 0.0
+
+
+def _warm_key(op: LayerOp, spec: UniversalSpec, multicast, reduction,
+              block: int) -> tuple:
+    return (op.name, tuple(sorted(op.dims.items())), op.op_type, spec,
+            bool(multicast), bool(reduction), block)
+
+
+def evaluate_encoded(op: LayerOp, spec: UniversalSpec,
+                     ops: dict[str, np.ndarray], *, block: int = 1024,
+                     multicast: bool = True, spatial_reduction: bool = True
+                     ) -> tuple[np.ndarray, UniversalRun]:
+    """Run one operand batch through the universal executable with fixed
+    block padding (so each (spec, block) compiles exactly once per
+    process); returns ``(features[n, F], run_stats)``."""
+    global _COMPILE_COUNT
+    f = universal_evaluator(op, spec, multicast=multicast,
+                            spatial_reduction=spatial_reduction)
+    n = len(ops["pes"])
+    feats = np.empty((n, len(FEATURES)), np.float32)
+    run = UniversalRun(n_rows=n)
+    wk = _warm_key(op, spec, multicast, spatial_reduction, block)
+    for lo in range(0, n, block):
+        hi = min(lo + block, n)
+        pad = block - (hi - lo)
+        batch = {}
+        for k, v in ops.items():
+            chunk = v[lo:hi]
+            if pad:
+                chunk = np.concatenate(
+                    [chunk, np.repeat(v[lo:lo + 1], pad, 0)])
+            batch[k] = jnp.asarray(chunk)
+        if wk not in _WARMED:
+            # first call at this shape: jit compile — re-run timed so every
+            # batch contributes a steady-rate sample
+            t0 = time.perf_counter()
+            np.asarray(f(batch))
+            run.compile_s += time.perf_counter() - t0
+            run.n_compiles += 1
+            _COMPILE_COUNT += 1
+            _WARMED.add(wk)
+        t0 = time.perf_counter()
+        out = np.asarray(f(batch))
+        run.eval_s += time.perf_counter() - t0
+        feats[lo:hi] = out[:hi - lo]
+    return feats, run
+
+
+def evaluate_points_universal(op: LayerOp, space: MapSpace,
+                              points: Sequence[Point], *, num_pes,
+                              noc_bw, block: int = 1024,
+                              multicast: bool = True,
+                              spatial_reduction: bool = True
+                              ) -> tuple[np.ndarray, UniversalRun]:
+    """Evaluate arbitrary mapping points — any mix of structure groups —
+    with at most TWO compiles (1-level + 2-level families).
+
+    ``num_pes``/``noc_bw`` may be per-point arrays: the hardware point is
+    an operand of the same executable (the co-DSE's joint frontier)."""
+    spec1, spec2 = universal_specs(op, space)
+    pes = np.broadcast_to(np.asarray(num_pes, np.float32),
+                          (len(points),))
+    bw = np.broadcast_to(np.asarray(noc_bw, np.float32), (len(points),))
+    lvl1_idx = [i for i, pt in enumerate(points)
+                if space.cluster_options[pt[2]] is None]
+    lvl2_idx = [i for i, pt in enumerate(points)
+                if space.cluster_options[pt[2]] is not None]
+    feats = np.empty((len(points), len(FEATURES)), np.float32)
+    run = UniversalRun(n_rows=len(points))
+    for spec, idxs in ((spec1, lvl1_idx), (spec2, lvl2_idx)):
+        if not idxs:
+            continue
+        assert spec is not None
+        ops = encode_points(op, space, [points[i] for i in idxs], spec,
+                            num_pes=pes[idxs], noc_bw=bw[idxs])
+        sub, r = evaluate_encoded(op, spec, ops, block=block,
+                                  multicast=multicast,
+                                  spatial_reduction=spatial_reduction)
+        feats[idxs] = sub
+        run.n_compiles += r.n_compiles
+        run.compile_s += r.compile_s
+        run.eval_s += r.eval_s
+    return feats, run

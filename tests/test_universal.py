@@ -1,0 +1,281 @@
+"""Tests for the universal structure-as-operand evaluator
+(repro.mapspace.universal) and its consumers.
+
+The load-bearing properties:
+
+  * features match the faithful integer engine exactly (integer
+    quantities) / within float32 tolerance, across permutations, spatial
+    choices and cluster options — structure lives in operands;
+  * a multi-group ``evaluate_points`` call triggers at most TWO XLA
+    compiles (one per level-count family), however many structure groups
+    the points span;
+  * permutation dedupe is lossless and budget pruning is sound;
+  * the joint mapping × hardware sweep agrees with the legacy staged DSE.
+"""
+import numpy as np
+import pytest
+
+from repro.core import tensor_analysis as ta
+from repro.core.dse import DSEConfig, run_dse
+from repro.core.model import analyze
+from repro.core.performance import HWConfig
+from repro.core.vectorized import FEATURES
+from repro.mapspace import (build_space, buffer_estimate_kb,
+                            dedupe_equivalent_points, enumerate_points,
+                            evaluate_points, point_dataflow,
+                            prune_by_budget, sample_points, search)
+from repro.mapspace.universal import compile_count
+
+HW = HWConfig(num_pes=48, noc_bw=12.0, noc_latency=2.0)
+
+# pure-product integer quantities are asserted exactly; quantities built
+# from divisions/accumulations within float32 tolerance (the batched
+# evaluators run in f32, the faithful engine in exact Python numbers)
+_INT_FEATURES = ("macs",)
+_REL = 1e-3
+
+
+@pytest.fixture(scope="module")
+def conv_op():
+    return ta.conv2d("uni-conv", k=8, c=6, y=12, x=12, r=3, s=3)
+
+
+@pytest.fixture(scope="module")
+def conv_space(conv_op):
+    # window-outer axis (Y) + sliding cluster inner: the hard cases
+    return build_space(conv_op, dims=("K", "C", "Y"), cluster_sizes=(8,),
+                      perm_mode="all")
+
+
+def _assert_matches_faithful(op, space, pts, feats, hw):
+    for i, pt in enumerate(pts):
+        s = analyze(op, point_dataflow(space, pt), hw)
+        ref = {"runtime": float(s.runtime), "energy_pj": float(s.energy_pj),
+               "macs": float(s.total_macs), "l1_kb": float(s.l1_req_kb),
+               "l2_kb": float(s.l2_req_kb), "util": float(s.utilization),
+               "bw_req": float(s.peak_bw.get(0, 0)), "edp": float(s.edp)}
+        got = dict(zip(FEATURES, feats[i]))
+        for k, v in ref.items():
+            if k in _INT_FEATURES:
+                assert got[k] == v, (pt, k)
+            else:
+                assert got[k] == pytest.approx(v, rel=_REL), (pt, k)
+
+
+def test_universal_matches_faithful_across_structures(conv_op, conv_space):
+    """Every structure group — permutations, spatial choices, cluster
+    options — through ONE executable pair, matching the faithful engine."""
+    rng = np.random.default_rng(0)
+    pts = sample_points(conv_space, rng, 48)
+    groups = {conv_space.group_key(p) for p in pts}
+    assert len(groups) > 10  # genuinely multi-structure
+    feats, stats = evaluate_points(conv_op, conv_space, pts,
+                                   num_pes=HW.num_pes, noc_bw=HW.noc_bw,
+                                   block=64)
+    _assert_matches_faithful(conv_op, conv_space, pts, feats, HW)
+
+
+def test_at_most_two_compiles_for_multigroup_eval():
+    """Regression: a fresh multi-group space costs <= 2 XLA compiles (its
+    1-level and 2-level families), not one per structure group."""
+    op = ta.conv2d("uni-compiles", k=8, c=4, y=10, x=10, r=3, s=3)
+    space = build_space(op, dims=("K", "C"), cluster_sizes=(4,),
+                        perm_mode="all")
+    assert space.n_groups >= 8
+    rng = np.random.default_rng(1)
+    pts = sample_points(space, rng, 64)
+    assert len({space.group_key(p) for p in pts}) >= 6
+    before = compile_count()
+    feats, stats = evaluate_points(op, space, pts, num_pes=32,
+                                   noc_bw=8.0, block=64)
+    assert compile_count() - before <= 2
+    assert stats.n_compiles <= 2
+    # second call: fully warm, zero compiles
+    before = compile_count()
+    evaluate_points(op, space, pts[:16], num_pes=32, noc_bw=8.0, block=64)
+    assert compile_count() - before == 0
+
+
+def test_strided_conv_and_fc_match_faithful():
+    rng = np.random.default_rng(2)
+    cases = [
+        (ta.conv2d("uni-stride", k=4, c=4, y=11, x=11, r=3, s=3, stride=2),
+         dict(dims=("K", "C", "Y"), cluster_sizes=(4,))),
+        (ta.fc("uni-fc", n=4, k=16, c=12),
+         dict(dims=("K", "C", "N"), cluster_sizes=(4,), perm_mode="all")),
+    ]
+    for op, kw in cases:
+        space = build_space(op, **kw)
+        pts = sample_points(space, rng, 24)
+        feats, _ = evaluate_points(op, space, pts, num_pes=HW.num_pes,
+                                   noc_bw=HW.noc_bw, block=32)
+        _assert_matches_faithful(op, space, pts, feats, HW)
+
+
+def test_grouped_engine_agrees_with_universal(conv_op, conv_space):
+    """The legacy per-group engine stays as an independent cross-check."""
+    rng = np.random.default_rng(3)
+    pts = sample_points(conv_space, rng, 12)
+    fu, _ = evaluate_points(conv_op, conv_space, pts, num_pes=HW.num_pes,
+                            noc_bw=HW.noc_bw, block=16,
+                            engine="universal")
+    fg, _ = evaluate_points(conv_op, conv_space, pts, num_pes=HW.num_pes,
+                            noc_bw=HW.noc_bw, block=16, engine="grouped")
+    np.testing.assert_allclose(fu, fg, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Space pruning satellites
+# ----------------------------------------------------------------------
+
+def test_dedupe_is_lossless(conv_op, conv_space):
+    """Points collapsed onto one representative have identical faithful
+    stats (permutations differing only in trip-count-1 loops)."""
+    pts = list(enumerate_points(conv_space))
+    reps, back = dedupe_equivalent_points(conv_op, conv_space, pts)
+    assert len(reps) < len(pts)  # something was actually pruned
+    rng = np.random.default_rng(4)
+    checked = 0
+    for i in rng.permutation(len(pts)):
+        pt, rep = pts[i], reps[back[i]]
+        if pt == rep:
+            continue
+        a = analyze(conv_op, point_dataflow(conv_space, pt), HW)
+        b = analyze(conv_op, point_dataflow(conv_space, rep), HW)
+        assert float(a.runtime) == float(b.runtime)
+        assert float(a.energy_pj) == pytest.approx(float(b.energy_pj))
+        assert float(a.total_macs) == float(b.total_macs)
+        checked += 1
+        if checked >= 20:
+            break
+    assert checked > 0
+
+
+def test_budget_pruning_is_sound(conv_op, conv_space):
+    """The working-set estimate is a lower bound: pruning never drops a
+    mapping that actually fits the budget."""
+    rng = np.random.default_rng(5)
+    pts = sample_points(conv_space, rng, 32)
+    feats, _ = evaluate_points(conv_op, conv_space, pts,
+                               num_pes=HW.num_pes, noc_bw=HW.noc_bw,
+                               block=32)
+    l1_col = FEATURES.index("l1_kb")
+    l2_col = FEATURES.index("l2_kb")
+    for i, pt in enumerate(pts):
+        e1, e2 = buffer_estimate_kb(conv_op, conv_space, pt)
+        assert e1 <= feats[i, l1_col] * (1 + 1e-5)
+        assert e2 <= feats[i, l2_col] * (1 + 1e-5)
+    budget = float(np.median(feats[:, l1_col]))
+    kept = prune_by_budget(conv_op, conv_space, pts, l1_kb=budget)
+    for i, pt in enumerate(pts):
+        if feats[i, l1_col] <= budget:      # actually fits
+            assert pt in kept               # ... must not be pruned
+
+
+# ----------------------------------------------------------------------
+# Search-level satellites
+# ----------------------------------------------------------------------
+
+def test_genetic_strategy_deterministic_and_competitive(conv_op):
+    space = build_space(conv_op, dims=("K", "C"), cluster_sizes=(4,))
+    kw = dict(objective="edp", budget=150, space=space,
+              num_pes=HW.num_pes, noc_bw=HW.noc_bw, strategy="genetic",
+              block=64)
+    a = search(conv_op, seed=7, **kw)
+    b = search(conv_op, seed=7, **kw)
+    assert a.best_point == b.best_point
+    assert a.best_value == b.best_value
+    assert a.n_evaluated <= 150
+    exhaustive = search(conv_op, objective="edp", budget=10_000,
+                        space=space, num_pes=HW.num_pes, noc_bw=HW.noc_bw,
+                        strategy="exhaustive", block=64)
+    # genetic explores structure freely; must land within 2x of optimum
+    assert a.best_value <= exhaustive.best_value * 2.0
+
+
+def test_greedy_structural_moves_unrestricted(conv_op):
+    """Neighbors now mutate structural genes freely — the search visits
+    groups far beyond any legacy max_groups clamp."""
+    space = build_space(conv_op, dims=("K", "C", "Y"), cluster=False,
+                        perm_mode="all")
+    assert space.n_groups > 12
+    r = search(conv_op, objective="edp", budget=400, space=space,
+               num_pes=HW.num_pes, noc_bw=HW.noc_bw, strategy="greedy",
+               seed=0, block=64)
+    assert r.n_groups > 12  # legacy default clamp was 12
+
+
+def test_mappings_per_s_single_definition(conv_op):
+    """EvalStats and SearchResult quote the same steady-state rate."""
+    space = build_space(conv_op, dims=("K", "C"), cluster=False)
+    rng = np.random.default_rng(8)
+    pts = sample_points(space, rng, 40)
+    _, stats = evaluate_points(conv_op, space, pts, num_pes=HW.num_pes,
+                               noc_bw=HW.noc_bw, block=64)
+    assert stats.n_steady == len(pts)
+    assert stats.mappings_per_s == pytest.approx(
+        stats.n_steady / max(stats.eval_s, 1e-9))
+    r = search(conv_op, objective="edp", budget=60, space=space,
+               num_pes=HW.num_pes, noc_bw=HW.noc_bw, strategy="random",
+               seed=0, block=64)
+    assert r.mappings_per_s == pytest.approx(
+        r.n_steady / max(r.eval_s, 1e-9))
+    # steady rows never exceed evaluated mappings (dedupe only shrinks)
+    assert r.n_steady <= r.n_evaluated
+
+
+def test_joint_codse_matches_staged_dse(conv_op):
+    """The merged mapping × hardware frontier (pes/bw as operands of the
+    universal executable) reproduces run_dse's staged numbers."""
+    from repro.mapspace import co_search
+    space = build_space(conv_op, dims=("K", "C"), cluster_sizes=(4,))
+    cfg = DSEConfig(pe_range=(16, 32, 64), bw_range=(4.0, 8.0))
+    co = co_search(conv_op, objective="edp", mapping_budget=100, top_k=2,
+                   cfg=cfg, num_pes=HW.num_pes, noc_bw=HW.noc_bw,
+                   space=space, search_kwargs={"block": 64})
+    assert co.pareto, "joint frontier is empty"
+    label, joint = co.dse[0]
+    pt = co.search.top_k[0]["point"]
+    legacy = run_dse(conv_op, point_dataflow(space, pt), cfg)
+    np.testing.assert_allclose(np.asarray(joint.stats.energy_pj),
+                               np.asarray(legacy.stats.energy_pj),
+                               rtol=1e-5)
+    np.testing.assert_array_equal(joint.valid, legacy.valid)
+
+
+# ----------------------------------------------------------------------
+# Hypothesis property test (optional dependency)
+# ----------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+    _HAS_HYPOTHESIS = True
+except ImportError:
+    _HAS_HYPOTHESIS = False
+
+
+if _HAS_HYPOTHESIS:
+    import hypothesis.strategies as hst
+    from hypothesis import given, settings
+
+    # one fixed op/space so the whole property run reuses the same two
+    # compiled executables; hypothesis drives the *mapping structure*
+    # (permutation, spatial choice, cluster option, tiles) and hardware
+    _PROP_OP = ta.conv2d("uni-prop", k=8, c=4, y=10, x=10, r=3, s=3)
+    _PROP_SPACE = build_space(_PROP_OP, dims=("K", "C", "Y"),
+                              cluster_sizes=(4,), perm_mode="all")
+
+    @hst.composite
+    def legal_point(draw):
+        return tuple(draw(hst.integers(0, r - 1))
+                     for r in _PROP_SPACE.gene_ranges())
+
+    @given(legal_point(),
+           hst.integers(min_value=2, max_value=128),
+           hst.floats(min_value=1.0, max_value=64.0))
+    @settings(max_examples=40, deadline=None)
+    def test_property_universal_matches_faithful(pt, pes, bw):
+        hw = HWConfig(num_pes=pes, noc_bw=bw, noc_latency=2.0)
+        feats, _ = evaluate_points(_PROP_OP, _PROP_SPACE, [pt],
+                                   num_pes=pes, noc_bw=bw, block=8)
+        _assert_matches_faithful(_PROP_OP, _PROP_SPACE, [pt], feats, hw)
