@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Smoke gate: quick tier-1 subset + quick benchmarks.
+# Smoke gate: quick tier-1 subset + quick benchmarks + sharded smoke.
 # Full tier-1 is `PYTHONPATH=src python -m pytest -x -q` (see ROADMAP.md).
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -13,24 +13,40 @@ python -m pytest -x -q \
     tests/test_engine.py \
     tests/test_mapper.py \
     tests/test_mapspace.py \
-    tests/test_universal.py
+    tests/test_universal.py \
+    tests/test_genes.py
+
+echo "== 4-host-device sharded smoke =="
+# The gene pipeline stripes chunks over all local devices; forcing four
+# host CPU devices exercises the pmap path and the 1-vs-N-device
+# determinism assertions inside tests/test_genes.py for real.
+XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -x -q tests/test_genes.py
 
 echo "== benchmarks --quick =="
 python -m benchmarks.run --quick
 
 echo "== bench_mapspace smoke artifact =="
 # BENCH_mapspace.json (written by the mapspace benchmark above) tracks the
-# perf trajectory per PR: mappings/s, universal-evaluator compile count,
-# and wall-clock.  CI uploads everything matching benchmarks/out/BENCH_*.
+# perf trajectory per PR: end-to-end + eval-only mappings/s, gene-vs-legacy
+# speedup, joint-sweep designs/s, universal-evaluator compile count, device
+# count.  It lands BOTH under benchmarks/out (CI artifact upload) and at
+# the repo root (perf trajectory tracker).
 test -f benchmarks/out/BENCH_mapspace.json
+test -f BENCH_mapspace.json
 python - <<'EOF'
 import json
-d = json.load(open("benchmarks/out/BENCH_mapspace.json"))
+d = json.load(open("BENCH_mapspace.json"))
 print(json.dumps(d, indent=2))
-# <= 2 per (layer, level-count) + 2 for the rate-measure batch shapes;
-# the point is O(1) per layer family, never O(structure groups)
-assert d["universal_compiles_process"] <= 2 * len(d["layers"]) + 2, \
-    "compile count must stay O(1) per (layer, level-count), not O(groups)"
+# the gene pipeline must keep the <= 2-compiles-per-(op, level-count,
+# batch-shape) model: `compile_budget` is the closed-form bound the bench
+# derives from the evaluation contexts it runs — O(1) per layer family,
+# never O(structure groups)
+assert d["universal_compiles_process"] <= d["compile_budget"], \
+    (d["universal_compiles_process"], d["compile_budget"],
+     "compile count must stay O(1) per (layer, level-count), not O(groups)")
+# the gene pipeline must beat the legacy tuple-point path end to end
+assert d["e2e_speedup_vs_legacy"] >= 1.0, d["e2e_speedup_vs_legacy"]
 EOF
 
 echo "CI smoke gate passed."

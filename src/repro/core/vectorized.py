@@ -308,6 +308,158 @@ def _universal_eval_one(op: LayerOp, spec: UniversalSpec, hw_static: dict):
     return eval_one
 
 
+# ----------------------------------------------------------------------
+# Fused on-device reduction tail: top-k + Pareto inside the executable
+# ----------------------------------------------------------------------
+#
+# The universal evaluator above returns the full (n, F) feature matrix,
+# which makes the *host* the bottleneck of a large DSE: every chunk copies
+# n x F floats back and the objective/top-k/Pareto reduction runs in numpy.
+# The reduced evaluator fuses that reduction into the same XLA program:
+# each chunk returns the scalar objective column (optional), the k winner
+# rows, and a within-chunk Pareto-candidate mask over (energy, throughput)
+# — a few scalars per design instead of the feature matrix.  An optional
+# hardware tail folds the co-DSE's area/power/leakage accounting
+# (``core.dse.run_dse`` semantics) into the jit so a joint mapping x
+# hardware sweep needs no host post-processing either.  Chunks can stripe
+# across local devices via ``jax.pmap`` (``n_devices > 1``) and donate
+# their operand buffers on backends that support donation.
+
+@dataclasses.dataclass(frozen=True)
+class HWTail:
+    """Static hardware-accounting tail (mirrors ``core.dse.run_dse``):
+    SRAM = l1*pes + l2, area/power from the RTL-regression model, leakage
+    energy added to the energy/EDP columns, budget-invalid designs masked
+    out of the objective and the frontier."""
+    area_power: Any               # energy.AreaPowerModel (frozen, hashable)
+    area_budget_mm2: float
+    power_budget_mw: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceSpec:
+    """Static reduction structure: objective column (canonical minimize),
+    top-k width, and optional extras."""
+    objective: str                # FEATURES name
+    maximize: bool = False
+    k: int = 8
+    return_vals: bool = True      # per-row objective column (search needs
+    #                               it; the paper-scale sweep does not)
+    pareto: bool = True           # (energy, throughput) candidate mask
+    hw: HWTail | None = None
+
+
+def _reduce_tail(reduce: ReduceSpec, feats, ops):
+    """The traced reduction: runs on (block, F) features of one shard."""
+    live = ops["live"] > 0                       # padding rows never win
+    obj_i = FEATURES.index(reduce.objective)
+    runtime = feats[:, FEATURES.index("runtime")]
+    valid = live
+    if reduce.hw is not None:
+        ap = reduce.hw.area_power
+        pes, bw = ops["pes"], ops["bw"]
+        l1 = feats[:, FEATURES.index("l1_kb")]
+        l2 = feats[:, FEATURES.index("l2_kb")]
+        sram_kb = l1 * pes + l2
+        area = ap.area(pes, sram_kb, bw)
+        power = ap.power(pes, sram_kb, bw)
+        valid = live & (area <= reduce.hw.area_budget_mm2) \
+            & (power <= reduce.hw.power_budget_mw)
+        energy = feats[:, FEATURES.index("energy_pj")] \
+            + ap.static_energy_pj(area, runtime)
+        feats = feats.at[:, FEATURES.index("energy_pj")].set(energy)
+        feats = feats.at[:, FEATURES.index("edp")].set(energy * runtime)
+    obj = feats[:, obj_i]
+    if reduce.maximize:
+        obj = -obj
+    obj = jnp.where(jnp.isfinite(obj) & valid, obj, jnp.inf)
+    k = min(reduce.k, feats.shape[0])
+    # lax.top_k is tie-stable (lower index first) — the cross-shard merge
+    # relies on that for 1-vs-N-device determinism
+    neg_top, top_idx = jax.lax.top_k(-obj, k)
+    out = {
+        "top_vals": -neg_top,
+        "top_idx": top_idx,
+        "top_feats": feats[top_idx],
+        "n_valid": jnp.sum(valid),
+    }
+    if reduce.return_vals:
+        out["vals"] = obj
+    if reduce.pareto:
+        e = feats[:, FEATURES.index("energy_pj")]
+        t = feats[:, FEATURES.index("throughput")]
+        e = jnp.where(valid & jnp.isfinite(e), e, jnp.inf)
+        t = jnp.where(valid & jnp.isfinite(t), t, -jnp.inf)
+        # sort-based frontier: O(n log n), not O(n^2) pairwise
+        order = jnp.argsort(e)
+        ts = t[order]
+        prev = jnp.concatenate(
+            [jnp.full((1,), -jnp.inf, ts.dtype),
+             jax.lax.cummax(ts)[:-1]])
+        mask = jnp.zeros(e.shape, bool).at[order].set(ts > prev)
+        out["pareto_mask"] = mask & valid
+        out["pareto_energy"] = e
+        out["pareto_thr"] = t
+    return out
+
+
+def _donate() -> tuple:
+    """Operand-buffer donation, skipped on backends without support (CPU
+    would warn on every chunk)."""
+    return (0,) if jax.default_backend() != "cpu" else ()
+
+
+@functools.lru_cache(maxsize=256)
+def _build_reduced(op_key: str, spec: UniversalSpec, reduce: ReduceSpec,
+                   multicast: bool, reduction: bool, latency: float,
+                   macs_per_pe: int, n_devices: int) -> Callable:
+    op = _OP_REG[op_key]
+    hw_static = dict(noc_latency=latency, multicast=multicast,
+                     spatial_reduction=reduction, macs_per_pe=macs_per_pe)
+    eval_one = _universal_eval_one(op, spec, hw_static)
+
+    def chunk_fn(ops):
+        feats = jax.vmap(eval_one)(
+            {k: v for k, v in ops.items() if k != "live"})
+        return _reduce_tail(reduce, feats, ops)
+
+    if n_devices > 1:
+        return jax.pmap(chunk_fn, donate_argnums=_donate())
+    return jax.jit(chunk_fn, donate_argnums=_donate())
+
+
+def universal_reduced_evaluator(op: LayerOp, spec: UniversalSpec,
+                                reduce: ReduceSpec, *,
+                                multicast: bool = True,
+                                spatial_reduction: bool = True,
+                                noc_latency: float = 2.0,
+                                macs_per_pe: int = 1,
+                                n_devices: int = 1) -> Callable:
+    """Returns the fused evaluate-and-reduce executable.
+
+    Input is the universal operand dict plus a ``live`` (i,) float mask
+    (0 = padding row).  With ``n_devices > 1`` every array carries a
+    leading device axis ``(D, block, ...)`` and the executable is a pmap —
+    each device reduces its shard; the caller merges the per-shard top-k /
+    frontier candidates (by (value, global index), which is deterministic
+    for any device count).  Output per shard:
+
+    ``top_vals``/``top_idx``/``top_feats``
+        the k best rows by the canonicalized (minimized) objective;
+    ``vals`` (optional)
+        the full objective column — one scalar per design, NOT the
+        (n, F) feature matrix;
+    ``pareto_mask``/``pareto_energy``/``pareto_thr`` (optional)
+        within-shard Pareto-candidate mask over (energy min, throughput
+        max) plus the two columns for host-side frontier refinement;
+    ``n_valid``
+        count of live (and, with a hardware tail, budget-valid) rows."""
+    ok = f"{op.name}|{sorted(op.dims.items())}|{op.op_type}"
+    _OP_REG[ok] = op
+    return _build_reduced(ok, spec, reduce, multicast, spatial_reduction,
+                          noc_latency, macs_per_pe, n_devices)
+
+
 @functools.lru_cache(maxsize=256)
 def _build_universal(op_key: str, spec: UniversalSpec, multicast: bool,
                      reduction: bool, latency: float,

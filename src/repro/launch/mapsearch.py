@@ -76,8 +76,20 @@ def main(argv=None) -> None:
                     help="prune tile sets over this L2 budget")
     ap.add_argument("--quick", action="store_true",
                     help="tiny space + budget (smoke test)")
+    ap.add_argument("--pipeline", default="gene",
+                    choices=["gene", "legacy"],
+                    help="gene: device-resident vectorized pipeline "
+                         "(default); legacy: tuple-point parity oracle")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="local devices to stripe evaluation chunks over "
+                         "(default: all; CPU multi-device needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--co-dse", action="store_true",
                     help="cross top-k mappings with the hardware DSE grid")
+    ap.add_argument("--joint-genes", type=int, default=0,
+                    help="with --co-dse: also run the paper-scale joint "
+                         "sweep — this many sampled mappings x the FULL "
+                         "hardware grid through the fused device pipeline")
     ap.add_argument("--cache-dir", default=DEFAULT_CACHE,
                     help="on-disk result cache ('' disables)")
     ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
@@ -118,12 +130,16 @@ def main(argv=None) -> None:
                population=args.population,
                l1_budget_kb=args.l1_budget_kb,
                l2_budget_kb=args.l2_budget_kb,
+               pipeline=args.pipeline, devices=args.devices,
                cache_dir=args.cache_dir or None)
     tag = " (cached)" if r.cached else ""
-    print(f"# strategy={r.strategy}{tag} evaluated={r.n_evaluated} "
-          f"groups={r.n_groups} eval={r.eval_s:.2f}s "
-          f"compiles={r.n_compiles} ({r.compile_s:.1f}s) "
-          f"rate={r.mappings_per_s / 1e6:.2f}M mappings/s")
+    print(f"# pipeline={r.pipeline} devices={r.n_devices} "
+          f"strategy={r.strategy}{tag} evaluated={r.n_evaluated} "
+          f"groups={r.n_groups} encode={r.encode_s:.2f}s "
+          f"eval={r.eval_s:.2f}s compiles={r.n_compiles} "
+          f"({r.compile_s:.1f}s) "
+          f"rate={r.mappings_per_s / 1e6:.2f}M mappings/s "
+          f"e2e={r.end_to_end_mappings_per_s / 1e6:.2f}M mappings/s")
     print(f"\nbest {args.objective} = {_fmt(r.best_value)}")
     print(r.best_dataflow)
     s = r.best_stats
@@ -160,7 +176,16 @@ def main(argv=None) -> None:
                        cfg=cfg, num_pes=args.pes, noc_bw=args.bw,
                        seed=args.seed, space=space,
                        include_table3=list(TABLE3),
+                       joint_genes=args.joint_genes,
                        cache_dir=args.cache_dir or None)
+        if co.joint is not None:
+            j = co.joint
+            print(f"\n# joint sweep: {j.n_designs} designs "
+                  f"({j.n_mappings} mappings x {j.n_hw} hw points) in "
+                  f"{j.elapsed_s:.1f}s = "
+                  f"{j.designs_per_s / 1e6:.2f}M designs/s on "
+                  f"{j.n_devices} device(s); {j.n_valid} valid, "
+                  f"{len(j.pareto)} frontier points")
         print(f"\n# co-DSE: {co.n_evaluated} designs in "
               f"{co.elapsed_s:.1f}s; merged Pareto frontier "
               f"({len(co.pareto)} points, energy vs throughput):")

@@ -21,23 +21,35 @@ See ``repro.launch.mapsearch`` for the CLI.
 """
 from .batched import EvalStats, evaluate_points, measure_rate
 from .cache import enable_compilation_cache
-from .codse import CoDSEResult, co_search, merged_pareto
-from .search import OBJECTIVES, STRATEGIES, SearchResult, search
-from .space import (ClusterOption, MapSpace, MapSpaceError, TileAxis,
-                    build_space, buffer_estimate_kb, canonical_signature,
-                    dedupe_equivalent_points, enumerate_points,
-                    group_template, point_dataflow, prune_by_budget,
-                    sample_points)
-from .universal import (compile_count, evaluate_points_universal,
+from .codse import (CoDSEResult, JointSweepResult, co_search, joint_sweep,
+                    merged_pareto)
+from .search import (OBJECTIVES, PIPELINES, STRATEGIES, SearchResult,
+                     search)
+from .space import (ClusterOption, GeneTables, MapSpace, MapSpaceError,
+                    TileAxis, build_space, buffer_estimate_kb,
+                    buffer_estimates_genes, canonical_signature,
+                    decode_indices, dedupe_equivalent_genes,
+                    dedupe_equivalent_points, enumerate_genes,
+                    enumerate_points, flat_index, gene_tables,
+                    genes_from_points, group_template, point_dataflow,
+                    points_from_genes, prune_by_budget,
+                    prune_genes_by_budget, sample_genes, sample_points)
+from .universal import (GeneEval, GeneRun, compile_count, encode_genes,
+                        evaluate_genes, evaluate_points_universal,
                         universal_specs)
 
 __all__ = [
-    "ClusterOption", "CoDSEResult", "EvalStats", "MapSpace",
-    "MapSpaceError", "OBJECTIVES", "STRATEGIES", "SearchResult",
-    "TileAxis", "build_space", "buffer_estimate_kb", "canonical_signature",
-    "co_search", "compile_count", "dedupe_equivalent_points",
-    "enable_compilation_cache", "enumerate_points",
-    "evaluate_points", "evaluate_points_universal", "group_template",
-    "measure_rate", "merged_pareto", "point_dataflow", "prune_by_budget",
-    "sample_points", "search", "universal_specs",
+    "ClusterOption", "CoDSEResult", "EvalStats", "GeneEval", "GeneRun",
+    "GeneTables", "JointSweepResult", "MapSpace", "MapSpaceError",
+    "OBJECTIVES", "PIPELINES", "STRATEGIES", "SearchResult", "TileAxis",
+    "build_space", "buffer_estimate_kb", "buffer_estimates_genes",
+    "canonical_signature", "co_search", "compile_count", "decode_indices",
+    "dedupe_equivalent_genes", "dedupe_equivalent_points",
+    "enable_compilation_cache", "encode_genes", "enumerate_genes",
+    "enumerate_points", "evaluate_genes", "evaluate_points",
+    "evaluate_points_universal", "flat_index", "gene_tables",
+    "genes_from_points", "group_template", "joint_sweep",
+    "measure_rate", "merged_pareto", "point_dataflow",
+    "points_from_genes", "prune_by_budget", "prune_genes_by_budget",
+    "sample_genes", "sample_points", "search", "universal_specs",
 ]

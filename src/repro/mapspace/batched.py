@@ -60,6 +60,7 @@ class EvalStats:
     n_compiles: int = 0      # first-call (XLA compile) executions
     compile_s: float = 0.0   # first call per (executable, block shape)
     eval_s: float = 0.0      # steady-state batched evaluation time
+    encode_s: float = 0.0    # host operand-encode time (gene pipeline)
 
     @property
     def mappings_per_s(self) -> float:
@@ -76,6 +77,7 @@ class EvalStats:
         self.n_compiles += other.n_compiles
         self.compile_s += other.compile_s
         self.eval_s += other.eval_s
+        self.encode_s += other.encode_s
 
 
 def evaluate_points(op: LayerOp, space: MapSpace, points: Sequence[Point],

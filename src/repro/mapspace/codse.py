@@ -23,10 +23,38 @@ import numpy as np
 from ..core.dataflows import table3_for_layer
 from ..core.dse import DSEConfig, DSEResult, run_dse
 from ..core.tensor_analysis import LayerOp
-from ..core.vectorized import BatchStats
-from .search import SearchResult, search
-from .space import MapSpace, point_dataflow
-from .universal import evaluate_points_universal
+from ..core.vectorized import FEATURES, BatchStats, HWTail
+from .search import OBJECTIVES, SearchResult, search
+from .space import (MapSpace, genes_from_points, point_dataflow,
+                    sample_genes)
+from .universal import (evaluate_genes, evaluate_points_universal,
+                        pareto_front)
+
+
+@dataclasses.dataclass
+class JointSweepResult:
+    """One paper-scale device-resident sweep over (gene matrix x hardware
+    grid).  The full cross product runs through the gene pipeline's fused
+    reduction tail — area/power/leakage accounting inside the jit, only
+    top-k winners and the (energy, throughput) frontier come back, never
+    an (n, F) feature matrix."""
+    n_designs: int
+    n_mappings: int
+    n_hw: int
+    n_valid: int
+    objective: str
+    top: list[dict[str, Any]]             # best designs (mapping + hw)
+    pareto: list[dict[str, Any]]          # exact valid-design frontier
+    elapsed_s: float
+    compile_s: float
+    n_compiles: int
+    n_devices: int = 1
+
+    @property
+    def designs_per_s(self) -> float:
+        """End-to-end rate excluding the one-off XLA compile — the number
+        to hold against the paper's 480M designs at 0.17M/s."""
+        return self.n_designs / max(self.elapsed_s - self.compile_s, 1e-9)
 
 
 @dataclasses.dataclass
@@ -38,6 +66,7 @@ class CoDSEResult:
     n_evaluated: int                      # mappings + joint hw designs
     elapsed_s: float
     n_compiles: int = 0                   # XLA compiles for the joint sweep
+    joint: JointSweepResult | None = None  # paper-scale gene sweep
 
 
 def merged_pareto(results: Sequence[tuple[str, DSEResult]],
@@ -93,6 +122,94 @@ def _joint_sweep(op: LayerOp, space: MapSpace, point, label: str,
         tile_tag=label), run.n_compiles
 
 
+def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
+                cfg: DSEConfig | None = None, *, objective: str = "edp",
+                k: int = 16, block: int = 8192,
+                n_devices: int | None = None,
+                chunk_designs: int = 1 << 18,
+                multicast: bool = True, spatial_reduction: bool = True
+                ) -> JointSweepResult:
+    """Paper-scale joint DSE: every row of ``genes`` crossed with the full
+    (PEs x NoC bandwidth) grid of ``cfg`` — ``len(genes) * |grid|``
+    designs — streamed through the gene pipeline with the hardware
+    accounting of ``core.dse.run_dse`` (SRAM placement, area/power
+    budgets, leakage energy) fused into the executable.  The cross
+    product is never materialized on the host: design chunks gather their
+    mapping row and hardware point from the flat design index on the fly.
+
+    This is the reproduction of the paper's 480M-design search shape:
+    mapping and hardware axes in ONE operand space, at most two XLA
+    compiles, any local device count."""
+    t0 = time.perf_counter()
+    cfg = cfg or DSEConfig()
+    genes = np.asarray(genes, np.int64)
+    pes_g, bw_g = np.meshgrid(np.asarray(cfg.pe_range, np.int64),
+                              np.asarray(cfg.bw_range, np.float32),
+                              indexing="ij")
+    pes, bws = pes_g.ravel().astype(np.float32), bw_g.ravel()
+    m, h = genes.shape[0], pes.shape[0]
+    n = m * h
+    col, maximize = OBJECTIVES[objective]
+    tail = HWTail(area_power=cfg.area_power,
+                  area_budget_mm2=cfg.area_budget_mm2,
+                  power_budget_mw=cfg.power_budget_mw)
+    top_entries: list[tuple[float, int, np.ndarray]] = []
+    front_cands: list[dict[str, Any]] = []
+    n_valid = 0
+    n_compiles = 0
+    compile_s = 0.0
+    n_dev = 1
+    for lo in range(0, n, chunk_designs):
+        hi = min(lo + chunk_designs, n)
+        flat = np.arange(lo, hi, dtype=np.int64)
+        gi, hwi = flat // h, flat % h
+        res = evaluate_genes(
+            op, space, genes[gi], objective=col, maximize=maximize,
+            k=k, num_pes=pes[hwi], noc_bw=bws[hwi], block=block,
+            n_devices=n_devices, multicast=multicast,
+            spatial_reduction=spatial_reduction, return_vals=False,
+            pareto=True, hw_tail=tail)
+        n_valid += res.run.n_valid
+        n_compiles += res.run.n_compiles
+        compile_s += res.run.compile_s
+        n_dev = max(n_dev, res.run.n_devices)
+        for t in res.top:
+            if np.isfinite(t["value"]):
+                top_entries.append((t["value"], lo + t["row"],
+                                    t["feats"]))
+        for p in res.pareto:
+            front_cands.append({**p, "row": lo + p["row"]})
+
+    def design(row: int, feats: np.ndarray | None) -> dict[str, Any]:
+        gi, hwi = row // h, row % h
+        d = {"point": tuple(int(x) for x in genes[gi]),
+             "num_pes": int(pes[hwi]), "noc_bw": float(bws[hwi])}
+        if feats is not None:
+            d.update({name: float(feats[i])
+                      for i, name in enumerate(FEATURES)})
+            sram = d["l1_kb"] * d["num_pes"] + d["l2_kb"]
+            d["area_mm2"] = float(cfg.area_power.area(
+                d["num_pes"], sram, d["noc_bw"]))
+            d["power_mw"] = float(cfg.area_power.power(
+                d["num_pes"], sram, d["noc_bw"]))
+        return d
+
+    top_entries.sort(key=lambda e: (e[0], e[1]))
+    top = []
+    for v, row, feats in top_entries[:k]:
+        d = design(row, feats)
+        d["value"] = -v if maximize else v
+        top.append(d)
+    front = [dict(design(c["row"], None), energy_pj=c["energy_pj"],
+                  throughput=c["throughput"])
+             for c in pareto_front(front_cands)]
+    return JointSweepResult(
+        n_designs=n, n_mappings=m, n_hw=h, n_valid=n_valid,
+        objective=objective, top=top, pareto=front,
+        elapsed_s=time.perf_counter() - t0, compile_s=compile_s,
+        n_compiles=n_compiles, n_devices=n_dev)
+
+
 def co_search(op: LayerOp, objective: str = "edp",
               mapping_budget: int = 2000, top_k: int = 4,
               cfg: DSEConfig | None = None, *, num_pes: int = 256,
@@ -100,13 +217,20 @@ def co_search(op: LayerOp, objective: str = "edp",
               space: MapSpace | None = None,
               include_table3: Sequence[str] = (),
               cache_dir: str | None = None,
+              joint_genes: int = 0, joint_block: int = 8192,
               search_kwargs: dict[str, Any] | None = None) -> CoDSEResult:
     """Joint DSE in one frontier: mapping search at ``(num_pes, noc_bw)``,
     then the hardware grid for each of the ``top_k`` distinct found
     mappings — evaluated through the same universal executable with the
     hardware point as a per-row operand (no staging, no re-compilation) —
     plus any requested Table 3 baselines, merged into one Pareto
-    frontier."""
+    frontier.
+
+    ``joint_genes > 0`` additionally runs the paper-scale sweep
+    (:func:`joint_sweep`): that many uniformly sampled mappings (plus the
+    search winners) crossed with the FULL hardware grid — ``(joint_genes
+    + top_k) * |grid|`` designs through the fused device-resident
+    pipeline — and merges its frontier/bests into the result."""
     t0 = time.perf_counter()
     search_kwargs = dict(search_kwargs or {})
     block = search_kwargs.get("block", 1024)
@@ -143,10 +267,24 @@ def co_search(op: LayerOp, objective: str = "edp",
                                spatial_reduction=spatial_reduction,
                                tile_tag=f"table3:{name}")))
 
+    joint: JointSweepResult | None = None
+    if joint_genes > 0:
+        rng = np.random.default_rng(seed + 1)
+        gm = sample_genes(sr.space, rng, joint_genes)
+        winners = genes_from_points([p for _, p in picked])
+        gm = np.concatenate([winners, gm]) if len(winners) else gm
+        joint = joint_sweep(op, sr.space, gm, cfg, objective=objective,
+                            block=joint_block, multicast=multicast,
+                            spatial_reduction=spatial_reduction)
+        n_compiles += joint.n_compiles
+
     best: dict[str, dict[str, Any] | None] = {}
     for obj in ("throughput", "energy", "edp"):
         cands = [dict(r.best(obj), mapping=label)
                  for label, r in sweeps if r.n_valid]
+        if joint is not None and joint.objective == obj and joint.top:
+            cands.append(dict(joint.top[0],
+                              mapping=f"joint:{joint.top[0]['point']}"))
         if not cands:
             best[obj] = None
             continue
@@ -154,11 +292,19 @@ def co_search(op: LayerOp, objective: str = "edp",
             (lambda p: p["energy_pj"] if obj == "energy" else p["edp"])
         best[obj] = min(cands, key=sign)
 
+    pareto = merged_pareto(sweeps)
+    if joint is not None and joint.pareto:
+        pareto = pareto_front(
+            pareto + [dict(p, mapping=f"joint:{p['point']}")
+                      for p in joint.pareto])
+
     return CoDSEResult(
         search=sr,
         dse=sweeps,
-        pareto=merged_pareto(sweeps),
+        pareto=pareto,
         best=best,
-        n_evaluated=sr.n_evaluated + sum(r.n_evaluated for _, r in sweeps),
+        n_evaluated=sr.n_evaluated + sum(r.n_evaluated for _, r in sweeps)
+        + (joint.n_designs if joint else 0),
         elapsed_s=time.perf_counter() - t0,
-        n_compiles=sr.n_compiles + n_compiles)
+        n_compiles=sr.n_compiles + n_compiles,
+        joint=joint)

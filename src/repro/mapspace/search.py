@@ -10,34 +10,54 @@ Four strategies, auto-selected by space size vs budget:
   * ``genetic`` — crossover + mutation over the gene encoding with large
     populations.
 
-Structure genes are ordinary search moves because evaluation runs through
-the universal structure-as-operand evaluator (``mapspace.universal``): the
-whole space costs at most two XLA compiles, so nothing clamps how many
-(spatial × perm × cluster) groups a strategy may visit.  Before
-evaluation, candidate points are deduped against analysis-equivalent
-permutations and optionally bounded by L1/L2 buffer budgets
-(``space.prune_by_budget``).
+Two execution pipelines share the strategies:
 
-Everything is deterministic under ``seed``.  Objective values come from the
-batched feature vector (``core.vectorized.FEATURES``); lower-is-better
-except throughput.
+  * ``pipeline="gene"`` (default) — integer **gene matrices** are the
+    native currency end to end: vectorized enumeration/sampling
+    (``space.enumerate_genes`` / ``sample_genes``), vectorized
+    budget-pruning and equivalence-dedupe, numpy-gather operand encoding
+    (``universal.encode_genes``), async double-buffered dispatch striped
+    over local devices, and the objective/top-k reduction fused into the
+    XLA executable (``universal.evaluate_genes``).  The host never sees a
+    full feature matrix — only the objective column and k winner rows.
+  * ``pipeline="legacy"`` — the tuple-point path (per-point Python encode
+    + host numpy reduction), kept intact as a parity oracle and
+    baseline: both pipelines evaluate identical candidate sets under a
+    fixed seed and must report matching top-k values.
+
+The genetic strategy's selection/crossover/mutation run on-device via
+``jax.random`` over gene matrices in the gene pipeline (the legacy
+pipeline keeps the original numpy loop).
+
+Everything is deterministic under ``seed`` — including the sharded gene
+pipeline, whose per-shard top-k merge is by (value, global index) and so
+yields identical results at any device count.  Objective values come
+from the batched feature vector (``core.vectorized.FEATURES``);
+lower-is-better except throughput.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 from typing import Any, Sequence
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
 from ..core.directives import Dataflow
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES
 from . import cache as _cache
 from .batched import FEATURE_INDEX, EvalStats, evaluate_points
-from .space import MapSpace, Point, build_space, dedupe_equivalent_points, \
-    enumerate_points, point_dataflow, prune_by_budget, sample_points
+from .space import (MapSpace, Point, build_space, dedupe_equivalent_genes,
+                    dedupe_equivalent_points, enumerate_genes,
+                    enumerate_points, flat_index, point_dataflow,
+                    points_from_genes, prune_by_budget,
+                    prune_genes_by_budget, sample_genes, sample_points)
+from .universal import evaluate_genes
 
 # objective -> (feature column, maximize?)
 OBJECTIVES = {
@@ -48,6 +68,7 @@ OBJECTIVES = {
 }
 
 STRATEGIES = ("exhaustive", "random", "greedy", "genetic")
+PIPELINES = ("gene", "legacy")
 
 
 @dataclasses.dataclass
@@ -67,6 +88,11 @@ class SearchResult:
     n_steady: int = 0                 # rows in steady-timed batched calls
     n_compiles: int = 0               # XLA compiles triggered
     cached: bool = False
+    pipeline: str = "legacy"
+    encode_s: float = 0.0             # host operand-encode time
+    n_devices: int = 1
+    wall_s: float = 0.0               # original search wall (survives the
+    #                                   result cache, unlike elapsed_s)                # devices the eval striped across
 
     @property
     def best_dataflow(self) -> Dataflow:
@@ -82,6 +108,21 @@ class SearchResult:
         if not self.n_steady:
             return 0.0
         return self.n_steady / max(self.eval_s, 1e-9)
+
+    @property
+    def end_to_end_mappings_per_s(self) -> float:
+        """User-observable throughput: evaluated mappings over the FULL
+        search wall time — enumeration/sampling, pruning, dedupe, operand
+        encode, dispatch and reduction — excluding only the one-off XLA
+        compile (amortized by the persistent compilation cache).  This is
+        the number to compare against the paper's 0.17M designs/s.
+        Quoted on the ORIGINAL run's wall (``wall_s``) so a result-cache
+        hit reports the rate of the search it replays, not of the cache
+        load."""
+        denom = self.wall_s - self.compile_s
+        if denom <= 0:
+            return 0.0
+        return self.n_evaluated / denom
 
 
 def _objective_column(feats: np.ndarray, objective: str) -> np.ndarray:
@@ -110,9 +151,24 @@ def _neighbors(space: MapSpace, pt: Point) -> list[Point]:
     return out
 
 
+def _neighbor_genes(space: MapSpace, row: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`_neighbors` over one gene row."""
+    ranges = np.asarray(space.gene_ranges(), np.int64)
+    g = len(ranges)
+    eye = np.eye(g, dtype=np.int64)
+    cand = np.stack([row[None] - eye, row[None] + eye], axis=1)
+    cand = cand.reshape(2 * g, g)            # g0-1, g0+1, g1-1, ...
+    ok = np.all((cand >= 0) & (cand < ranges[None, :]), axis=1)
+    return cand[ok]
+
+
 def _random_point(space: MapSpace, rng: np.random.Generator) -> Point:
     return tuple(int(rng.integers(r)) for r in space.gene_ranges())
 
+
+# ----------------------------------------------------------------------
+# Legacy tuple-point pipeline (parity oracle / baseline)
+# ----------------------------------------------------------------------
 
 def _genetic_loop(space: MapSpace, rng: np.random.Generator, budget: int,
                   run, evaluated: dict[Point, float], *,
@@ -161,62 +217,16 @@ def _genetic_loop(space: MapSpace, rng: np.random.Generator, budget: int,
         stalls = stalls + 1 if len(evaluated) == before else 0
 
 
-def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
-           space: MapSpace | None = None, num_pes: int = 256,
-           noc_bw: float = 32.0, strategy: str = "auto", seed: int = 0,
-           top_k: int = 8, max_groups: int | None = None,
-           refine_frac: float = 0.3, block: int = 1024,
-           population: int | None = None,
-           l1_budget_kb: float | None = None,
-           l2_budget_kb: float | None = None,
-           cache_dir: str | None = None, engine: str = "universal",
-           multicast: bool = True, spatial_reduction: bool = True
-           ) -> SearchResult:
-    """Search the mapping space of ``op`` for the best dataflow at a fixed
-    hardware point.  ``budget`` caps evaluated mappings; ``strategy`` is
-    ``auto`` or one of ``exhaustive`` / ``random`` / ``greedy`` /
-    ``genetic``.
-
-    ``max_groups`` is legacy: the universal evaluator made structure-group
-    exploration compile-free, so nothing is clamped anymore (the value
-    still participates in the result-cache key for reproducibility).
-    ``l1_budget_kb``/``l2_budget_kb`` drop over-budget tile sets before
-    evaluation."""
-    if objective not in OBJECTIVES:
-        raise ValueError(f"objective must be one of {sorted(OBJECTIVES)}")
-    space = space or build_space(op)
-    rng = np.random.default_rng(seed)
-    t_start = time.perf_counter()
-
-    if strategy == "auto":
-        strategy = "exhaustive" if space.size <= budget else "greedy"
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}")
-
-    key = _cache.search_key(
-        op, space, num_pes, noc_bw, objective, budget, strategy, seed,
-        extra=f"mc={multicast},sr={spatial_reduction},mg={max_groups},"
-              f"rf={refine_frac},blk={block},tk={top_k},"
-              f"pop={population},l1={l1_budget_kb},l2={l2_budget_kb},"
-              f"eng={engine}")
-    hit = _cache.load(cache_dir, key)
-    if hit is not None:
-        return SearchResult(
-            objective=objective, strategy=hit["strategy"], space=space,
-            best_point=tuple(hit["best_point"]),
-            best_value=hit["best_value"], best_stats=hit["best_stats"],
-            top_k=[{"point": tuple(e["point"]), "value": e["value"],
-                    "stats": e["stats"]} for e in hit["top_k"]],
-            n_evaluated=hit["n_evaluated"], n_groups=hit["n_groups"],
-            elapsed_s=time.perf_counter() - t_start,
-            eval_s=hit["eval_s"], compile_s=hit["compile_s"],
-            n_steady=hit.get("n_steady", 0),
-            n_compiles=hit.get("n_compiles", 0), cached=True)
-
-    ev = dict(num_pes=num_pes, noc_bw=noc_bw, block=block,
-              multicast=multicast, spatial_reduction=spatial_reduction,
-              engine=engine)
-    stats = EvalStats()
+def _search_legacy(op, space, rng, objective, budget, strategy, *,
+                   refine_frac, population, l1_budget_kb, l2_budget_kb,
+                   ev, stats) -> tuple[dict, dict, str]:
+    """The tuple-point path: per-point encode, host numpy objective —
+    kept as the gene pipeline's parity oracle and baseline.  Candidate
+    generation (enumeration order, uniform sampling draws, neighbor
+    order) is shared with the gene pipeline so a fixed seed yields
+    identical candidate sets in both; only the genetic strategy's child
+    generation differs (numpy loop here, on-device ``jax.random``
+    there)."""
     evaluated: dict[Point, float] = {}
     rows: dict[Point, np.ndarray] = {}
 
@@ -248,7 +258,8 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
         _genetic_loop(space, rng, budget, run, evaluated, population=pop)
     else:
         n_refine = int(budget * refine_frac) if strategy == "greedy" else 0
-        run(sample_points(space, rng, budget - n_refine))
+        run(points_from_genes(
+            sample_genes(space, rng, budget - n_refine)))
         if strategy == "greedy" and evaluated:
             spent_guard = 0
             while len(evaluated) < budget and spent_guard < 64:
@@ -262,37 +273,312 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
                 if evaluated[min(evaluated, key=evaluated.get)] >= \
                         evaluated[best]:
                     break  # converged: no neighbor improved
+    return evaluated, rows, strategy
 
-    if not evaluated:
-        raise RuntimeError("search evaluated no mappings "
-                           "(empty space, or budgets pruned everything?)")
 
-    groups = {space.group_key(p) for p in evaluated}
-    order = sorted(evaluated, key=evaluated.get)
+# ----------------------------------------------------------------------
+# Gene-matrix pipeline (default)
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("ranges", "n", "mutate_p",
+                                    "tournament"))
+def _gene_children(key, pool, ranges: tuple, n: int,
+                   mutate_p: float = 0.15, tournament: int = 3):
+    """On-device genetic step over a val-sorted (best-first) gene pool:
+    min-index tournament selection, uniform crossover, per-gene uniform
+    mutation — all via ``jax.random``, one tiny XLA program per pool
+    shape."""
+    p = pool.shape[0]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ia = jnp.min(jax.random.randint(k1, (n, tournament), 0, p), axis=1)
+    ib = jnp.min(jax.random.randint(k2, (n, tournament), 0, p), axis=1)
+    a, b = pool[ia], pool[ib]
+    m = jax.random.uniform(k3, (n, pool.shape[1]))
+    r = jnp.asarray(ranges, pool.dtype)
+    rand_g = jnp.floor(jax.random.uniform(k4, m.shape) * r) \
+        .astype(pool.dtype)
+    return jnp.where(m < mutate_p, rand_g,
+                     jnp.where(m < (1.0 + mutate_p) / 2.0, a, b))
+
+
+class _GeneSearch:
+    """Search state over gene matrices: distinctness via flat indices,
+    values host-resident as one scalar column, features never
+    materialized beyond the final top-k rows."""
+
+    def __init__(self, op, space, objective, *, l1_kb, l2_kb, ev, stats,
+                 budget):
+        self.op, self.space = op, space
+        self.col, self.maximize = OBJECTIVES[objective]
+        self.l1_kb, self.l2_kb = l1_kb, l2_kb
+        self.ev, self.stats = ev, stats
+        self.budget = budget
+        self.seen = np.empty(0, np.int64)      # sorted flat indices
+        self.genes: list[np.ndarray] = []
+        self.vals: list[np.ndarray] = []
+        self.n = 0
+        self.best_val = np.inf
+        self.best_row: np.ndarray | None = None
+
+    def run(self, g: np.ndarray) -> int:
+        """Evaluate the not-yet-seen rows of ``g``; returns how many new
+        rows received values."""
+        g = np.asarray(g, np.int64).reshape(-1, len(
+            self.space.gene_ranges()))
+        if not g.shape[0]:
+            return 0
+        flat = flat_index(self.space, g)
+        _, first = np.unique(flat, return_index=True)
+        first = np.sort(first)                  # first occurrence, in order
+        g, flat = g[first], flat[first]
+        fresh = ~np.isin(flat, self.seen, assume_unique=True)
+        g, flat = g[fresh], flat[fresh]
+        g, flat = (g[:max(self.budget - self.n, 0)],
+                   flat[:max(self.budget - self.n, 0)])
+        if not g.shape[0]:
+            return 0
+        kept = prune_genes_by_budget(self.op, self.space, g,
+                                     l1_kb=self.l1_kb, l2_kb=self.l2_kb)
+        if kept.shape[0] != g.shape[0]:
+            flat = flat_index(self.space, kept)
+        g = kept
+        if not g.shape[0]:
+            return 0
+        reps, back = dedupe_equivalent_genes(self.op, self.space, g)
+        res = evaluate_genes(self.op, self.space, g[reps],
+                             objective=self.col, maximize=self.maximize,
+                             return_vals=True, pareto=False, **self.ev)
+        v = res.vals[back]
+        self.seen = np.union1d(self.seen, flat)
+        self.genes.append(g)
+        self.vals.append(v)
+        self.n += g.shape[0]
+        groups = np.unique(g[:, :3], axis=0)
+        self.stats.merge(EvalStats(
+            n_points=g.shape[0], n_groups=groups.shape[0],
+            n_steady=res.run.n_steady, n_compiles=res.run.n_compiles,
+            compile_s=res.run.compile_s, eval_s=res.run.eval_s,
+            encode_s=res.run.encode_s))
+        i = int(np.argmin(v))
+        # all-inf chunks still seed the incumbent (first insertion order,
+        # like the legacy dict min) so greedy never climbs from None
+        if self.best_row is None or v[i] < self.best_val:
+            self.best_val = float(v[i])
+            self.best_row = g[i]
+        return g.shape[0]
+
+    def all(self) -> tuple[np.ndarray, np.ndarray]:
+        return (np.concatenate(self.genes) if self.genes
+                else np.empty((0, 0), np.int64),
+                np.concatenate(self.vals) if self.vals
+                else np.empty((0,)))
+
+
+def _search_genes(op, space, rng, objective, budget, strategy, *, seed,
+                  refine_frac, population, st: _GeneSearch) -> str:
+    if strategy == "exhaustive":
+        if space.size > budget:
+            strategy = "exhaustive[truncated]"
+        # like the legacy islice: the first `budget` enumerated points,
+        # whether or not budget pruning later drops some of them
+        end = min(space.size, budget)
+        step = max(65536, st.ev["block"] * 8)
+        for lo in range(0, end, step):
+            st.run(enumerate_genes(space, lo, min(lo + step, end)))
+    elif strategy == "genetic":
+        pop = max(4, min(population or max(32, min(10_000, budget // 4)),
+                         budget))
+        st.run(sample_genes(space, rng, pop))
+        key = jax.random.PRNGKey(seed)
+        ranges = tuple(int(r) for r in space.gene_ranges())
+        stalls = 0
+        while st.n < budget and st.n and stalls < 8:
+            before = st.n
+            allg, allv = st.all()
+            order = np.argsort(allv, kind="stable")[:pop]
+            pool = allg[order]
+            if pool.shape[0] < pop:   # pad to a fixed pool shape (1 jit)
+                pool = np.concatenate(
+                    [pool, np.repeat(pool[-1:], pop - pool.shape[0], 0)])
+            want = min(pop, budget - st.n)
+            key, sub = jax.random.split(key)
+            children = np.asarray(_gene_children(
+                sub, pool.astype(np.int32), ranges, pop))[:want]
+            st.run(children)
+            if st.n == before:        # converged: re-seed fresh uniform
+                st.run(sample_genes(space, rng, want,
+                                    exclude_flat=st.seen))
+            stalls = stalls + 1 if st.n == before else 0
+    else:
+        n_refine = int(budget * refine_frac) if strategy == "greedy" else 0
+        st.run(sample_genes(space, rng, budget - n_refine))
+        if strategy == "greedy" and st.n:
+            spent_guard = 0
+            while st.n < budget and spent_guard < 64:
+                spent_guard += 1
+                prev_best = st.best_val
+                nbrs = _neighbor_genes(space, st.best_row)
+                if not st.run(nbrs[:budget - st.n]):
+                    break
+                if st.best_val >= prev_best:
+                    break  # converged: no neighbor improved
+    return strategy
+
+
+def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
+           space: MapSpace | None = None, num_pes: int = 256,
+           noc_bw: float = 32.0, strategy: str = "auto", seed: int = 0,
+           top_k: int = 8, max_groups: int | None = None,
+           refine_frac: float = 0.3, block: int = 1024,
+           population: int | None = None,
+           l1_budget_kb: float | None = None,
+           l2_budget_kb: float | None = None,
+           cache_dir: str | None = None, engine: str = "universal",
+           pipeline: str = "gene", devices: int | None = None,
+           multicast: bool = True, spatial_reduction: bool = True
+           ) -> SearchResult:
+    """Search the mapping space of ``op`` for the best dataflow at a fixed
+    hardware point.  ``budget`` caps evaluated mappings; ``strategy`` is
+    ``auto`` or one of ``exhaustive`` / ``random`` / ``greedy`` /
+    ``genetic``.
+
+    ``pipeline="gene"`` (default) runs the device-resident gene-matrix
+    pipeline — vectorized host side, fused on-device reduction, chunks
+    striped over ``devices`` local devices (default all) with async
+    double buffering.  ``pipeline="legacy"`` is the tuple-point parity
+    oracle.  Both are deterministic under ``seed`` and evaluate identical
+    candidate sets for ``exhaustive``; sampling draws also coincide
+    across pipelines except for the genetic strategy (whose gene-pipeline
+    selection runs on-device via ``jax.random``).
+
+    ``max_groups`` is legacy: the universal evaluator made structure-group
+    exploration compile-free, so nothing is clamped anymore (the value
+    still participates in the result-cache key for reproducibility).
+    ``l1_budget_kb``/``l2_budget_kb`` drop over-budget tile sets before
+    evaluation."""
+    if objective not in OBJECTIVES:
+        raise ValueError(f"objective must be one of {sorted(OBJECTIVES)}")
+    if pipeline not in PIPELINES:
+        raise ValueError(f"pipeline must be one of {PIPELINES}")
+    space = space or build_space(op)
+    rng = np.random.default_rng(seed)
+    t_start = time.perf_counter()
+
+    if strategy == "auto":
+        strategy = "exhaustive" if space.size <= budget else "greedy"
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    key = _cache.search_key(
+        op, space, num_pes, noc_bw, objective, budget, strategy, seed,
+        extra=f"mc={multicast},sr={spatial_reduction},mg={max_groups},"
+              f"rf={refine_frac},blk={block},tk={top_k},"
+              f"pop={population},l1={l1_budget_kb},l2={l2_budget_kb},"
+              f"eng={engine},pipe={pipeline}")
+    hit = _cache.load(cache_dir, key)
+    if hit is not None:
+        return SearchResult(
+            objective=objective, strategy=hit["strategy"], space=space,
+            best_point=tuple(hit["best_point"]),
+            best_value=hit["best_value"], best_stats=hit["best_stats"],
+            top_k=[{"point": tuple(e["point"]), "value": e["value"],
+                    "stats": e["stats"]} for e in hit["top_k"]],
+            n_evaluated=hit["n_evaluated"], n_groups=hit["n_groups"],
+            elapsed_s=time.perf_counter() - t_start,
+            eval_s=hit["eval_s"], compile_s=hit["compile_s"],
+            n_steady=hit.get("n_steady", 0),
+            n_compiles=hit.get("n_compiles", 0), cached=True,
+            pipeline=hit.get("pipeline", pipeline),
+            encode_s=hit.get("encode_s", 0.0),
+            n_devices=hit.get("n_devices", 1),
+            wall_s=hit.get("wall_s", 0.0))
+
+    stats = EvalStats()
+    n_devices = 1
+    if pipeline == "legacy":
+        ev = dict(num_pes=num_pes, noc_bw=noc_bw, block=block,
+                  multicast=multicast, spatial_reduction=spatial_reduction,
+                  engine=engine)
+        evaluated, rows, strategy = _search_legacy(
+            op, space, rng, objective, budget, strategy,
+            refine_frac=refine_frac, population=population,
+            l1_budget_kb=l1_budget_kb, l2_budget_kb=l2_budget_kb,
+            ev=ev, stats=stats)
+        if not evaluated:
+            raise RuntimeError("search evaluated no mappings "
+                               "(empty space, or budgets pruned "
+                               "everything?)")
+        groups = {space.group_key(p) for p in evaluated}
+        n_groups = len(groups)
+        order_pts = sorted(evaluated, key=evaluated.get)
+        top_pts = order_pts[:top_k]
+        top_vals = [evaluated[p] for p in top_pts]
+        top_feats = [rows[p] for p in top_pts]
+    else:
+        ev = dict(num_pes=num_pes, noc_bw=noc_bw, block=block,
+                  multicast=multicast,
+                  spatial_reduction=spatial_reduction,
+                  n_devices=devices, k=top_k)
+        st = _GeneSearch(op, space, objective, l1_kb=l1_budget_kb,
+                         l2_kb=l2_budget_kb, ev=ev, stats=stats,
+                         budget=budget)
+        strategy = _search_genes(op, space, rng, objective, budget,
+                                 strategy, seed=seed,
+                                 refine_frac=refine_frac,
+                                 population=population, st=st)
+        if not st.n:
+            raise RuntimeError("search evaluated no mappings "
+                               "(empty space, or budgets pruned "
+                               "everything?)")
+        allg, allv = st.all()
+        groups = np.unique(allg[:, :3], axis=0)
+        n_groups = groups.shape[0]
+        order = np.argsort(allv, kind="stable")[:top_k]
+        top_pts = [tuple(int(x) for x in allg[i]) for i in order]
+        top_vals = [float(allv[i]) for i in order]
+        # one tiny warm pass fetches the winners' feature rows — the only
+        # full feature rows the gene pipeline ever materializes
+        fin = evaluate_genes(op, space, allg[order], objective=st.col,
+                             maximize=st.maximize, return_vals=True,
+                             pareto=False, **ev)
+        by_row = {t["row"]: t["feats"] for t in fin.top}
+        top_feats = [by_row[i] for i in range(len(order))]
+        n_devices = fin.run.n_devices
+        n_evaluated = st.n
+
     _, maximize = OBJECTIVES[objective]
 
-    def value_of(p: Point) -> float:
-        return -evaluated[p] if maximize else evaluated[p]
+    def actual(v: float) -> float:
+        return -v if maximize else v
 
-    best = order[0]
     result = SearchResult(
         objective=objective, strategy=strategy, space=space,
-        best_point=best, best_value=value_of(best),
-        best_stats=_stats_dict(rows[best]),
-        top_k=[{"point": p, "value": value_of(p),
-                "stats": _stats_dict(rows[p])} for p in order[:top_k]],
-        n_evaluated=len(evaluated), n_groups=len(groups),
+        best_point=top_pts[0], best_value=actual(top_vals[0]),
+        best_stats=_stats_dict(top_feats[0]),
+        top_k=[{"point": p, "value": actual(v),
+                "stats": _stats_dict(f)}
+               for p, v, f in zip(top_pts, top_vals, top_feats)],
+        n_evaluated=(len(evaluated) if pipeline == "legacy"
+                     else n_evaluated),
+        n_groups=n_groups,
         elapsed_s=time.perf_counter() - t_start,
         eval_s=stats.eval_s, compile_s=stats.compile_s,
-        n_steady=stats.n_steady, n_compiles=stats.n_compiles)
+        n_steady=stats.n_steady, n_compiles=stats.n_compiles,
+        pipeline=pipeline, encode_s=stats.encode_s,
+        n_devices=n_devices,
+        wall_s=time.perf_counter() - t_start)
 
     _cache.store(cache_dir, key, {
         "strategy": result.strategy,
-        "best_point": list(best), "best_value": result.best_value,
+        "best_point": list(result.best_point),
+        "best_value": result.best_value,
         "best_stats": result.best_stats,
         "top_k": [{"point": list(e["point"]), "value": e["value"],
                    "stats": e["stats"]} for e in result.top_k],
         "n_evaluated": result.n_evaluated, "n_groups": result.n_groups,
         "eval_s": result.eval_s, "compile_s": result.compile_s,
-        "n_steady": result.n_steady, "n_compiles": result.n_compiles})
+        "n_steady": result.n_steady, "n_compiles": result.n_compiles,
+        "pipeline": result.pipeline, "encode_s": result.encode_s,
+        "n_devices": result.n_devices, "wall_s": result.wall_s})
     return result

@@ -439,6 +439,359 @@ def prune_by_budget(op: LayerOp, space: MapSpace,
 
 
 # ----------------------------------------------------------------------
+# Gene matrices: the vectorized native currency of the search
+# ----------------------------------------------------------------------
+#
+# A *gene matrix* is an ``(n, G)`` int64 array whose rows are points in
+# gene-tuple layout: ``(spatial_idx, perm_idx, cluster_idx, tile_0, ...,
+# tile_{A-1})``.  Everything the search pipeline does per point — index
+# decode, operand encode, equivalence signatures, buffer bounds — is
+# expressed as numpy gathers over per-space lookup tables, so the host
+# side scales to millions of candidates without Python per-point loops.
+
+def genes_from_points(points: Sequence[Point]) -> np.ndarray:
+    """Stack tuple points into an (n, G) int64 gene matrix."""
+    return np.asarray(points, dtype=np.int64).reshape(len(points), -1)
+
+
+def points_from_genes(genes: np.ndarray) -> list[Point]:
+    """Gene matrix rows back to tuple points (API edges only)."""
+    return [tuple(int(g) for g in row) for row in np.asarray(genes)]
+
+
+def decode_indices(space: MapSpace, idx) -> np.ndarray:
+    """Mixed-radix flat index -> gene matrix, vectorized.
+
+    The digit order matches :func:`enumerate_points`: structural genes
+    outermost (spatial, then perm, then cluster), tile genes innermost with
+    the LAST axis fastest — so ``decode_indices(space, np.arange(n))``
+    reproduces the first ``n`` enumerated points exactly."""
+    idx = np.ascontiguousarray(np.asarray(idx, dtype=np.int64))
+    radices = space.gene_ranges()
+    out = np.empty((idx.shape[0], len(radices)), dtype=np.int64)
+    for j in range(len(radices) - 1, -1, -1):
+        out[:, j] = idx % radices[j]
+        idx = idx // radices[j]
+    return out
+
+
+def flat_index(space: MapSpace, genes: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`decode_indices`: gene rows -> flat int64 indices
+    (used for O(1) distinctness bookkeeping during sampling/search)."""
+    genes = np.asarray(genes, dtype=np.int64)
+    radices = space.gene_ranges()
+    flat = np.zeros(genes.shape[0], dtype=np.int64)
+    for j in range(len(radices)):
+        flat = flat * radices[j] + genes[:, j]
+    return flat
+
+
+def enumerate_genes(space: MapSpace, start: int = 0,
+                    stop: int | None = None) -> np.ndarray:
+    """Vectorized enumeration: gene rows ``start..stop`` in the canonical
+    :func:`enumerate_points` order, with no Python per-point loop."""
+    stop = space.size if stop is None else min(stop, space.size)
+    return decode_indices(space, np.arange(start, max(stop, start),
+                                           dtype=np.int64))
+
+
+def sample_genes(space: MapSpace, rng: np.random.Generator, n: int,
+                 exclude_flat=None) -> np.ndarray:
+    """Up to ``n`` distinct uniform gene rows, deterministic under the
+    caller's rng.  Draws flat indices in vectorized batches; only the
+    distinctness filter touches a host set (O(n), independent of the
+    space size).  ``exclude_flat`` is an iterable of flat indices that
+    must not be re-proposed."""
+    seen: set[int] = set(int(f) for f in exclude_flat) \
+        if exclude_flat is not None else set()
+    out: list[int] = []
+    drawn = 0
+    while len(out) < n and drawn < 20 * n and len(seen) < space.size:
+        m = max(2 * (n - len(out)), 64)
+        drawn += m
+        for f in rng.integers(space.size, size=m).tolist():
+            if f in seen:
+                continue
+            seen.add(f)
+            out.append(f)
+            if len(out) >= n:
+                break
+    return decode_indices(space, np.asarray(out, dtype=np.int64))
+
+
+@dataclasses.dataclass
+class GeneTables:
+    """Per-(op, space) lookup tables mapping gene columns to everything the
+    pipeline needs — built once per space (small Python loops over the
+    space *structure*), then applied to arbitrarily large gene matrices by
+    pure numpy gathers."""
+    # operand encode
+    size_tab: np.ndarray          # (A, maxN) f32 tile sizes (padded)
+    off_tab: np.ndarray           # (A, maxN) f32 tile offsets
+    perm_rank: np.ndarray         # (P, A) f32: axis ai's loop position
+    spatial_axis: np.ndarray      # (S,) int64 axis index per spatial choice
+    cluster_is_none: np.ndarray   # (C,) bool
+    csize_tab: np.ndarray         # (C,) f32 cluster size (0 for None)
+    # equivalence signatures
+    clamped_tab: np.ndarray       # (A, maxN) int64 min(size, extent)
+    trips_tab: np.ndarray         # (A, maxN) int64 non-spatial trip count
+    red_axis: np.ndarray          # (A,) bool axis dim is a reduction dim
+    inner_masks: tuple            # per dynamic-inner tensor: (A,) bool mask
+    out_mask: np.ndarray | None   # (A,) bool output-coupled axes, dynamic
+    out_static_rank: float        # rank of output's inner loop when static
+    # buffer bounds (KB are derived later; volumes are exact ints)
+    vol_static: np.ndarray        # (T,) int64 per-tensor static factor
+    vol_tab: np.ndarray           # (T, A, maxN) int64 per-axis factors
+    l1_axis_tab: np.ndarray       # (C, T, A, maxN) clamped per-axis factors
+    l1_static_tab: np.ndarray     # (C, T) int64 full static factor (L1)
+
+
+_TABLES: dict[tuple[int, int], tuple[LayerOp, MapSpace, GeneTables]] = {}
+_TABLES_MAX = 64   # FIFO bound: a model-zoo sweep must not pin every
+#                    (op, space) pair's tables for the process lifetime
+
+
+def _sizes_env(op: LayerOp, overrides: dict[str, int]) -> dict[str, int]:
+    env = dict(op.dims)
+    env.update(overrides)
+    return env
+
+
+def gene_tables(op: LayerOp, space: MapSpace) -> GeneTables:
+    """Build (and cache) the lookup tables for one (op, space) pair."""
+    key = (id(op), id(space))
+    hit = _TABLES.get(key)
+    if hit is not None and hit[0] is op and hit[1] is space:
+        return hit[2]
+
+    a = len(space.axes)
+    max_n = max(ax.n for ax in space.axes)
+    size_tab = np.zeros((a, max_n), np.float32)
+    off_tab = np.ones((a, max_n), np.float32)
+    clamped_tab = np.ones((a, max_n), np.int64)
+    trips_tab = np.ones((a, max_n), np.int64)
+    for ai, ax in enumerate(space.axes):
+        ext = op.dims[ax.dim]
+        stride = op.stride_of(ax.dim)
+        for t in range(ax.n):
+            size_tab[ai, t] = ax.sizes[t]
+            off_tab[ai, t] = ax.offsets[t]
+            clamped_tab[ai, t] = min(ax.sizes[t], ext)
+            off = ax.offsets[t] * stride
+            trips_tab[ai, t] = 1 + (max(ext - clamped_tab[ai, t], 0)
+                                    + off - 1) // off
+        for t in range(ax.n, max_n):  # pad with the last real candidate
+            size_tab[ai, t] = size_tab[ai, ax.n - 1]
+            off_tab[ai, t] = off_tab[ai, ax.n - 1]
+            clamped_tab[ai, t] = clamped_tab[ai, ax.n - 1]
+            trips_tab[ai, t] = trips_tab[ai, ax.n - 1]
+
+    perm_rank = np.zeros((len(space.perms), a), np.float32)
+    for p, perm in enumerate(space.perms):
+        for pos, ai in enumerate(perm):
+            perm_rank[p, ai] = pos
+
+    spatial_axis = np.asarray(space.spatial_choices, np.int64)
+    cluster_is_none = np.asarray(
+        [c is None for c in space.cluster_options], bool)
+    csize_tab = np.asarray(
+        [0.0 if c is None else float(c.size)
+         for c in space.cluster_options], np.float32)
+
+    # --- signature statics -------------------------------------------
+    axis_dims = [ax.dim for ax in space.axes]
+    red = op.reduction_dims()
+    red_axis = np.asarray([d in red for d in axis_dims], bool)
+    inner_masks = []
+    out_mask = None
+    out_static_rank = -np.inf  # no coupled loop at all -> no psum spill
+    for t in op.tensors():
+        coupled_pinned = any(t.coupled_to(d) for d in space.pinned)
+        mask = np.asarray([t.coupled_to(d) for d in axis_dims], bool)
+        dynamic = not coupled_pinned and mask.any()
+        if t is op.output:
+            if dynamic:
+                out_mask = mask
+            elif coupled_pinned or any(
+                    t.coupled_to(d) for d in op.dims
+                    if d not in axis_dims and d not in space.pinned):
+                # inner coupled loop is static: pinned dims sit inside all
+                # searched axes (rank >= A), implicit dims outside (rank<0)
+                out_static_rank = float(a) if coupled_pinned else -1.0
+        if dynamic:
+            inner_masks.append(mask)
+
+    # --- buffer-bound volume tables ----------------------------------
+    tensors = op.tensors()
+    vol_static = np.ones(len(tensors), np.int64)
+    vol_tab = np.ones((len(tensors), a, max_n), np.int64)
+    n_c = len(space.cluster_options)
+    l1_axis_tab = np.zeros((n_c, len(tensors), a, max_n), np.int64)
+    l1_static_tab = np.ones((n_c, len(tensors)), np.int64)
+    axis_of = {ax.dim: ai for ai, ax in enumerate(space.axes)}
+    for ti, t in enumerate(tensors):
+        if not t.has_data:
+            vol_static[ti] = 0
+        for e in t.entries:
+            searched = [d for d in e.dims if d in axis_of]
+            if not searched:
+                vol_static[ti] *= e.extent(op.dims)
+                continue
+            (d,) = searched  # window dims are pinned, never searched
+            ai = axis_of[d]
+            for tt in range(max_n):
+                env = _sizes_env(op, {d: int(clamped_tab[ai, tt])})
+                vol_tab[ti, ai, tt] *= e.extent(env)
+    for ci, copt in enumerate(space.cluster_options):
+        if copt is None:
+            l1_axis_tab[ci] = vol_tab
+            l1_static_tab[ci] = vol_static
+            continue
+        dc = copt.inner_dim
+        m0 = min(_resolve_sz(copt.inner_size, op), op.dims[dc])
+        for ti, t in enumerate(tensors):
+            l1_axis_tab[ci, ti] = vol_tab[ti]
+            # static factor recomputed outright (never a truncating ratio)
+            static = 0 if not t.has_data else 1
+            for e in t.entries:
+                searched = [d for d in e.dims if d in axis_of]
+                if not searched:
+                    static *= e.extent(_sizes_env(op, {dc: m0})) \
+                        if dc in e.dims else e.extent(op.dims)
+                elif dc in e.dims:
+                    # searched-axis factor with the cluster-inner clamp:
+                    # divide this entry's base extent out (exact — the
+                    # table is a product of entry extents), multiply the
+                    # clamped one in
+                    ai = axis_of[searched[0]]
+                    for tt in range(max_n):
+                        env = {searched[0]: int(clamped_tab[ai, tt])}
+                        base = e.extent(_sizes_env(op, env))
+                        env[dc] = min(m0, env.get(dc, op.dims[dc]))
+                        new = e.extent(_sizes_env(op, env))
+                        cur = l1_axis_tab[ci, ti, ai, tt]
+                        l1_axis_tab[ci, ti, ai, tt] = \
+                            cur // max(base, 1) * new
+            l1_static_tab[ci, ti] = static
+
+    tables = GeneTables(
+        size_tab=size_tab, off_tab=off_tab, perm_rank=perm_rank,
+        spatial_axis=spatial_axis, cluster_is_none=cluster_is_none,
+        csize_tab=csize_tab, clamped_tab=clamped_tab, trips_tab=trips_tab,
+        red_axis=red_axis, inner_masks=tuple(inner_masks),
+        out_mask=out_mask, out_static_rank=out_static_rank,
+        vol_static=vol_static, vol_tab=vol_tab, l1_axis_tab=l1_axis_tab,
+        l1_static_tab=l1_static_tab)
+    while len(_TABLES) >= _TABLES_MAX:
+        _TABLES.pop(next(iter(_TABLES)))
+    _TABLES[key] = (op, space, tables)
+    return tables
+
+
+def _gene_multi_rank(op: LayerOp, space: MapSpace, genes: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """(multi-trip mask, loop rank) per searched axis for each gene row —
+    the per-point ingredients of the equivalence signature."""
+    tb = gene_tables(op, space)
+    n, a = genes.shape[0], len(space.axes)
+    tiles = genes[:, 3:]
+    rank = tb.perm_rank[genes[:, 1]].astype(np.int64)       # (n, A)
+    trips = tb.trips_tab[np.arange(a)[None, :], tiles]      # (n, A)
+    multi = trips > 1
+    # the spatial axis folds over an unknown PE count: always multi-trip
+    sp_axis = tb.spatial_axis[genes[:, 0]]                  # (n,)
+    multi[np.arange(n), sp_axis] = True
+    return multi, rank
+
+
+def gene_signatures(op: LayerOp, space: MapSpace, genes: np.ndarray
+                    ) -> np.ndarray:
+    """Vectorized :func:`canonical_signature`: an (n, S) int64 matrix whose
+    rows are equal exactly when the legacy per-point signatures are equal
+    (see the partition-parity test)."""
+    tb = gene_tables(op, space)
+    genes = np.asarray(genes, np.int64)
+    n, a = genes.shape[0], len(space.axes)
+    multi, rank = _gene_multi_rank(op, space, genes)
+    # relative order of the multi-trip axes (== perm_order up to bijection)
+    relorder = np.sum(multi[:, None, :]
+                      & (rank[:, None, :] < rank[:, :, None]), axis=2)
+    relorder = np.where(multi, relorder, -1)                # (n, A)
+    cols = [genes[:, 0:1], genes[:, 2:3], genes[:, 3:], relorder]
+    # innermost coupled loop per tensor (only dynamic tensors vary)
+    for mask in tb.inner_masks:
+        masked = np.where(mask[None, :], rank, np.int64(-10 ** 9))
+        cols.append(np.argmax(masked, axis=1)[:, None])
+    # psum-spill flags: reduction axes outer to the output's inner loop
+    if tb.out_mask is not None:
+        masked = np.where(tb.out_mask[None, :], rank, np.int64(-10 ** 9))
+        rank_o = np.max(masked, axis=1).astype(np.float64)
+    else:
+        rank_o = np.full(n, tb.out_static_rank)
+    red_bits = (tb.red_axis[None, :] & multi
+                & (rank < rank_o[:, None])).astype(np.int64)
+    cols.append(red_bits)
+    return np.concatenate(cols, axis=1)
+
+
+def dedupe_equivalent_genes(op: LayerOp, space: MapSpace,
+                            genes: np.ndarray
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized analysis-equivalence dedupe over a gene matrix.
+
+    Returns ``(rep_rows, back)``: ``rep_rows`` indexes the first-occurrence
+    representative rows (in input order, like the legacy scalar loop) and
+    ``back[i]`` maps row ``i`` onto its representative's position."""
+    sig = gene_signatures(op, space, genes)
+    _, first, inv = np.unique(sig, axis=0, return_index=True,
+                              return_inverse=True)
+    order = np.argsort(first, kind="stable")
+    pos = np.empty(len(order), np.int64)
+    pos[order] = np.arange(len(order))
+    return first[order], pos[inv.ravel()]
+
+
+def buffer_estimates_genes(op: LayerOp, space: MapSpace,
+                           genes: np.ndarray, dtype_bytes: int = 2
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized :func:`buffer_estimate_kb` over a gene matrix: per-row
+    (L1, L2) working-set lower bounds in KB, bit-identical to the scalar
+    loop (exact integer volumes, same float conversion)."""
+    tb = gene_tables(op, space)
+    genes = np.asarray(genes, np.int64)
+    n, a = genes.shape[0], len(space.axes)
+    tiles = genes[:, 3:]
+    ar = np.arange(a)[None, :]
+    l2_vol = np.zeros(n, np.int64)
+    l1_vol = np.zeros(n, np.int64)
+    c_idx = genes[:, 2]
+    for ti in range(len(op.tensors())):
+        factors = tb.vol_tab[ti][ar, tiles]                 # (n, A)
+        l2_vol += tb.vol_static[ti] * np.prod(factors, axis=1)
+        # gather per-row cluster replacement tables: (n, A)
+        l1_factors = tb.l1_axis_tab[c_idx[:, None], ti, ar, tiles]
+        l1_vol += tb.l1_static_tab[c_idx, ti] * np.prod(l1_factors, axis=1)
+    scale = 2 * dtype_bytes / 1024.0
+    return l1_vol * scale, l2_vol * scale
+
+
+def prune_genes_by_budget(op: LayerOp, space: MapSpace, genes: np.ndarray,
+                          *, l1_kb: float | None = None,
+                          l2_kb: float | None = None,
+                          dtype_bytes: int = 2) -> np.ndarray:
+    """Vectorized :func:`prune_by_budget`: returns the kept rows."""
+    if l1_kb is None and l2_kb is None:
+        return np.asarray(genes, np.int64)
+    e1, e2 = buffer_estimates_genes(op, space, genes, dtype_bytes)
+    keep = np.ones(len(e1), bool)
+    if l1_kb is not None:
+        keep &= e1 <= l1_kb
+    if l2_kb is not None:
+        keep &= e2 <= l2_kb
+    return np.asarray(genes, np.int64)[keep]
+
+
+# ----------------------------------------------------------------------
 # Enumeration / sampling
 # ----------------------------------------------------------------------
 

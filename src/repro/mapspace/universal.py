@@ -20,16 +20,21 @@ A mapping space therefore costs at most TWO compiles (its 1-level and
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Sequence
+from typing import Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from ..core.tensor_analysis import LayerOp
-from ..core.vectorized import FEATURES, UniversalSpec, universal_evaluator
-from .space import ClusterOption, MapSpace, Point, _resolve_sz
+from ..core.vectorized import (FEATURES, HWTail, ReduceSpec, UniversalSpec,
+                               universal_evaluator,
+                               universal_reduced_evaluator)
+from .space import (ClusterOption, MapSpace, Point, _resolve_sz,
+                    gene_tables)
 
 # Executables warmed at a given block shape this process (same role as
 # ``batched._WARMED``), plus a monotone compile counter for regression
@@ -205,6 +210,250 @@ def evaluate_encoded(op: LayerOp, spec: UniversalSpec,
         run.eval_s += time.perf_counter() - t0
         feats[lo:hi] = out[:hi - lo]
     return feats, run
+
+
+# ----------------------------------------------------------------------
+# Gene pipeline: vectorized encode + async sharded device-resident DSE
+# ----------------------------------------------------------------------
+
+def encode_genes(op: LayerOp, space: MapSpace, genes: np.ndarray,
+                 spec: UniversalSpec, *, num_pes, noc_bw
+                 ) -> dict[str, np.ndarray]:
+    """Vectorized :func:`encode_points` over an (n, G) gene matrix: all
+    operand arrays are built by numpy gathers over the space's lookup
+    tables (``space.gene_tables``) and one-hot scatters — no Python
+    per-point loop.  Produces byte-identical operands to the legacy
+    per-point encoder (the parity-oracle path)."""
+    tb = gene_tables(op, space)
+    genes = np.asarray(genes, np.int64)
+    n, a = genes.shape[0], len(space.axes)
+    tiles = genes[:, 3:]
+    ar = np.arange(a)[None, :]
+    sp = np.zeros((n, a), np.float32)
+    sp[np.arange(n), tb.spatial_axis[genes[:, 0]]] = 1.0
+    ops = {
+        "sizes": tb.size_tab[ar, tiles],
+        "offsets": tb.off_tab[ar, tiles],
+        "rank": tb.perm_rank[genes[:, 1]],
+        "sp": sp,
+        "pes": np.broadcast_to(
+            np.asarray(num_pes, np.float32), (n,)).copy(),
+        "bw": np.broadcast_to(
+            np.asarray(noc_bw, np.float32), (n,)).copy(),
+    }
+    is_none = tb.cluster_is_none[genes[:, 2]]
+    if spec.cluster:
+        if is_none.any():
+            raise ValueError("1-level rows passed to a 2-level spec")
+        cidx = _candidate_index(space, op, spec.cluster)
+        cand_of = np.full(len(space.cluster_options), -1, np.int64)
+        for ci, (kk, _) in cidx.items():
+            cand_of[ci] = kk
+        csel = np.zeros((n, len(spec.cluster)), np.float32)
+        csel[np.arange(n), cand_of[genes[:, 2]]] = 1.0
+        ops["csel"] = csel
+        ops["csize"] = tb.csize_tab[genes[:, 2]]
+    elif not is_none.all():
+        raise ValueError("2-level rows passed to a 1-level spec")
+    return ops
+
+
+@dataclasses.dataclass
+class GeneRun:
+    """Timing/size bookkeeping of one gene-pipeline evaluation.
+
+    ``encode_s`` is host time building + transferring operand chunks;
+    ``eval_s`` is time the host spent *blocked* on device results (a lower
+    bound on device time — encode of chunk i+1 overlaps evaluation of
+    chunk i); ``e2e_s`` is the full wall time of the pass."""
+    n_rows: int = 0
+    n_valid: int = 0
+    n_steady: int = 0        # rows dispatched in steady (non-compile) chunks
+    n_compiles: int = 0
+    compile_s: float = 0.0
+    eval_s: float = 0.0
+    encode_s: float = 0.0
+    e2e_s: float = 0.0
+    n_devices: int = 1
+
+    def merge(self, other: "GeneRun") -> None:
+        self.n_rows += other.n_rows
+        self.n_valid += other.n_valid
+        self.n_steady += other.n_steady
+        self.n_compiles += other.n_compiles
+        self.compile_s += other.compile_s
+        self.eval_s += other.eval_s
+        self.encode_s += other.encode_s
+        self.e2e_s += other.e2e_s
+        self.n_devices = max(self.n_devices, other.n_devices)
+
+
+@dataclasses.dataclass
+class GeneEval:
+    """Result of one device-resident evaluation pass over a gene matrix.
+
+    ``top`` rows are global indices into the input gene matrix; ``values``
+    are canonical-minimize objective values (negate for maximize
+    objectives).  ``pareto`` is the exact (energy min, throughput max)
+    frontier over all evaluated rows, host-refined from the per-chunk
+    device candidate masks."""
+    top: list[dict]                    # [{row, value, feats}]
+    pareto: list[dict]                 # [{row, energy_pj, throughput}]
+    run: GeneRun
+    vals: np.ndarray | None = None     # (n,) objective column (optional)
+
+
+def _pad_rows(v: np.ndarray, pad: int) -> np.ndarray:
+    if not pad:
+        return v
+    return np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+
+
+def pareto_front(entries: Sequence[dict], x: str = "energy_pj",
+                 y: str = "throughput") -> list[dict]:
+    """Exact (min ``x``, max ``y``) frontier over candidate dicts — THE
+    host-side refinement shared by the gene pipeline and the co-DSE
+    (sorted() is stable, so ties keep the callers' row order)."""
+    order = sorted(range(len(entries)),
+                   key=lambda i: (entries[i][x], -entries[i][y]))
+    front, best = [], -np.inf
+    for i in order:
+        if entries[i][y] > best and np.isfinite(entries[i][x]):
+            best = entries[i][y]
+            front.append(entries[i])
+    return front
+
+
+def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
+                   objective: str = "edp", maximize: bool = False,
+                   k: int = 8, num_pes, noc_bw, block: int = 1024,
+                   n_devices: int | None = None, depth: int = 2,
+                   multicast: bool = True, spatial_reduction: bool = True,
+                   return_vals: bool = True, pareto: bool = True,
+                   hw_tail: HWTail | None = None) -> GeneEval:
+    """Device-resident evaluation of a gene matrix: vectorized encode,
+    async double-buffered dispatch (chunk i+1 encodes on the host while
+    chunk i evaluates), chunks striped over ``n_devices`` local devices
+    (default: all), and the objective/top-k/Pareto reduction fused into
+    the executable — each chunk returns k winner rows plus a small
+    frontier slice instead of the (n, F) feature matrix.
+
+    ``objective`` is a FEATURES column name; ``num_pes``/``noc_bw`` may be
+    scalars or per-row arrays (joint mapping x hardware rows); ``hw_tail``
+    folds run_dse-style area/power/leakage accounting into the jit.
+    Results are deterministic and identical for any device count."""
+    t_start = time.perf_counter()
+    global _COMPILE_COUNT
+    genes = np.asarray(genes, np.int64)
+    n = genes.shape[0]
+    nd = n_devices if n_devices is not None else jax.local_device_count()
+    nd = max(1, min(nd, jax.local_device_count()))
+    spec1, spec2 = universal_specs(op, space)
+    pes = np.broadcast_to(np.asarray(num_pes, np.float32), (n,))
+    bw = np.broadcast_to(np.asarray(noc_bw, np.float32), (n,))
+    is2 = ~gene_tables(op, space).cluster_is_none[genes[:, 2]]
+
+    run = GeneRun(n_rows=n, n_devices=nd)
+    vals = np.empty(n, np.float64) if return_vals else None
+    top_entries: list[tuple[float, int, np.ndarray]] = []
+    cand_rows: list[np.ndarray] = []
+    cand_e: list[np.ndarray] = []
+    cand_t: list[np.ndarray] = []
+
+    def collect(sub: np.ndarray, m: int, out: dict) -> None:
+        t0 = time.perf_counter()
+        host = {kk: np.asarray(v) for kk, v in out.items()}
+        run.eval_s += time.perf_counter() - t0
+        chunk_rows = nd * block
+        if return_vals:
+            vals[sub] = host["vals"].reshape(chunk_rows)[:m]
+        tv = host["top_vals"].reshape(-1)
+        ti = host["top_idx"].reshape(-1).astype(np.int64)
+        tf = host["top_feats"].reshape(-1, len(FEATURES))
+        if nd > 1:  # local shard index -> chunk row
+            kk = host["top_vals"].shape[-1]
+            ti = ti + np.repeat(np.arange(nd) * block, kk)
+        # padding rows can never reach the top (live=0 forces obj=inf AND
+        # idx >= m); real rows with an inf objective are kept, mirroring
+        # the legacy host reduction which sorts them last rather than
+        # dropping them
+        keep = ti < m
+        for v, i, row in zip(tv[keep], ti[keep], tf[keep]):
+            top_entries.append((float(v), int(sub[i]), row))
+        run.n_valid += int(np.sum(host["n_valid"]))
+        if pareto:
+            mask = host["pareto_mask"].reshape(chunk_rows)[:m]
+            w = np.where(mask)[0]
+            cand_rows.append(sub[w])
+            cand_e.append(host["pareto_energy"].reshape(chunk_rows)[:m][w])
+            cand_t.append(host["pareto_thr"].reshape(chunk_rows)[:m][w])
+
+    for spec, fam in ((spec1, np.where(~is2)[0]),
+                      (spec2, np.where(is2)[0])):
+        if fam.size == 0:
+            continue
+        assert spec is not None
+        chunk_rows = nd * block
+        reduce = ReduceSpec(objective=objective, maximize=maximize,
+                            k=min(k, chunk_rows), return_vals=return_vals,
+                            pareto=pareto, hw=hw_tail)
+        f = universal_reduced_evaluator(
+            op, spec, reduce, multicast=multicast,
+            spatial_reduction=spatial_reduction, n_devices=nd)
+        wk = (_warm_key(op, spec, multicast, spatial_reduction,
+                        chunk_rows), reduce, nd)
+        pending: collections.deque = collections.deque()
+        for lo in range(0, fam.size, chunk_rows):
+            sub = fam[lo:lo + chunk_rows]
+            m = sub.size
+            t0 = time.perf_counter()
+            batch = encode_genes(op, space, genes[sub], spec,
+                                 num_pes=pes[sub], noc_bw=bw[sub])
+            pad = chunk_rows - m
+            live = np.zeros(chunk_rows, np.float32)
+            live[:m] = 1.0
+            batch = {kk: _pad_rows(v, pad) for kk, v in batch.items()}
+            batch["live"] = live
+            if nd > 1:
+                batch = {kk: v.reshape((nd, block) + v.shape[1:])
+                         for kk, v in batch.items()}
+            jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
+            run.encode_s += time.perf_counter() - t0
+            if wk not in _WARMED:
+                t0 = time.perf_counter()
+                out = f(jbatch)
+                jax.block_until_ready(out)
+                run.compile_s += time.perf_counter() - t0
+                run.n_compiles += 1
+                _COMPILE_COUNT += 1
+                _WARMED.add(wk)
+            else:
+                out = f(jbatch)        # async dispatch
+                run.n_steady += m
+            pending.append((sub, m, out))
+            while len(pending) > depth:
+                collect(*pending.popleft())
+        while pending:
+            collect(*pending.popleft())
+
+    top_entries.sort(key=lambda e: (e[0], e[1]))
+    top = [{"row": r, "value": v, "feats": fr}
+           for v, r, fr in top_entries[:k]]
+    front: list[dict] = []
+    if pareto and cand_rows:
+        rows = np.concatenate(cand_rows)
+        es = np.concatenate(cand_e)
+        ts = np.concatenate(cand_t)
+        by_row = np.argsort(rows, kind="stable")
+        front = pareto_front(
+            [{"row": int(rows[i]), "energy_pj": float(es[i]),
+              "throughput": float(ts[i])} for i in by_row])
+    run.e2e_s = time.perf_counter() - t_start
+    # blocked-wait time understates device time under overlap; wall minus
+    # host work is the tighter lower bound of the two
+    run.eval_s = max(run.eval_s,
+                     run.e2e_s - run.encode_s - run.compile_s)
+    return GeneEval(top=top, pareto=front, run=run, vals=vals)
 
 
 def evaluate_points_universal(op: LayerOp, space: MapSpace,

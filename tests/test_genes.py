@@ -1,0 +1,346 @@
+"""Tests for the device-resident gene-matrix DSE pipeline.
+
+Load-bearing properties:
+
+  * gene-matrix machinery (enumerate/sample/decode, vectorized dedupe +
+    budget pruning, operand encoding) is exactly equivalent to the legacy
+    per-point tuple path;
+  * the fused on-device reduction (objective column, top-k, Pareto mask)
+    matches a host numpy reference computed from full feature matrices;
+  * `search(pipeline="gene")` reproduces `search(pipeline="legacy")`
+    top-k values and stats on fixed seeds, for 1- and 2-level spaces;
+  * the sharded path is deterministic: striping over N local devices
+    (run CI-side with XLA_FLAGS=--xla_force_host_platform_device_count=4)
+    returns exactly the single-device results;
+  * the whole pipeline still costs <= 2 XLA compiles per (op,
+    level-count) family;
+  * the paper-scale joint sweep reproduces the staged run_dse accounting.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import tensor_analysis as ta
+from repro.core.dse import DSEConfig, run_dse
+from repro.core.vectorized import FEATURES
+from repro.mapspace import (build_space, buffer_estimate_kb,
+                            buffer_estimates_genes, decode_indices,
+                            dedupe_equivalent_genes,
+                            dedupe_equivalent_points, encode_genes,
+                            enumerate_genes, enumerate_points,
+                            evaluate_genes, evaluate_points, flat_index,
+                            genes_from_points, joint_sweep,
+                            point_dataflow, points_from_genes,
+                            prune_by_budget, prune_genes_by_budget,
+                            sample_genes, search)
+from repro.mapspace.universal import (compile_count, encode_points,
+                                      universal_specs)
+from repro.mapspace.space import gene_tables
+
+PES, BW = 48, 12.0
+
+
+@pytest.fixture(scope="module")
+def conv_op():
+    return ta.conv2d("gene-conv", k=8, c=6, y=12, x=12, r=3, s=3)
+
+
+@pytest.fixture(scope="module")
+def conv_space(conv_op):
+    # window-outer axis (Y) + sliding cluster inner + 2-level options:
+    # the hard cases
+    return build_space(conv_op, dims=("K", "C", "Y"), cluster_sizes=(8,),
+                       perm_mode="all")
+
+
+@pytest.fixture(scope="module")
+def flat_space(conv_op):
+    return build_space(conv_op, dims=("K", "C"), cluster=False)
+
+
+# ----------------------------------------------------------------------
+# Gene-matrix machinery vs the legacy tuple-point loops
+# ----------------------------------------------------------------------
+
+def test_enumerate_genes_matches_points(conv_space):
+    pts = list(enumerate_points(conv_space))
+    g = enumerate_genes(conv_space)
+    assert np.array_equal(g, genes_from_points(pts))
+    assert points_from_genes(g) == pts
+    # mixed-radix decode/encode roundtrip
+    assert np.array_equal(flat_index(conv_space, g),
+                          np.arange(conv_space.size))
+    sl = enumerate_genes(conv_space, 100, 163)
+    assert np.array_equal(sl, g[100:163])
+    assert np.array_equal(decode_indices(conv_space, [0]), g[:1])
+
+
+def test_sample_genes_deterministic_distinct_excluding(conv_space):
+    a = sample_genes(conv_space, np.random.default_rng(7), 50)
+    b = sample_genes(conv_space, np.random.default_rng(7), 50)
+    assert np.array_equal(a, b)
+    fa = flat_index(conv_space, a)
+    assert len(np.unique(fa)) == len(a) == 50
+    c = sample_genes(conv_space, np.random.default_rng(8), 50,
+                     exclude_flat=fa)
+    assert not set(flat_index(conv_space, c).tolist()) & set(fa.tolist())
+
+
+def test_dedupe_genes_matches_legacy_partition(conv_op, conv_space):
+    pts = list(enumerate_points(conv_space))
+    reps, back = dedupe_equivalent_points(conv_op, conv_space, pts)
+    g = enumerate_genes(conv_space)
+    rrows, gback = dedupe_equivalent_genes(conv_op, conv_space, g)
+    assert [pts[i] for i in rrows] == reps
+    assert np.array_equal(gback, np.asarray(back))
+    assert len(rrows) < len(pts)        # something actually collapsed
+
+
+def test_buffer_estimates_and_pruning_match_legacy(conv_op, conv_space):
+    g = enumerate_genes(conv_space)
+    pts = points_from_genes(g)
+    l1, l2 = buffer_estimates_genes(conv_op, conv_space, g)
+    ref = np.asarray([buffer_estimate_kb(conv_op, conv_space, p)
+                      for p in pts])
+    np.testing.assert_allclose(l1, ref[:, 0], rtol=0, atol=0)
+    np.testing.assert_allclose(l2, ref[:, 1], rtol=0, atol=0)
+    budget = float(np.median(l1))
+    kept = prune_genes_by_budget(conv_op, conv_space, g, l1_kb=budget)
+    assert points_from_genes(kept) == \
+        prune_by_budget(conv_op, conv_space, pts, l1_kb=budget)
+
+
+def test_encode_genes_matches_encode_points(conv_op, conv_space):
+    rng = np.random.default_rng(0)
+    g = sample_genes(conv_space, rng, 64)
+    pts = points_from_genes(g)
+    spec1, spec2 = universal_specs(conv_op, conv_space)
+    is2 = ~gene_tables(conv_op, conv_space).cluster_is_none[g[:, 2]]
+    for spec, mask in ((spec1, ~is2), (spec2, is2)):
+        sub = g[mask]
+        subp = [p for p, m in zip(pts, mask) if m]
+        assert len(subp) > 4
+        a = encode_genes(conv_op, conv_space, sub, spec,
+                         num_pes=PES, noc_bw=BW)
+        b = encode_points(conv_op, conv_space, subp, spec,
+                          num_pes=PES, noc_bw=BW)
+        assert set(a) == set(b)
+        for k in b:
+            assert np.array_equal(a[k], b[k]), (bool(spec.cluster), k)
+    with pytest.raises(ValueError):
+        encode_genes(conv_op, conv_space, g[is2], spec1,
+                     num_pes=PES, noc_bw=BW)
+
+
+# ----------------------------------------------------------------------
+# On-device reduction tail vs host numpy reference
+# ----------------------------------------------------------------------
+
+def test_on_device_topk_and_pareto_match_numpy(conv_op, conv_space):
+    rng = np.random.default_rng(1)
+    g = sample_genes(conv_space, rng, 200)
+    ev = evaluate_genes(conv_op, conv_space, g, objective="edp", k=8,
+                        num_pes=PES, noc_bw=BW, block=64)
+    feats, _ = evaluate_points(conv_op, conv_space, points_from_genes(g),
+                               num_pes=PES, noc_bw=BW, block=64)
+    ref = feats[:, FEATURES.index("edp")].astype(np.float64)
+    ref = np.where(np.isfinite(ref), ref, np.inf)
+    np.testing.assert_allclose(ev.vals, ref, rtol=1e-6)
+    order = np.lexsort((np.arange(len(ref)), ref))
+    assert [t["row"] for t in ev.top] == list(order[:8])
+    for t in ev.top:
+        np.testing.assert_allclose(t["feats"], feats[t["row"]], rtol=1e-6)
+    # host-refined frontier == exact frontier over the full columns
+    e = feats[:, FEATURES.index("energy_pj")].astype(np.float64)
+    th = feats[:, FEATURES.index("throughput")].astype(np.float64)
+    o = np.lexsort((np.arange(len(e)), -th, e))
+    best, front = -np.inf, []
+    for i in o:
+        if th[i] > best and np.isfinite(e[i]):
+            best = th[i]
+            front.append(int(i))
+    assert [p["row"] for p in ev.pareto] == front
+    assert ev.run.n_valid == int(np.isfinite(ref).sum())
+
+
+def test_gene_pipeline_at_most_two_compiles():
+    op = ta.conv2d("gene-compiles", k=8, c=4, y=10, x=10, r=3, s=3)
+    space = build_space(op, dims=("K", "C"), cluster_sizes=(4,),
+                        perm_mode="all")
+    assert space.n_groups >= 8
+    g = sample_genes(space, np.random.default_rng(2), 96)
+    before = compile_count()
+    ev = evaluate_genes(op, space, g, objective="edp", k=4,
+                        num_pes=32, noc_bw=8.0, block=64)
+    assert compile_count() - before <= 2
+    assert ev.run.n_compiles <= 2
+    # second call (any subset, same block): fully warm
+    before = compile_count()
+    evaluate_genes(op, space, g[:20], objective="edp", k=4,
+                   num_pes=32, noc_bw=8.0, block=64)
+    assert compile_count() - before == 0
+
+
+# ----------------------------------------------------------------------
+# Sharded path: determinism at any device count
+# ----------------------------------------------------------------------
+
+def test_sharded_matches_single_device(conv_op, conv_space):
+    """With XLA_FLAGS=--xla_force_host_platform_device_count=4 (the CI
+    smoke job) this compares a real 4-device pmap against the 1-device
+    jit; on one device it still exercises the full merge path."""
+    rng = np.random.default_rng(3)
+    g = sample_genes(conv_space, rng, 150)
+    kw = dict(objective="edp", k=8, num_pes=PES, noc_bw=BW, block=32)
+    one = evaluate_genes(conv_op, conv_space, g, n_devices=1, **kw)
+    many = evaluate_genes(conv_op, conv_space, g,
+                          n_devices=jax.local_device_count(), **kw)
+    assert many.run.n_devices == jax.local_device_count()
+    np.testing.assert_array_equal(one.vals, many.vals)
+    assert [t["row"] for t in one.top] == [t["row"] for t in many.top]
+    assert [t["value"] for t in one.top] == [t["value"] for t in many.top]
+    for a, b in zip(one.top, many.top):
+        np.testing.assert_array_equal(a["feats"], b["feats"])
+    assert one.pareto == many.pareto
+    assert one.run.n_valid == many.run.n_valid
+
+
+def test_search_sharded_deterministic(conv_op, conv_space):
+    kw = dict(objective="edp", budget=120, space=conv_space, num_pes=PES,
+              noc_bw=BW, strategy="greedy", seed=5, block=32)
+    one = search(conv_op, devices=1, **kw)
+    many = search(conv_op, devices=jax.local_device_count(), **kw)
+    assert one.best_point == many.best_point
+    assert one.best_value == many.best_value
+    assert [e["point"] for e in one.top_k] == \
+        [e["point"] for e in many.top_k]
+
+
+# ----------------------------------------------------------------------
+# search(): gene pipeline vs legacy tuple-point parity on fixed seeds
+# ----------------------------------------------------------------------
+
+def _assert_search_parity(a, b):
+    assert a.strategy == b.strategy
+    assert a.n_evaluated == b.n_evaluated
+    assert a.n_groups == b.n_groups
+    assert a.best_point == b.best_point
+    assert a.best_value == pytest.approx(b.best_value, rel=1e-6)
+    assert [e["point"] for e in a.top_k] == [e["point"] for e in b.top_k]
+    for ea, eb in zip(a.top_k, b.top_k):
+        assert ea["value"] == pytest.approx(eb["value"], rel=1e-6)
+        for k in ea["stats"]:
+            assert ea["stats"][k] == pytest.approx(
+                eb["stats"][k], rel=1e-5, abs=1e-9), k
+
+
+@pytest.mark.parametrize("strategy", ["exhaustive", "random", "greedy"])
+def test_gene_matches_legacy_two_level(conv_op, conv_space, strategy):
+    budget = 10_000 if strategy == "exhaustive" else 150
+    kw = dict(objective="edp", budget=budget, space=conv_space,
+              num_pes=PES, noc_bw=BW, strategy=strategy, seed=0, block=64)
+    _assert_search_parity(search(conv_op, pipeline="gene", **kw),
+                          search(conv_op, pipeline="legacy", **kw))
+
+
+def test_gene_matches_legacy_one_level(conv_op, flat_space):
+    kw = dict(objective="edp", budget=10_000, space=flat_space,
+              num_pes=PES, noc_bw=BW, strategy="exhaustive", seed=0,
+              block=64)
+    a = search(conv_op, pipeline="gene", **kw)
+    _assert_search_parity(a, search(conv_op, pipeline="legacy", **kw))
+    assert a.n_evaluated == flat_space.size
+
+
+def test_gene_genetic_deterministic_and_competitive(conv_op, flat_space):
+    kw = dict(objective="edp", budget=150, space=flat_space, num_pes=PES,
+              noc_bw=BW, strategy="genetic", seed=7, block=64)
+    a = search(conv_op, pipeline="gene", **kw)
+    b = search(conv_op, pipeline="gene", **kw)
+    assert a.best_point == b.best_point
+    assert a.best_value == b.best_value
+    assert a.n_evaluated <= 150
+    exhaustive = search(conv_op, objective="edp", budget=10_000,
+                        space=flat_space, num_pes=PES, noc_bw=BW,
+                        strategy="exhaustive", block=64)
+    assert a.best_value <= exhaustive.best_value * 2.0
+
+
+def test_search_budget_pruning_gene_matches_legacy(conv_op, conv_space):
+    l1 = float(np.median(buffer_estimates_genes(
+        conv_op, conv_space, enumerate_genes(conv_space))[0]))
+    kw = dict(objective="edp", budget=120, space=conv_space, num_pes=PES,
+              noc_bw=BW, strategy="random", seed=2, block=64,
+              l1_budget_kb=l1)
+    _assert_search_parity(search(conv_op, pipeline="gene", **kw),
+                          search(conv_op, pipeline="legacy", **kw))
+
+
+def test_search_reports_end_to_end_rate(conv_op, flat_space):
+    r = search(conv_op, objective="edp", budget=60, space=flat_space,
+               num_pes=PES, noc_bw=BW, strategy="random", seed=0,
+               block=64)
+    assert r.pipeline == "gene"
+    assert r.end_to_end_mappings_per_s > 0
+    assert r.elapsed_s >= r.encode_s
+    assert r.wall_s > 0
+    assert r.end_to_end_mappings_per_s == pytest.approx(
+        r.n_evaluated / (r.wall_s - r.compile_s))
+    assert r.n_devices >= 1
+
+
+# ----------------------------------------------------------------------
+# Paper-scale joint sweep vs staged run_dse accounting
+# ----------------------------------------------------------------------
+
+def test_joint_sweep_matches_staged_run_dse(conv_op):
+    space = build_space(conv_op, dims=("K", "C"), cluster_sizes=(4,))
+    g = sample_genes(space, np.random.default_rng(0), 5)
+    cfg = DSEConfig(pe_range=(16, 32, 64), bw_range=(4.0, 8.0, 16.0))
+    js = joint_sweep(conv_op, space, g, cfg, objective="edp", k=6,
+                     block=32)
+    assert js.n_designs == 5 * 9
+    assert js.n_compiles <= 2
+    # staged reference: run_dse per mapping (host numpy accounting)
+    cands = []
+    for pt in points_from_genes(g):
+        r = run_dse(conv_op, point_dataflow(space, pt), cfg)
+        for i in np.where(r.valid)[0]:
+            cands.append((float(np.asarray(r.stats.edp)[i]),
+                          float(np.asarray(r.stats.energy_pj)[i]),
+                          float(np.asarray(r.stats.throughput)[i]),
+                          pt, int(r.num_pes[i]), float(r.noc_bw[i])))
+    assert js.n_valid == len(cands)
+    cands.sort(key=lambda c: c[0])
+    best = cands[0]
+    assert js.top[0]["value"] == pytest.approx(best[0], rel=1e-4)
+    assert (js.top[0]["point"], js.top[0]["num_pes"],
+            js.top[0]["noc_bw"]) == (best[3], best[4], best[5])
+    # frontier parity
+    by_et = sorted(cands, key=lambda c: (c[1], -c[2]))
+    bt, front = -np.inf, []
+    for c in by_et:
+        if c[2] > bt:
+            bt = c[2]
+            front.append(c)
+    assert len(js.pareto) == len(front)
+    for got, ref in zip(js.pareto, front):
+        assert got["energy_pj"] == pytest.approx(ref[1], rel=1e-4)
+        assert got["point"] == ref[3]
+        assert (got["num_pes"], got["noc_bw"]) == (ref[4], ref[5])
+
+
+def test_co_search_joint_genes(conv_op):
+    from repro.mapspace import co_search
+    space = build_space(conv_op, dims=("K", "C"), cluster_sizes=(4,))
+    cfg = DSEConfig(pe_range=(16, 32, 64), bw_range=(4.0, 8.0))
+    co = co_search(conv_op, objective="edp", mapping_budget=60, top_k=2,
+                   cfg=cfg, num_pes=32, noc_bw=8.0, space=space,
+                   joint_genes=6, joint_block=64,
+                   search_kwargs={"block": 64})
+    assert co.joint is not None
+    assert co.joint.n_designs == (6 + 2) * 6
+    assert co.joint.designs_per_s > 0
+    assert co.pareto, "merged frontier is empty"
+    # joint designs are counted in the total
+    assert co.n_evaluated >= co.joint.n_designs
