@@ -389,6 +389,100 @@ def bench_mapspace(quick: bool) -> None:
           f"min_improvement_vs_table3={min_imp:.2f}x")
 
 
+def bench_netspace(quick: bool) -> None:
+    """Whole-network, fusion-aware schedule search (repro.netspace):
+
+      * the HEADLINE: an end-to-end VGG16 schedule (16 layers — 13 convs
+        + 3 FCs, 12 unique shapes, 2 op-classes) searched in a single
+        process with <= 2 XLA compiles per (op-class, level-count), whose
+        network EDP beats the best single uniform Table-3 dataflow
+        applied network-wide (same cost model, off-chip boundary terms
+        included for both);
+      * the fusion ablation: the same frontiers re-composed with fusion
+        forbidden, isolating what DeFiNES-style fused stacks buy;
+      * composer throughput (partial-schedule extensions/s) and the
+        evaluator's candidate rows/s.
+
+    Writes ``BENCH_netspace.json`` under ``benchmarks/out`` (CI artifact)
+    and at the REPO ROOT (perf trajectory tracker); CI asserts the
+    compile budget and the EDP win."""
+    import json
+    import jax
+    from repro.core.performance import HWConfig
+    from repro.mapspace.universal import compile_count
+    from repro.netspace import (best_uniform, compose_dp, search_network,
+                                uniform_baseline)
+    t0 = time.perf_counter()
+    layers = zoo.vgg16()
+    budget = 128 if quick else 512
+    frontier_k = 4 if quick else 8
+    hw = HWConfig(num_pes=int(HW.num_pes), noc_bw=HW.noc_bw,
+                  noc_latency=2.0, reconfig_latency=1000.0)
+    c_before = compile_count()
+    r = search_network(layers, objective="edp", budget=budget,
+                       num_pes=int(HW.num_pes), noc_bw=HW.noc_bw,
+                       seed=0, frontier_k=frontier_k, fuse=True, hw=hw)
+    compiles = compile_count() - c_before
+    compile_budget = 2 * r.n_classes      # 1- + 2-level family per class
+
+    base = uniform_baseline(layers, r.model)
+    flow, b = best_uniform(base, "edp")
+    edp_win = b["edp"] / r.schedule.network_edp
+
+    # fusion ablation: identical frontiers/cost model, fusion forbidden
+    frontiers = [r.frontiers[r.netspace.index[i]]
+                 for i in range(r.n_layers)]
+    out_vols = [float(op.output.volume(op.dims)) for op in layers]
+    no_fuse, _ = compose_dp(frontiers, out_vols,
+                            [False] * (r.n_layers - 1), r.model,
+                            [op.name for op in layers],
+                            r.schedule.total_macs)
+    fusion_gain = no_fuse.network_edp / r.schedule.network_edp
+
+    elapsed = time.perf_counter() - t0
+    payload = {
+        "quick": quick,
+        "model": "vgg16",
+        "n_layers": r.n_layers,
+        "n_unique_shapes": r.n_unique,
+        "n_op_classes": r.n_classes,
+        "budget_per_layer": budget,
+        "frontier_k": frontier_k,
+        "n_evaluated": r.n_evaluated,
+        "universal_compiles_process": compiles,
+        "compile_budget": compile_budget,
+        "compile_s": round(r.compile_s, 3),
+        "eval_s": round(r.eval_s, 3),
+        "compose_s": round(r.compose_s, 3),
+        "schedules_per_s": r.schedules_per_s,
+        "n_devices": jax.local_device_count(),
+        "network_edp": r.schedule.network_edp,
+        "network_runtime": r.schedule.runtime,
+        "network_energy_pj": r.schedule.energy_pj,
+        "n_fused_stacks": len(r.schedule.segments),
+        "n_reconfigs": r.schedule.n_reconfigs,
+        "best_uniform_flow": flow,
+        "best_uniform_edp": b["edp"],
+        "edp_win_vs_best_uniform": edp_win,
+        "no_fusion_edp": no_fuse.network_edp,
+        "fusion_edp_gain": fusion_gain,
+        "elapsed_s": round(elapsed, 3),
+    }
+    os.makedirs(OUT, exist_ok=True)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for path in (os.path.join(OUT, "BENCH_netspace.json"),
+                 os.path.join(root, "BENCH_netspace.json")):
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+    us = elapsed / max(r.n_evaluated, 1) * 1e6
+    _emit("netspace", us,
+          f"edp_win_vs_uniform={edp_win:.2f}x;"
+          f"fusion_gain={fusion_gain:.2f}x;"
+          f"compiles={compiles}/{compile_budget};"
+          f"stacks={len(r.schedule.segments)};"
+          f"sched_exts_per_s={r.schedules_per_s / 1e3:.0f}k")
+
+
 def bench_kernels(quick: bool) -> None:
     """Interpret-mode kernel validation timings (correctness gate)."""
     import jax
@@ -408,7 +502,8 @@ def bench_kernels(quick: bool) -> None:
 
 BENCHES = [bench_fig9_validation, bench_fig10_tradeoffs,
            bench_fig11_reuse_bw, bench_fig12_energy_breakdown,
-           bench_fig13_dse, bench_dse_rate, bench_mapspace, bench_kernels]
+           bench_fig13_dse, bench_dse_rate, bench_mapspace,
+           bench_netspace, bench_kernels]
 
 
 def main(argv=None) -> None:

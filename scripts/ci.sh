@@ -14,14 +14,22 @@ python -m pytest -x -q \
     tests/test_mapper.py \
     tests/test_mapspace.py \
     tests/test_universal.py \
-    tests/test_genes.py
+    tests/test_genes.py \
+    tests/test_netspace.py
 
 echo "== 4-host-device sharded smoke =="
 # The gene pipeline stripes chunks over all local devices; forcing four
 # host CPU devices exercises the pmap path and the 1-vs-N-device
-# determinism assertions inside tests/test_genes.py for real.
+# determinism assertions inside tests/test_genes.py and
+# tests/test_netspace.py for real.
 XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python -m pytest -x -q tests/test_genes.py
+    python -m pytest -x -q tests/test_genes.py tests/test_netspace.py
+
+echo "== small-budget netsearch smoke =="
+# End-to-end network schedule search through the CLI: VGG16 at a tiny
+# budget must complete with the shape-as-operand executables and print a
+# schedule + baseline comparison.
+python -m repro.launch.netsearch --model vgg16 --quick --jax-cache-dir ''
 
 echo "== benchmarks --quick =="
 python -m benchmarks.run --quick
@@ -47,6 +55,23 @@ assert d["universal_compiles_process"] <= d["compile_budget"], \
      "compile count must stay O(1) per (layer, level-count), not O(groups)")
 # the gene pipeline must beat the legacy tuple-point path end to end
 assert d["e2e_speedup_vs_legacy"] >= 1.0, d["e2e_speedup_vs_legacy"]
+EOF
+
+echo "== BENCH_netspace smoke artifact =="
+test -f benchmarks/out/BENCH_netspace.json
+test -f BENCH_netspace.json
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_netspace.json"))
+print(json.dumps(d, indent=2))
+# whole-network search must stay on the <= 2-compiles-per-(op-class,
+# level-count) model: compile_budget = 2 * n_op_classes
+assert d["universal_compiles_process"] <= d["compile_budget"], \
+    (d["universal_compiles_process"], d["compile_budget"],
+     "netspace compile count must be O(op-classes), not O(layers)")
+# the searched schedule's network EDP must beat the best single uniform
+# Table-3 dataflow applied network-wide
+assert d["edp_win_vs_best_uniform"] >= 1.0, d["edp_win_vs_best_uniform"]
 EOF
 
 echo "CI smoke gate passed."

@@ -12,6 +12,7 @@ Each layer is tagged ``early`` or ``late`` by the paper's rule (footnote 2):
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from .tensor_analysis import (LayerOp, conv2d, dwconv2d, fc, pointwise_conv,
                               transposed_conv2d)
@@ -226,14 +227,46 @@ def fig11_operators() -> dict[str, LayerOp]:
     }
 
 
+def layer_shape_key(op: LayerOp) -> tuple:
+    """Analysis-identity of a layer: two layers with equal keys produce
+    identical stats for any (dataflow, hardware) pair — op type, dim
+    extents, conv strides, and weightlessness all participate."""
+    return (op.op_type, tuple(sorted(op.dims.items())),
+            tuple(op.stride_of(d) for d in sorted(op.dims)),
+            op.filter.has_data)
+
+
+def unique_layers(layers: Sequence[LayerOp]
+                  ) -> tuple[list[LayerOp], list[int]]:
+    """Shape-deduplication for network-level search: VGG16's repeated conv
+    shapes and ResNet's repeated blocks collapse to one representative
+    each.  Returns ``(unique, index)`` where ``unique[index[i]]`` is the
+    representative of ``layers[i]`` — evaluate each distinct shape once and
+    broadcast results back over ``index``."""
+    unique: list[LayerOp] = []
+    index: list[int] = []
+    seen: dict[tuple, int] = {}
+    for op in layers:
+        key = layer_shape_key(op)
+        at = seen.get(key)
+        if at is None:
+            at = len(unique)
+            seen[key] = at
+            unique.append(op)
+        index.append(at)
+    return unique, index
+
+
 @dataclasses.dataclass(frozen=True)
 class NetworkSummary:
     name: str
     n_layers: int
     total_macs: int
+    n_unique_shapes: int = 0
 
 
 def summarize(name: str) -> NetworkSummary:
     layers = MODELS[name]()
     return NetworkSummary(name, len(layers),
-                          sum(l.total_macs for l in layers))
+                          sum(l.total_macs for l in layers),
+                          len(unique_layers(layers)[0]))

@@ -236,6 +236,13 @@ class UniversalSpec:
     # divisor-tiled spaces: only the spatial axis can produce a non-empty
     # edge phase, so case enumeration shrinks from 2^A to A+1
     single_edge: bool = False
+    # layer shape as operand (repro.netspace): dim extents come from an
+    # ``ext`` (i, D) operand row instead of ``op.dims``, and the cluster
+    # candidates' inner size/offset from ``cin_size``/``cin_off`` (i, K)
+    # rows — so ONE executable per op-class covers every layer shape of a
+    # network (the ``cluster`` entries then carry only the inner-dim
+    # identity; their static size/offset fields are ignored)
+    ext_operand: bool = False
 
     @property
     def n_levels(self) -> int:
@@ -252,7 +259,11 @@ def _universal_eval_one(op: LayerOp, spec: UniversalSpec, hw_static: dict):
     def eval_one(ops):
         xp = hybrid_backend()
         hw = HWConfig(num_pes=ops["pes"], noc_bw=ops["bw"], **hw_static)
-        ext0 = {d: op.dims[d] for d in spec.dim_names}
+        if spec.ext_operand:
+            ext0 = {d: ops["ext"][j]
+                    for j, d in enumerate(spec.dim_names)}
+        else:
+            ext0 = {d: op.dims[d] for d in spec.dim_names}
         sizes: dict = dict(ext0)   # non-searched dims: fully unrolled
         offsets: dict = dict(ext0)
         rank: dict = {}
@@ -287,7 +298,10 @@ def _universal_eval_one(op: LayerOp, spec: UniversalSpec, hw_static: dict):
         if spec.cluster:
             def child_fn(m_unit):
                 results = []
-                for cd, csz, coff in spec.cluster:
+                for ki, (cd, csz, coff) in enumerate(spec.cluster):
+                    if spec.ext_operand:
+                        csz = ops["cin_size"][ki]
+                        coff = ops["cin_off"][ki]
                     lvl1 = build_dense_level(
                         xp, op, index=1, ext=m_unit, sizes={cd: csz},
                         offsets={cd: coff}, rank={cd: 0}, sp={cd: 1},
@@ -347,6 +361,10 @@ class ReduceSpec:
     #                               it; the paper-scale sweep does not)
     pareto: bool = True           # (energy, throughput) candidate mask
     hw: HWTail | None = None
+    cols: tuple[str, ...] = ()    # extra per-row FEATURES columns to ship
+    #                               back (netspace's DP composer needs the
+    #                               (runtime, energy, l1, l2) of EVERY
+    #                               candidate, not just the top-k rows)
 
 
 def _reduce_tail(reduce: ReduceSpec, feats, ops):
@@ -385,6 +403,8 @@ def _reduce_tail(reduce: ReduceSpec, feats, ops):
     }
     if reduce.return_vals:
         out["vals"] = obj
+    if reduce.cols:
+        out["cols"] = feats[:, [FEATURES.index(c) for c in reduce.cols]]
     if reduce.pareto:
         e = feats[:, FEATURES.index("energy_pj")]
         t = feats[:, FEATURES.index("throughput")]

@@ -32,18 +32,94 @@ DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache",
 DEFAULT_JAX_CACHE = os.path.join(DEFAULT_CACHE, "xla")
 
 
-def _pick_layer(layers, which: str):
-    if which.isdigit():
-        return layers[int(which)]
-    matches = [l for l in layers if which in l.name]
-    if not matches:
-        raise SystemExit(f"no layer matching {which!r}; "
-                         f"try --list-layers")
-    return matches[0]
+def _pick_layers(layers, which: str):
+    """Resolve ``--layer``: an index, a name substring, ``all``, or a
+    comma-separated list of those (multi-match substrings select every
+    match) — one entry per selected layer, model order, deduplicated."""
+    if which == "all":
+        return list(layers)
+    out = []
+    for part in which.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if part.isdigit():
+            out.append(layers[int(part)])
+            continue
+        matches = [l for l in layers if part in l.name]
+        if not matches:
+            raise SystemExit(f"no layer matching {part!r}; "
+                             f"try --list-layers")
+        out.extend(matches)
+    seen: set[str] = set()
+    uniq = [l for l in out
+            if not (l.name in seen or seen.add(l.name))]
+    if not uniq:
+        raise SystemExit(f"no layer matching {which!r}; try --list-layers")
+    order = [l.name for l in layers]
+    return sorted(uniq, key=lambda l: order.index(l.name))
 
 
 def _fmt(v: float) -> str:
     return f"{v:.4g}"
+
+
+def _search_one(op, args, budget=None):
+    if args.quick:
+        dims = tuple(args.dims.split(",")) if args.dims else \
+            (("K", "C") if "K" in op.dims else None)
+        space = build_space(op, dims=dims, cluster=False)
+        budget = min(budget or args.budget, 200)
+    else:
+        dims = tuple(args.dims.split(",")) if args.dims else None
+        space = build_space(op, dims=dims, cluster=not args.no_cluster)
+        budget = budget or args.budget
+    r = search(op, objective=args.objective, budget=budget, space=space,
+               num_pes=args.pes, noc_bw=args.bw, strategy=args.strategy,
+               seed=args.seed, top_k=args.top_k,
+               population=args.population,
+               l1_budget_kb=args.l1_budget_kb,
+               l2_budget_kb=args.l2_budget_kb,
+               pipeline=args.pipeline, devices=args.devices,
+               cache_dir=args.cache_dir or None)
+    return space, budget, r
+
+
+def _table3_values(op, args) -> tuple[float, dict[str, float]]:
+    """(best value, per-flow value) of the Table 3 baselines at the CLI's
+    hardware point and objective."""
+    hw = HWConfig(num_pes=args.pes, noc_bw=args.bw, noc_latency=2.0)
+    per_flow: dict[str, float] = {}
+    best = None
+    for f in TABLE3:
+        st = analyze(op, table3_for_layer(f, op), hw)
+        vals = {"edp": float(st.edp), "energy": float(st.energy_pj),
+                "runtime": float(st.runtime),
+                "throughput": float(st.throughput)}
+        v = vals[args.objective]
+        per_flow[f] = v
+        if best is None or \
+                (v > best if args.objective == "throughput" else v < best):
+            best = v
+    return best, per_flow
+
+
+def _multi_layer(picked, args) -> None:
+    """Per-layer best-mapping table for --layer all / comma lists."""
+    print(f"# {len(picked)} layers, objective={args.objective}, "
+          f"budget={args.budget}/layer")
+    print(f"{'layer':28s} {'space':>10s} {'eval':>6s} "
+          f"{'best ' + args.objective:>12s} {'bestT3':>12s} "
+          f"{'vs T3':>6s}  mapping")
+    for op in picked:
+        space, budget, r = _search_one(op, args)
+        t3, _ = _table3_values(op, args)
+        imp = (r.best_value / t3 if args.objective == "throughput"
+               else t3 / r.best_value)
+        gene = "-".join(str(g) for g in r.best_point)
+        print(f"{op.name:28s} {space.size:>10d} {r.n_evaluated:>6d} "
+              f"{_fmt(r.best_value):>12s} {_fmt(t3):>12s} "
+              f"{imp:>5.2f}x  {gene}")
 
 
 def main(argv=None) -> None:
@@ -51,7 +127,9 @@ def main(argv=None) -> None:
     ap.add_argument("--model", default="vgg16",
                     choices=sorted(zoo.MODELS))
     ap.add_argument("--layer", default="0",
-                    help="layer index or name substring (default: 0)")
+                    help="layer index, name substring, 'all', or a "
+                         "comma-separated list (multi-selection prints a "
+                         "per-layer best-mapping table; default: 0)")
     ap.add_argument("--list-layers", action="store_true")
     ap.add_argument("--objective", default="edp",
                     choices=["edp", "energy", "runtime", "throughput"])
@@ -109,29 +187,20 @@ def main(argv=None) -> None:
         for i, l in enumerate(layers):
             print(f"{i:3d} {l.op_type:10s} {l.name} {l.dims}")
         return
-    op = _pick_layer(layers, args.layer)
+    picked = _pick_layers(layers, args.layer)
+    if len(picked) > 1:
+        if args.co_dse:
+            print("# note: --co-dse applies to single-layer selections "
+                  "only; running the per-layer table instead "
+                  "(pick one layer for the co-DSE)", file=sys.stderr)
+        _multi_layer(picked, args)
+        return
+    op = picked[0]
     print(f"# layer {op.name} {op.op_type} {op.dims}")
 
-    if args.quick:
-        dims = tuple(args.dims.split(",")) if args.dims else \
-            (("K", "C") if "K" in op.dims else None)
-        space = build_space(op, dims=dims, cluster=False)
-        budget = min(args.budget, 200)
-    else:
-        dims = tuple(args.dims.split(",")) if args.dims else None
-        space = build_space(op, dims=dims, cluster=not args.no_cluster)
-        budget = args.budget
+    space, budget, r = _search_one(op, args)
     print(f"# space: {space.size} mappings in {space.n_groups} "
           f"structure groups")
-
-    r = search(op, objective=args.objective, budget=budget, space=space,
-               num_pes=args.pes, noc_bw=args.bw, strategy=args.strategy,
-               seed=args.seed, top_k=args.top_k,
-               population=args.population,
-               l1_budget_kb=args.l1_budget_kb,
-               l2_budget_kb=args.l2_budget_kb,
-               pipeline=args.pipeline, devices=args.devices,
-               cache_dir=args.cache_dir or None)
     tag = " (cached)" if r.cached else ""
     print(f"# pipeline={r.pipeline} devices={r.n_devices} "
           f"strategy={r.strategy}{tag} evaluated={r.n_evaluated} "
@@ -148,20 +217,10 @@ def main(argv=None) -> None:
           f"l2={_fmt(s['l2_kb'])}KB")
 
     # Table 3 baselines at the same hardware point
-    hw = HWConfig(num_pes=args.pes, noc_bw=args.bw, noc_latency=2.0)
     print("\n# Table 3 baselines (same hardware):")
-    best_t3 = None
-    for f in TABLE3:
-        st = analyze(op, table3_for_layer(f, op), hw)
-        vals = {"edp": float(st.edp), "energy": float(st.energy_pj),
-                "runtime": float(st.runtime),
-                "throughput": float(st.throughput)}
-        v = vals[args.objective]
+    best_t3, per_flow = _table3_values(op, args)
+    for f, v in per_flow.items():
         print(f"  {f:5s} {args.objective}={_fmt(v)}")
-        if best_t3 is None or \
-                (v > best_t3 if args.objective == "throughput"
-                 else v < best_t3):
-            best_t3 = v
     if args.objective == "throughput":
         imp = r.best_value / best_t3
     else:

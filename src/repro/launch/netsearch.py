@@ -1,0 +1,153 @@
+"""CLI for whole-network, fusion-aware schedule search (``repro.netspace``).
+
+Examples::
+
+    # best-EDP VGG16 schedule (per-layer mappings + fused stacks) at the
+    # Fig. 10 reference design
+    PYTHONPATH=src python -m repro.launch.netsearch --model vgg16
+
+    # ablations: no fusion / no reconfiguration cost
+    PYTHONPATH=src python -m repro.launch.netsearch --model vgg16 \
+        --no-fuse --no-reconfig
+
+    # network-level joint mapping x hardware co-DSE
+    PYTHONPATH=src python -m repro.launch.netsearch --model resnet50 \
+        --co-dse --budget 256
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import dnn_models as zoo
+from repro.core.dse import DSEConfig
+from repro.core.performance import HWConfig
+from repro.mapspace import enable_compilation_cache
+from repro.netspace import (best_uniform, co_search_network,
+                            search_network, uniform_baseline)
+from repro.launch.mapsearch import DEFAULT_JAX_CACHE
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.4g}"
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="vgg16", choices=sorted(zoo.MODELS))
+    ap.add_argument("--objective", default="edp",
+                    choices=["edp", "energy", "runtime", "throughput"])
+    ap.add_argument("--budget", type=int, default=512,
+                    help="evaluated mappings per unique layer shape")
+    ap.add_argument("--frontier-k", type=int, default=8,
+                    help="per-layer frontier width the composer sees")
+    ap.add_argument("--pes", type=int, default=256)
+    ap.add_argument("--bw", type=float, default=32.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--strategy", default="auto",
+                    choices=["auto", "exhaustive", "random"])
+    ap.add_argument("--composer", default="auto",
+                    choices=["auto", "dp", "genetic"])
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable fused-stack/off-chip boundary modeling")
+    ap.add_argument("--no-reconfig", action="store_true",
+                    help="disable the mapping-switch reconfiguration cost")
+    ap.add_argument("--l2-budget-kb", type=float, default=None,
+                    help="fused-stack resident-tile L2 budget")
+    ap.add_argument("--reconfig-latency", type=float, default=0.0,
+                    help="fixed cycles per dataflow switch (HWConfig)")
+    ap.add_argument("--dram-bw", type=float, default=16.0,
+                    help="off-chip elements/cycle (HWConfig)")
+    ap.add_argument("--dram-energy-pj", type=float, default=100.0,
+                    help="pJ per off-chip element (HWConfig)")
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--block", type=int, default=1024)
+    ap.add_argument("--co-dse", action="store_true",
+                    help="cross the network frontiers with the hardware "
+                         "DSE grid")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny budget/frontier (smoke test)")
+    ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
+                    help="persistent XLA compilation cache ('' disables)")
+    args = ap.parse_args(argv)
+
+    if args.jax_cache_dir:
+        enable_compilation_cache(args.jax_cache_dir)
+    budget = min(args.budget, 128) if args.quick else args.budget
+    frontier_k = min(args.frontier_k, 4) if args.quick else args.frontier_k
+
+    hw = HWConfig(num_pes=args.pes, noc_bw=args.bw, noc_latency=2.0,
+                  dram_bw=args.dram_bw,
+                  dram_energy_pj=args.dram_energy_pj,
+                  reconfig_latency=args.reconfig_latency)
+    r = search_network(args.model, objective=args.objective,
+                       budget=budget, num_pes=args.pes, noc_bw=args.bw,
+                       seed=args.seed, strategy=args.strategy,
+                       frontier_k=frontier_k, fuse=not args.no_fuse,
+                       reconfig=not args.no_reconfig,
+                       l2_budget_kb=args.l2_budget_kb, hw=hw,
+                       composer=args.composer, devices=args.devices,
+                       block=args.block)
+    s = r.schedule
+    print(f"# {args.model}: {r.n_layers} layers ({r.n_unique} unique "
+          f"shapes, {r.n_classes} op-classes) strategy={r.strategy} "
+          f"composer={r.composer}")
+    print(f"# evaluated={r.n_evaluated} mappings, compiles="
+          f"{r.n_compiles} ({r.compile_s:.1f}s), eval={r.eval_s:.2f}s, "
+          f"compose={r.compose_s:.2f}s "
+          f"({r.schedules_per_s / 1e3:.1f}k sched-exts/s), "
+          f"wall={r.elapsed_s:.1f}s, devices={r.n_devices}")
+    seg_of = {}
+    for si, (a, b) in enumerate(s.segments):
+        for i in range(a, b + 1):
+            seg_of[i] = si
+    print(f"\n{'layer':28s} {'seg':>4s} {'runtime':>12s} "
+          f"{'energy':>12s} {'l2KB':>8s}  mapping")
+    for i, pl in enumerate(s.per_layer):
+        gene = "-".join(str(g) for g in pl["gene"])
+        print(f"{pl['layer']:28s} {seg_of[i]:>4d} "
+              f"{_fmt(pl['runtime']):>12s} {_fmt(pl['energy_pj']):>12s} "
+              f"{pl['l2_kb']:>8.1f}  {gene}")
+    print(f"\n# schedule: {len(s.segments)} fused stacks, "
+          f"{s.n_reconfigs} reconfigurations")
+    print(f"# totals: runtime={_fmt(s.runtime)}cy "
+          f"energy={_fmt(s.energy_pj)}pJ EDP={_fmt(s.network_edp)} "
+          f"throughput={s.throughput:.2f} MACs/cy")
+
+    base = uniform_baseline(r.netspace.layers, r.model)
+    flow, b = best_uniform(base, "edp")
+    print(f"\n# uniform Table-3 baselines (network EDP, same cost model):")
+    for f, v in base.items():
+        mark = " <- best uniform" if f == flow else ""
+        print(f"  {f:5s} EDP={_fmt(v['edp'])}{mark}")
+    print(f"# schedule vs best uniform ({flow}): "
+          f"{b['edp'] / s.network_edp:.2f}x better EDP")
+
+    if args.co_dse:
+        cfg = DSEConfig(pe_range=tuple(range(32, 513, 32)),
+                        bw_range=tuple(float(b) for b in range(4, 65, 4)))
+        if args.quick:
+            cfg = DSEConfig(pe_range=(64, 128, 256),
+                            bw_range=(8.0, 16.0, 32.0))
+        co = co_search_network(
+            args.model, cfg, objective=args.objective, budget=budget,
+            num_pes=args.pes, noc_bw=args.bw, seed=args.seed,
+            frontier_k=min(frontier_k, 4), fuse=not args.no_fuse,
+            reconfig=not args.no_reconfig,
+            l2_budget_kb=args.l2_budget_kb, hw=hw, devices=args.devices,
+            block=args.block)
+        print(f"\n# co-DSE: {co.n_designs} designs over {co.n_hw} hw "
+              f"points in {co.elapsed_s:.1f}s; {co.n_valid} valid, "
+              f"{len(co.pareto)} frontier points, compiles="
+              f"{co.n_compiles}")
+        for p in co.pareto[:12]:
+            print(f"  pes={p['num_pes']:4d} bw={p['noc_bw']:5.1f} "
+                  f"energy={_fmt(p['energy_pj'])} "
+                  f"thr={_fmt(p['throughput'])}")
+        for obj, p in co.best.items():
+            if p:
+                print(f"  best {obj:10s}: pes={p['num_pes']} "
+                      f"bw={p['noc_bw']} EDP={_fmt(p['edp'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,18 +21,18 @@ See ``repro.launch.mapsearch`` for the CLI.
 """
 from .batched import EvalStats, evaluate_points, measure_rate
 from .cache import enable_compilation_cache
-from .codse import (CoDSEResult, JointSweepResult, co_search, joint_sweep,
-                    merged_pareto)
+from .codse import (CoDSEResult, JointSweepResult, co_search, hw_grid,
+                    joint_sweep, merged_pareto)
 from .search import (OBJECTIVES, PIPELINES, STRATEGIES, SearchResult,
-                     search)
+                     search, static_candidates)
 from .space import (ClusterOption, GeneTables, MapSpace, MapSpaceError,
                     TileAxis, build_space, buffer_estimate_kb,
                     buffer_estimates_genes, canonical_signature,
                     decode_indices, dedupe_equivalent_genes,
                     dedupe_equivalent_points, enumerate_genes,
                     enumerate_points, flat_index, gene_tables,
-                    genes_from_points, group_template, point_dataflow,
-                    points_from_genes, prune_by_budget,
+                    genes_from_points, group_template, pad_tile_axes,
+                    point_dataflow, points_from_genes, prune_by_budget,
                     prune_genes_by_budget, sample_genes, sample_points)
 from .universal import (GeneEval, GeneRun, compile_count, encode_genes,
                         evaluate_genes, evaluate_points_universal,
@@ -48,8 +48,9 @@ __all__ = [
     "enable_compilation_cache", "encode_genes", "enumerate_genes",
     "enumerate_points", "evaluate_genes", "evaluate_points",
     "evaluate_points_universal", "flat_index", "gene_tables",
-    "genes_from_points", "group_template", "joint_sweep",
-    "measure_rate", "merged_pareto", "point_dataflow",
+    "genes_from_points", "group_template", "hw_grid", "joint_sweep",
+    "measure_rate", "merged_pareto", "pad_tile_axes", "point_dataflow",
     "points_from_genes", "prune_by_budget", "prune_genes_by_budget",
-    "sample_genes", "sample_points", "search", "universal_specs",
+    "sample_genes", "sample_points", "search", "static_candidates",
+    "universal_specs",
 ]

@@ -90,16 +90,24 @@ def merged_pareto(results: Sequence[tuple[str, DSEResult]],
     return front
 
 
+def hw_grid(cfg: DSEConfig) -> tuple[np.ndarray, np.ndarray]:
+    """The flattened (PEs, NoC bandwidth) design grid of a
+    :class:`DSEConfig` — the hardware axis every joint sweep (per-mapping,
+    paper-scale gene, and netspace's network-level co-search) crosses its
+    mapping rows with."""
+    pes_g, bw_g = np.meshgrid(np.asarray(cfg.pe_range, np.int64),
+                              np.asarray(cfg.bw_range, np.float32),
+                              indexing="ij")
+    return pes_g.ravel(), bw_g.ravel()
+
+
 def _joint_sweep(op: LayerOp, space: MapSpace, point, label: str,
                  cfg: DSEConfig, *, block: int, multicast: bool,
                  spatial_reduction: bool) -> tuple[DSEResult, int]:
     """One mapping × full (PEs × bw) grid through the universal executable
     — hardware as operands, identical budget/leakage accounting to
     ``core.dse.run_dse``."""
-    pes_g, bw_g = np.meshgrid(np.asarray(cfg.pe_range, np.int64),
-                              np.asarray(cfg.bw_range, np.float32),
-                              indexing="ij")
-    pes, bws = pes_g.ravel(), bw_g.ravel()
+    pes, bws = hw_grid(cfg)
     t0 = time.perf_counter()
     feats, run = evaluate_points_universal(
         op, space, [point] * len(pes), num_pes=pes, noc_bw=bws,
@@ -143,10 +151,8 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
     t0 = time.perf_counter()
     cfg = cfg or DSEConfig()
     genes = np.asarray(genes, np.int64)
-    pes_g, bw_g = np.meshgrid(np.asarray(cfg.pe_range, np.int64),
-                              np.asarray(cfg.bw_range, np.float32),
-                              indexing="ij")
-    pes, bws = pes_g.ravel().astype(np.float32), bw_g.ravel()
+    pes, bws = hw_grid(cfg)
+    pes = pes.astype(np.float32)
     m, h = genes.shape[0], pes.shape[0]
     n = m * h
     col, maximize = OBJECTIVES[objective]

@@ -276,6 +276,33 @@ def _search_legacy(op, space, rng, objective, budget, strategy, *,
     return evaluated, rows, strategy
 
 
+def static_candidates(space: MapSpace, strategy: str, budget: int,
+                      seed: int) -> tuple[np.ndarray, str]:
+    """The candidate gene matrix a NON-adaptive search evaluates:
+    ``exhaustive`` (or ``auto`` with the space inside the budget) yields
+    the first ``budget`` enumerated rows; ``random`` (or ``auto``
+    otherwise) yields ``sample_genes`` draws from a fresh
+    ``default_rng(seed)``.  For an EXPLICIT ``exhaustive``/``random``
+    strategy these are the exact candidate sets ``search()`` evaluates
+    under the same seed — the ``repro.netspace`` parity guarantee.  Note
+    the ``auto`` fallbacks differ: ``search()`` escalates an oversized
+    space to adaptive ``greedy`` refinement, which a one-pass batch
+    evaluator cannot replay, so ``auto`` here falls back to ``random``.
+    Returns ``(genes, resolved_strategy)``."""
+    if strategy == "auto":
+        strategy = "exhaustive" if space.size <= budget else "random"
+    if strategy == "exhaustive":
+        if space.size > budget:
+            return (enumerate_genes(space, 0, budget),
+                    "exhaustive[truncated]")
+        return enumerate_genes(space), "exhaustive"
+    if strategy == "random":
+        rng = np.random.default_rng(seed)
+        return sample_genes(space, rng, budget), "random"
+    raise ValueError(f"static_candidates: strategy must be auto/"
+                     f"exhaustive/random, got {strategy!r}")
+
+
 # ----------------------------------------------------------------------
 # Gene-matrix pipeline (default)
 # ----------------------------------------------------------------------

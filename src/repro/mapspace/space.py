@@ -302,6 +302,26 @@ def point_operands(space: MapSpace, points: Sequence[Point]
     return sizes, offsets
 
 
+def pad_tile_axes(space: MapSpace, counts: Sequence[int]) -> MapSpace:
+    """Pad each tile axis to ``counts[ai]`` candidates by repeating its last
+    (full-extent) candidate — the same padding rule ``gene_tables`` applies
+    internally.  Padded spaces of different layers share identical
+    ``gene_ranges()``, which is what lets ``repro.netspace`` use ONE gene
+    layout (and one compiled executable) across every layer of an op-class;
+    duplicate candidates introduced by padding are analysis-equivalent and
+    collapse in ``dedupe_equivalent_genes``."""
+    axes = []
+    for ax, n in zip(space.axes, counts):
+        if n < ax.n:
+            raise MapSpaceError(
+                f"axis {ax.dim}: cannot pad {ax.n} candidates down to {n}")
+        pad = n - ax.n
+        axes.append(TileAxis(
+            ax.dim, ax.sizes + (ax.sizes[-1],) * pad,
+            ax.offsets + (ax.offsets[-1],) * pad))
+    return dataclasses.replace(space, axes=tuple(axes))
+
+
 # ----------------------------------------------------------------------
 # Space pruning: equivalent-permutation dedupe + buffer-budget bounds
 # ----------------------------------------------------------------------

@@ -49,20 +49,35 @@ def compile_count() -> int:
     return _COMPILE_COUNT
 
 
-def mark_warmed(op: LayerOp, spec, multicast: bool, reduction: bool,
-                n_rows: int) -> bool:
-    """Record a first-call (compiling) universal execution at an ad-hoc
-    batch shape — e.g. ``measure_rate``'s timing batches, which bypass
-    :func:`evaluate_encoded`.  Returns True when the shape was new.  Keeps
-    :func:`compile_count` honest for every universal execution path (the
-    bench/CI O(1)-compile gate counts through it)."""
+def is_warm(key: tuple) -> bool:
+    """Whether a first-call (compiling) execution was already recorded
+    under ``key``."""
+    return key in _WARMED
+
+
+def warm_once(key: tuple) -> bool:
+    """Record a first-call (compiling) universal execution under an
+    arbitrary hashable key; returns True when the key was new.  Every
+    universal execution path — batched, gene pipeline, netspace's
+    shape-as-operand evaluator — funnels through this so
+    :func:`compile_count` (the bench/CI O(1)-compile gate) stays honest.
+    Call AFTER the first execution completes (gate on :func:`is_warm`)
+    so a failed/interrupted compile is retried and counted, not silently
+    treated as warm."""
     global _COMPILE_COUNT
-    key = _warm_key(op, spec, multicast, reduction, n_rows)
     if key in _WARMED:
         return False
     _WARMED.add(key)
     _COMPILE_COUNT += 1
     return True
+
+
+def mark_warmed(op: LayerOp, spec, multicast: bool, reduction: bool,
+                n_rows: int) -> bool:
+    """Record a first-call (compiling) universal execution at an ad-hoc
+    batch shape — e.g. ``measure_rate``'s timing batches, which bypass
+    :func:`evaluate_encoded`.  Returns True when the shape was new."""
+    return warm_once(_warm_key(op, spec, multicast, reduction, n_rows))
 
 
 def _cluster_candidate(copt: ClusterOption, op: LayerOp
@@ -179,7 +194,6 @@ def evaluate_encoded(op: LayerOp, spec: UniversalSpec,
     """Run one operand batch through the universal executable with fixed
     block padding (so each (spec, block) compiles exactly once per
     process); returns ``(features[n, F], run_stats)``."""
-    global _COMPILE_COUNT
     f = universal_evaluator(op, spec, multicast=multicast,
                             spatial_reduction=spatial_reduction)
     n = len(ops["pes"])
@@ -196,15 +210,14 @@ def evaluate_encoded(op: LayerOp, spec: UniversalSpec,
                 chunk = np.concatenate(
                     [chunk, np.repeat(v[lo:lo + 1], pad, 0)])
             batch[k] = jnp.asarray(chunk)
-        if wk not in _WARMED:
+        if not is_warm(wk):
             # first call at this shape: jit compile — re-run timed so every
             # batch contributes a steady-rate sample
             t0 = time.perf_counter()
             np.asarray(f(batch))
             run.compile_s += time.perf_counter() - t0
             run.n_compiles += 1
-            _COMPILE_COUNT += 1
-            _WARMED.add(wk)
+            warm_once(wk)
         t0 = time.perf_counter()
         out = np.asarray(f(batch))
         run.eval_s += time.perf_counter() - t0
@@ -216,6 +229,31 @@ def evaluate_encoded(op: LayerOp, spec: UniversalSpec,
 # Gene pipeline: vectorized encode + async sharded device-resident DSE
 # ----------------------------------------------------------------------
 
+def encode_genes_base(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
+                      num_pes, noc_bw) -> dict[str, np.ndarray]:
+    """The cluster-agnostic part of :func:`encode_genes` — tile sizes/
+    offsets, permutation ranks, spatial one-hot and the hardware point —
+    shared with ``repro.netspace``'s shape-as-operand encoder (which adds
+    its own ``ext``/cluster columns)."""
+    tb = gene_tables(op, space)
+    genes = np.asarray(genes, np.int64)
+    n, a = genes.shape[0], len(space.axes)
+    tiles = genes[:, 3:]
+    ar = np.arange(a)[None, :]
+    sp = np.zeros((n, a), np.float32)
+    sp[np.arange(n), tb.spatial_axis[genes[:, 0]]] = 1.0
+    return {
+        "sizes": tb.size_tab[ar, tiles],
+        "offsets": tb.off_tab[ar, tiles],
+        "rank": tb.perm_rank[genes[:, 1]],
+        "sp": sp,
+        "pes": np.broadcast_to(
+            np.asarray(num_pes, np.float32), (n,)).copy(),
+        "bw": np.broadcast_to(
+            np.asarray(noc_bw, np.float32), (n,)).copy(),
+    }
+
+
 def encode_genes(op: LayerOp, space: MapSpace, genes: np.ndarray,
                  spec: UniversalSpec, *, num_pes, noc_bw
                  ) -> dict[str, np.ndarray]:
@@ -226,21 +264,9 @@ def encode_genes(op: LayerOp, space: MapSpace, genes: np.ndarray,
     per-point encoder (the parity-oracle path)."""
     tb = gene_tables(op, space)
     genes = np.asarray(genes, np.int64)
-    n, a = genes.shape[0], len(space.axes)
-    tiles = genes[:, 3:]
-    ar = np.arange(a)[None, :]
-    sp = np.zeros((n, a), np.float32)
-    sp[np.arange(n), tb.spatial_axis[genes[:, 0]]] = 1.0
-    ops = {
-        "sizes": tb.size_tab[ar, tiles],
-        "offsets": tb.off_tab[ar, tiles],
-        "rank": tb.perm_rank[genes[:, 1]],
-        "sp": sp,
-        "pes": np.broadcast_to(
-            np.asarray(num_pes, np.float32), (n,)).copy(),
-        "bw": np.broadcast_to(
-            np.asarray(noc_bw, np.float32), (n,)).copy(),
-    }
+    n = genes.shape[0]
+    ops = encode_genes_base(op, space, genes, num_pes=num_pes,
+                            noc_bw=noc_bw)
     is_none = tb.cluster_is_none[genes[:, 2]]
     if spec.cluster:
         if is_none.any():
@@ -343,7 +369,6 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
     folds run_dse-style area/power/leakage accounting into the jit.
     Results are deterministic and identical for any device count."""
     t_start = time.perf_counter()
-    global _COMPILE_COUNT
     genes = np.asarray(genes, np.int64)
     n = genes.shape[0]
     nd = n_devices if n_devices is not None else jax.local_device_count()
@@ -419,14 +444,13 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
                          for kk, v in batch.items()}
             jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
             run.encode_s += time.perf_counter() - t0
-            if wk not in _WARMED:
+            if not is_warm(wk):
                 t0 = time.perf_counter()
                 out = f(jbatch)
                 jax.block_until_ready(out)
                 run.compile_s += time.perf_counter() - t0
                 run.n_compiles += 1
-                _COMPILE_COUNT += 1
-                _WARMED.add(wk)
+                warm_once(wk)
             else:
                 out = f(jbatch)        # async dispatch
                 run.n_steady += m

@@ -1,0 +1,47 @@
+"""Whole-network, fusion-aware schedule search on the gene pipeline.
+
+MAESTRO's headline DSE (paper §VII) optimizes one layer at a time, but the
+paper's own Fig. 11 shows the optimal dataflow flips across layer shapes
+within one network.  ``repro.netspace`` searches schedules for the ENTIRE
+network:
+
+  * :func:`build_netspace` — op-class grouping with a SHARED gene layout
+    per class (padded per-layer spaces, identical ``gene_ranges()``);
+  * the batched evaluator — layer shape is an additional vmapped operand
+    of the universal executable, so one XLA compile per (op-class,
+    level-count) produces every layer's candidate frontier in a single
+    device pass over a ``(n_layers, n_candidates, G)`` gene tensor;
+  * the DP composer — per-layer mapping selection + DeFiNES-style fused
+    layer stacks (intermediate activations resident in L2, analytic
+    halo/recompute overhead) under an explicit reconfiguration-cost model
+    (L1/L2 drain/refill between differing mappings, new ``HWConfig``
+    fields), with a genetic fallback for non-chain fusion masks;
+  * :func:`search_network` / :func:`co_search_network` — the end-to-end
+    APIs, the latter crossing network frontiers with the hardware grid
+    under ``run_dse``-style area/power/leakage accounting.
+
+Quick start::
+
+    from repro.netspace import search_network
+
+    r = search_network("vgg16", objective="edp", budget=512)
+    print(r.schedule.segments, r.schedule.network_edp)
+
+See ``repro.launch.netsearch`` for the CLI.
+"""
+from .composer import (CandStat, NetCostModel, NetworkSchedule,
+                       compose_dp, compose_genetic, edge_terms,
+                       evaluate_schedule, node_cost)
+from .evaluator import COLS, NetEval, evaluate_candidates, evaluate_rows
+from .search import (CoNetResult, NetSearchResult, best_uniform,
+                     co_search_network, search_network, uniform_baseline)
+from .space import (NetClass, NetSpace, build_netspace, halo_fractions)
+
+__all__ = [
+    "COLS", "CandStat", "CoNetResult", "NetClass", "NetCostModel",
+    "NetEval", "NetSearchResult", "NetworkSchedule", "best_uniform",
+    "build_netspace", "co_search_network", "compose_dp",
+    "compose_genetic", "edge_terms", "evaluate_candidates",
+    "evaluate_rows", "evaluate_schedule", "halo_fractions", "node_cost",
+    "search_network", "uniform_baseline",
+]

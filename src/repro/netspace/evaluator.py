@@ -1,0 +1,261 @@
+"""Batched multi-layer evaluation: layer shape as a vmapped operand.
+
+The PR-2/PR-3 universal executable already treats tile sizes, loop order,
+spatial choice, cluster option and the hardware point as operands of one
+compiled computation.  This module adds the last structural axis — the
+LAYER SHAPE — so one XLA compile per (op-class, level-count) produces the
+candidate frontiers of every layer of a network in a single device pass
+over a ``(n_layers, n_candidates, G)`` gene tensor:
+
+  * ``ext`` (i, D): the dim extents of row i's layer;
+  * ``cin_size``/``cin_off`` (i, K): the layer-resolved cluster inner
+    maps (the sliding ``SpatialMap(Sz(S), 1)`` inner differs per layer);
+  * everything else encodes exactly like the per-layer gene pipeline
+    (``universal.encode_genes_base`` — shared code, not a twin).
+
+Evaluation reuses the fused on-device reduction
+(``core.vectorized.universal_reduced_evaluator``) with the per-row
+objective column plus the (runtime, energy, L1, L2) columns the network
+composer needs, chunks striped over local devices with async double
+buffering — per-row outputs, so results are bit-identical at any device
+count.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.vectorized import (HWTail, ReduceSpec,
+                               universal_reduced_evaluator)
+from ..mapspace.search import OBJECTIVES
+from ..mapspace.space import dedupe_equivalent_genes, gene_tables
+from ..mapspace.universal import (GeneRun, _pad_rows, encode_genes_base,
+                                  is_warm, warm_once)
+from .space import NetSpace
+
+# The per-row feature columns the composer consumes.
+COLS = ("runtime", "energy_pj", "l1_kb", "l2_kb")
+
+
+@dataclasses.dataclass
+class NetEval:
+    """Per-candidate results of one network evaluation pass.
+
+    ``vals[u][i]`` is the canonical-minimize objective of candidate ``i``
+    of unique layer ``u``; ``cols[u]`` the matching ``(n, len(COLS))``
+    feature columns."""
+    vals: list[np.ndarray]
+    cols: list[np.ndarray]
+    run: GeneRun
+
+
+def _encode_rows(ns: NetSpace, cls, uid: np.ndarray, genes: np.ndarray,
+                 spec, *, pes: np.ndarray, bw: np.ndarray
+                 ) -> dict[str, np.ndarray]:
+    """Operand arrays for rows of ONE (class, level-count) family; rows
+    may mix layers (``uid`` per row)."""
+    n = genes.shape[0]
+    a = len(cls.dims)
+    d = len(spec.dim_names)
+    ops = {
+        "sizes": np.empty((n, a), np.float32),
+        "offsets": np.empty((n, a), np.float32),
+        "rank": np.empty((n, a), np.float32),
+        "sp": np.zeros((n, a), np.float32),
+        "ext": np.empty((n, d), np.float32),
+        "pes": np.asarray(pes, np.float32).copy(),
+        "bw": np.asarray(bw, np.float32).copy(),
+    }
+    if spec.cluster:
+        k = len(spec.cluster)
+        ops["csize"] = np.empty((n,), np.float32)
+        ops["csel"] = np.zeros((n, k), np.float32)
+        ops["cin_size"] = np.empty((n, k), np.float32)
+        ops["cin_off"] = np.empty((n, k), np.float32)
+    for u in np.unique(uid):
+        m = uid == u
+        op, space = ns.unique[u], ns.spaces[u]
+        sub = genes[m]
+        base = encode_genes_base(op, space, sub, num_pes=pes[m],
+                                 noc_bw=bw[m])
+        for key in ("sizes", "offsets", "rank", "sp"):
+            ops[key][m] = base[key]
+        ops["ext"][m] = ns.ext_row(u)[None, :]
+        if spec.cluster:
+            tb = gene_tables(op, space)
+            if tb.cluster_is_none[sub[:, 2]].any():
+                raise ValueError("1-level rows passed to a 2-level spec")
+            ops["csize"][m] = tb.csize_tab[sub[:, 2]]
+            cand = ns.cand_of_option(u)[sub[:, 2]]
+            sel = np.zeros((sub.shape[0], len(spec.cluster)), np.float32)
+            sel[np.arange(sub.shape[0]), cand] = 1.0
+            ops["csel"][m] = sel
+            cin_s, cin_o = ns.cin_rows(u)
+            ops["cin_size"][m] = cin_s[None, :]
+            ops["cin_off"][m] = cin_o[None, :]
+    return ops
+
+
+def _rep_key(cls) -> str:
+    rep = cls.rep
+    return f"{rep.name}|{sorted(rep.dims.items())}|{rep.op_type}"
+
+
+def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
+                  objective: str = "edp", num_pes, noc_bw,
+                  block: int = 1024, n_devices: int | None = None,
+                  depth: int = 2, multicast: bool = True,
+                  spatial_reduction: bool = True,
+                  hw_tail: HWTail | None = None, run: GeneRun | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Evaluate (layer, candidate) rows of ONE op-class through the
+    shape-as-operand executable: ≤ 2 compiles (1-level + 2-level family)
+    no matter how many layers/structure groups the rows span.  Returns
+    ``(vals, cols)`` aligned with the input rows; ``num_pes``/``noc_bw``
+    may be scalars or per-row arrays (network co-DSE)."""
+    col, maximize = OBJECTIVES[objective]
+    uid = np.asarray(uid, np.int64)
+    genes = np.asarray(genes, np.int64)
+    n = genes.shape[0]
+    cls = ns.classes[ns.class_of[uid[0]]]
+    if any(ns.class_of[u] != ns.class_of[uid[0]] for u in np.unique(uid)):
+        raise ValueError("evaluate_rows: rows must share one op-class")
+    nd = n_devices if n_devices is not None else jax.local_device_count()
+    nd = max(1, min(nd, jax.local_device_count()))
+    run = run if run is not None else GeneRun()
+    run.n_rows += n
+    run.n_devices = max(run.n_devices, nd)
+    pes = np.broadcast_to(np.asarray(num_pes, np.float32), (n,))
+    bw = np.broadcast_to(np.asarray(noc_bw, np.float32), (n,))
+
+    # 2-level membership: option slots are uniform across the class
+    tb0 = gene_tables(ns.unique[uid[0]], ns.spaces[uid[0]])
+    is2 = ~tb0.cluster_is_none[genes[:, 2]]
+
+    vals = np.empty(n, np.float64)
+    cols = np.empty((n, len(COLS)), np.float64)
+    t_start = time.perf_counter()
+
+    def collect(sub: np.ndarray, m: int, out: dict) -> None:
+        t0 = time.perf_counter()
+        host = {kk: np.asarray(v) for kk, v in out.items()}
+        run.eval_s += time.perf_counter() - t0
+        chunk_rows = nd * block
+        vals[sub] = host["vals"].reshape(chunk_rows)[:m]
+        cols[sub] = host["cols"].reshape(chunk_rows, len(COLS))[:m]
+        run.n_valid += int(np.sum(host["n_valid"]))
+
+    for spec, fam in ((cls.spec1, np.where(~is2)[0]),
+                      (cls.spec2, np.where(is2)[0])):
+        if fam.size == 0:
+            continue
+        assert spec is not None
+        chunk_rows = nd * block
+        reduce = ReduceSpec(objective=col, maximize=maximize,
+                            k=1, return_vals=True, pareto=False,
+                            hw=hw_tail, cols=COLS)
+        f = universal_reduced_evaluator(
+            cls.rep, spec, reduce, multicast=multicast,
+            spatial_reduction=spatial_reduction, n_devices=nd)
+        wk = ("netspace", _rep_key(cls), spec, reduce, multicast,
+              spatial_reduction, nd, chunk_rows)
+        pending: collections.deque = collections.deque()
+        for lo in range(0, fam.size, chunk_rows):
+            sub = fam[lo:lo + chunk_rows]
+            m = sub.size
+            t0 = time.perf_counter()
+            batch = _encode_rows(ns, cls, uid[sub], genes[sub], spec,
+                                 pes=pes[sub], bw=bw[sub])
+            pad = chunk_rows - m
+            live = np.zeros(chunk_rows, np.float32)
+            live[:m] = 1.0
+            batch = {kk: _pad_rows(v, pad) for kk, v in batch.items()}
+            batch["live"] = live
+            if nd > 1:
+                batch = {kk: v.reshape((nd, block) + v.shape[1:])
+                         for kk, v in batch.items()}
+            jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
+            run.encode_s += time.perf_counter() - t0
+            if not is_warm(wk):
+                t0 = time.perf_counter()
+                out = f(jbatch)
+                jax.block_until_ready(out)
+                run.compile_s += time.perf_counter() - t0
+                run.n_compiles += 1
+                warm_once(wk)
+            else:
+                out = f(jbatch)        # async dispatch
+                run.n_steady += m
+            pending.append((sub, m, out))
+            while len(pending) > depth:
+                collect(*pending.popleft())
+        while pending:
+            collect(*pending.popleft())
+
+    run.e2e_s += time.perf_counter() - t_start
+    return vals, cols
+
+
+def evaluate_candidates(ns: NetSpace, cand: Sequence[np.ndarray], *,
+                        objective: str = "edp", num_pes, noc_bw,
+                        block: int = 1024, n_devices: int | None = None,
+                        multicast: bool = True,
+                        spatial_reduction: bool = True,
+                        dedupe: bool = True) -> NetEval:
+    """Evaluate per-unique-layer candidate gene matrices for the whole
+    network: one device pass per (op-class, level-count), analysis-
+    equivalent candidates collapsed per layer (``dedupe=True``; disable
+    when ``num_pes``/``noc_bw`` are per-row arrays, where equal genes may
+    carry different hardware points).
+
+    ``cand[u]`` is the ``(n_u, G)`` candidate matrix of unique layer
+    ``u``; ``num_pes``/``noc_bw`` are scalars or per-unique-layer arrays
+    aligned with ``cand``."""
+    run = GeneRun()
+    vals: list[np.ndarray] = [np.empty(0, np.float64)] * len(ns.unique)
+    cols: list[np.ndarray] = [np.empty((0, len(COLS)),
+                                       np.float64)] * len(ns.unique)
+    per_row_hw = isinstance(num_pes, (list, tuple))
+    for cls in ns.classes:
+        jobs = []  # (uid, rep rows, back map, per-row pes, per-row bw)
+        for u in cls.members:
+            g = np.asarray(cand[u], np.int64)
+            if not g.shape[0]:
+                continue
+            if dedupe:
+                reps, back = dedupe_equivalent_genes(
+                    ns.unique[u], ns.spaces[u], g)
+            else:
+                reps = back = np.arange(g.shape[0])
+            p = b = None
+            if per_row_hw:
+                p = np.broadcast_to(np.asarray(num_pes[u], np.float32),
+                                    (g.shape[0],))[reps]
+                b = np.broadcast_to(np.asarray(noc_bw[u], np.float32),
+                                    (g.shape[0],))[reps]
+            jobs.append((u, g[reps], back, p, b))
+        if not jobs:
+            continue
+        uid = np.concatenate([np.full(g.shape[0], u, np.int64)
+                              for u, g, *_ in jobs])
+        genes = np.concatenate([g for _, g, *_ in jobs])
+        v, c = evaluate_rows(
+            ns, uid, genes, objective=objective,
+            num_pes=np.concatenate([p for *_, p, _ in jobs])
+            if per_row_hw else num_pes,
+            noc_bw=np.concatenate([b for *_, b in jobs])
+            if per_row_hw else noc_bw,
+            block=block, n_devices=n_devices, multicast=multicast,
+            spatial_reduction=spatial_reduction, run=run)
+        at = 0
+        for u, g, back, *_ in jobs:
+            vals[u] = v[at:at + g.shape[0]][back]
+            cols[u] = c[at:at + g.shape[0]][back]
+            at += g.shape[0]
+    return NetEval(vals=vals, cols=cols, run=run)

@@ -1,0 +1,291 @@
+"""Tests for the whole-network, fusion-aware schedule search
+(``repro.netspace``).
+
+Load-bearing properties:
+
+  * the shape-as-operand evaluator reproduces the per-op universal
+    evaluator's values for every layer of a network, at ≤ 2 XLA compiles
+    per (op-class, level-count), deterministically at any device count;
+  * the DP composer is exact: it matches brute-force enumeration over
+    (per-layer choice × segmentation) on a toy chain, and the genetic
+    fallback converges to the same optimum;
+  * fused stacks respect the resident-tile L2 budget;
+  * with reconfiguration cost disabled and fusion off, the composed
+    schedule's per-layer choices coincide with independent per-layer
+    ``search()`` runs on fixed seeds (shared candidate generation).
+"""
+import itertools
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import dnn_models as zoo
+from repro.core import tensor_analysis as ta
+from repro.core.dse import DSEConfig
+from repro.core.performance import HWConfig
+from repro.core.vectorized import FEATURES
+from repro.mapspace import search
+from repro.mapspace.space import points_from_genes, sample_genes
+from repro.mapspace.universal import evaluate_points_universal
+from repro.netspace import (NetCostModel, build_netspace,
+                            co_search_network, compose_genetic,
+                            evaluate_candidates, evaluate_schedule,
+                            search_network, uniform_baseline)
+from repro.netspace.search import _out_vols, best_uniform
+
+PES, BW = 48, 12.0
+BLOCK = 64
+
+
+@pytest.fixture(scope="module")
+def chain():
+    return [ta.conv2d("net-c1", k=8, c=4, y=12, x=12, r=3, s=3),
+            ta.conv2d("net-c2", k=12, c=8, y=14, x=14, r=3, s=3),
+            ta.fc("net-f1", k=16, c=32)]
+
+
+@pytest.fixture(scope="module")
+def ns(chain):
+    return build_netspace(chain)
+
+
+@pytest.fixture(scope="module")
+def searched(chain, ns):
+    """One fusion-aware search shared by the composer tests."""
+    hw = HWConfig(num_pes=PES, noc_bw=BW, noc_latency=2.0,
+                  reconfig_latency=100.0)
+    return search_network(chain, objective="edp", budget=150,
+                          num_pes=PES, noc_bw=BW, seed=0, frontier_k=3,
+                          fuse=True, reconfig=True, l2_budget_kb=60.0,
+                          hw=hw, block=BLOCK, netspace=ns)
+
+
+# ----------------------------------------------------------------------
+# Shape dedup + shared gene layout
+# ----------------------------------------------------------------------
+
+def test_unique_layers_dedup():
+    layers = zoo.vgg16()
+    unique, index = zoo.unique_layers(layers)
+    assert len(unique) < len(layers)
+    assert len(index) == len(layers)
+    for i, u in enumerate(index):
+        assert zoo.layer_shape_key(layers[i]) == \
+            zoo.layer_shape_key(unique[u])
+    # repeated conv shapes (conv6/conv7, conv11..13) collapse
+    names = [l.name for l in layers]
+    assert index[names.index("vgg16-conv6")] == \
+        index[names.index("vgg16-conv7")]
+    assert zoo.summarize("vgg16").n_unique_shapes == len(unique)
+
+
+def test_netspace_shared_gene_layout(chain, ns):
+    assert ns.n_layers == 3
+    assert len(ns.classes) == 2          # conv class + fc class
+    for cls in ns.classes:
+        ranges = {ns.spaces[u].gene_ranges() for u in cls.members}
+        assert len(ranges) == 1          # one gene layout per class
+        assert cls.spec1.ext_operand
+    # per-layer tile candidates stay layer-legal after padding
+    for u, sp in enumerate(ns.spaces):
+        op = ns.unique[u]
+        for ax in sp.axes:
+            ext = op.dims[ax.dim]
+            for size, off in zip(ax.sizes, ax.offsets):
+                assert size <= ext and off >= 1
+
+
+# ----------------------------------------------------------------------
+# Shape-as-operand evaluator vs the per-op universal evaluator
+# ----------------------------------------------------------------------
+
+def test_evaluator_matches_per_op_universal(chain, ns):
+    cand = [sample_genes(sp, np.random.default_rng(u), 60)
+            for u, sp in enumerate(ns.spaces)]
+    ev = evaluate_candidates(ns, cand, objective="edp", num_pes=PES,
+                             noc_bw=BW, block=BLOCK, dedupe=False)
+    cols_i = [FEATURES.index(c)
+              for c in ("runtime", "energy_pj", "l1_kb", "l2_kb")]
+    for u, op in enumerate(ns.unique):
+        feats, _ = evaluate_points_universal(
+            op, ns.spaces[u], points_from_genes(cand[u]),
+            num_pes=PES, noc_bw=BW, block=BLOCK)
+        ref = feats[:, FEATURES.index("edp")].astype(np.float64)
+        np.testing.assert_allclose(ev.vals[u], ref, rtol=1e-5)
+        np.testing.assert_allclose(ev.cols[u],
+                                   feats[:, cols_i].astype(np.float64),
+                                   rtol=1e-5)
+
+
+def test_evaluator_dedupe_matches_full(chain, ns):
+    cand = [sample_genes(sp, np.random.default_rng(7 + u), 40)
+            for u, sp in enumerate(ns.spaces)]
+    a = evaluate_candidates(ns, cand, objective="edp", num_pes=PES,
+                            noc_bw=BW, block=BLOCK, dedupe=True)
+    b = evaluate_candidates(ns, cand, objective="edp", num_pes=PES,
+                            noc_bw=BW, block=BLOCK, dedupe=False)
+    for u in range(len(ns.unique)):
+        np.testing.assert_allclose(a.vals[u], b.vals[u], rtol=1e-6)
+
+
+def test_evaluator_device_determinism(chain, ns):
+    """With XLA_FLAGS=--xla_force_host_platform_device_count=4 (the CI
+    smoke job) this compares a real 4-device pmap against the 1-device
+    jit path."""
+    cand = [sample_genes(sp, np.random.default_rng(3 + u), 50)
+            for u, sp in enumerate(ns.spaces)]
+    kw = dict(objective="edp", num_pes=PES, noc_bw=BW, block=32)
+    one = evaluate_candidates(ns, cand, n_devices=1, **kw)
+    many = evaluate_candidates(ns, cand,
+                               n_devices=jax.local_device_count(), **kw)
+    assert many.run.n_devices == jax.local_device_count()
+    for u in range(len(ns.unique)):
+        np.testing.assert_array_equal(one.vals[u], many.vals[u])
+        np.testing.assert_array_equal(one.cols[u], many.cols[u])
+
+
+def test_compile_budget_per_op_class():
+    """≤ 2 compiles per (op-class, level-count) no matter how many layers
+    or structure groups; warm on repeat."""
+    layers = [ta.conv2d("nb-c1", k=8, c=4, y=10, x=10, r=3, s=3),
+              ta.conv2d("nb-c2", k=6, c=8, y=12, x=12, r=3, s=3),
+              ta.conv2d("nb-c3", k=4, c=4, y=8, x=8, r=3, s=3)]
+    ns2 = build_netspace(layers)
+    assert len(ns2.classes) == 1
+    cand = [sample_genes(sp, np.random.default_rng(u), 48)
+            for u, sp in enumerate(ns2.spaces)]
+    ev = evaluate_candidates(ns2, cand, objective="edp", num_pes=32,
+                             noc_bw=8.0, block=32)
+    assert ev.run.n_compiles <= 2
+    ev2 = evaluate_candidates(ns2, cand, objective="edp", num_pes=32,
+                              noc_bw=8.0, block=32)
+    assert ev2.run.n_compiles == 0
+
+
+# ----------------------------------------------------------------------
+# Composer: DP exactness, footprint bounds, genetic fallback
+# ----------------------------------------------------------------------
+
+def _brute_force(frontiers, out_vols, fusible, model):
+    best = (np.inf, None, None)
+    n_b = len(frontiers) - 1
+    for choice in itertools.product(*[range(len(f)) for f in frontiers]):
+        for fuse in itertools.product((False, True), repeat=n_b):
+            c, _, _ = evaluate_schedule(frontiers, choice, fuse,
+                                        out_vols, fusible, model)
+            if c < best[0]:
+                best = (c, choice, fuse)
+    return best
+
+
+def test_dp_matches_bruteforce(chain, ns, searched):
+    r = searched
+    frontiers = [r.frontiers[ns.index[i]] for i in range(ns.n_layers)]
+    cost, choice, fuse = _brute_force(frontiers, _out_vols(chain),
+                                      ns.fusible, r.model)
+    assert np.isfinite(cost)
+    assert r.schedule.cost == pytest.approx(cost, rel=1e-9)
+    assert tuple(r.schedule.choice) == choice
+    assert tuple(r.schedule.fuse) == fuse
+
+
+def test_genetic_composer_matches_dp(chain, ns, searched):
+    r = searched
+    frontiers = [r.frontiers[ns.index[i]] for i in range(ns.n_layers)]
+    macs = float(sum(op.total_macs for op in chain))
+    sched, _ = compose_genetic(frontiers, _out_vols(chain), ns.fusible,
+                               r.model, [l.name for l in chain], macs,
+                               seed=1)
+    assert sched.cost == pytest.approx(r.schedule.cost, rel=1e-9)
+
+
+def test_fused_footprint_respected(chain, ns):
+    budget = 40.0
+    r = search_network(chain, objective="edp", budget=150, num_pes=PES,
+                       noc_bw=BW, seed=0, frontier_k=3, fuse=True,
+                       l2_budget_kb=budget, block=BLOCK, netspace=ns)
+    s = r.schedule
+    for a, b in s.segments:
+        if b > a:
+            stack = sum(s.per_layer[i]["l2_kb"] for i in range(a, b + 1))
+            assert stack <= budget + 1e-9
+    # an infeasible-budget run degrades to singleton stacks, not a crash
+    tiny = search_network(chain, objective="edp", budget=150,
+                          num_pes=PES, noc_bw=BW, seed=0, frontier_k=3,
+                          fuse=True, l2_budget_kb=1e-3, block=BLOCK,
+                          netspace=ns)
+    assert all(not f for f in tiny.schedule.fuse)
+
+
+def test_fusible_mask_blocks_fusion(chain, ns):
+    ns2 = build_netspace(chain, fusible=[False, True])
+    r = search_network(chain, objective="edp", budget=150, num_pes=PES,
+                       noc_bw=BW, seed=0, frontier_k=3, fuse=True,
+                       block=BLOCK, netspace=ns2)
+    assert r.schedule.fuse[0] is False
+    macs = float(sum(op.total_macs for op in chain))
+    frontiers = [r.frontiers[ns2.index[i]] for i in range(ns2.n_layers)]
+    sched, _ = compose_genetic(frontiers, _out_vols(chain), ns2.fusible,
+                               r.model, [l.name for l in chain], macs,
+                               seed=0)
+    assert sched.fuse[0] is False
+
+
+# ----------------------------------------------------------------------
+# Reconfig-0 / fusion-off parity with independent per-layer search()
+# ----------------------------------------------------------------------
+
+def test_reconfig_zero_matches_independent_search(chain, ns):
+    r = search_network(chain, objective="edp", budget=150, num_pes=PES,
+                       noc_bw=BW, seed=0, strategy="random",
+                       fuse=False, reconfig=False, block=BLOCK,
+                       netspace=ns)
+    assert all(not f for f in r.schedule.fuse)
+    total_e = total_r = 0.0
+    for i, op in enumerate(chain):
+        s = search(op, objective="edp", budget=150,
+                   space=ns.space_for(i), num_pes=PES, noc_bw=BW,
+                   strategy="random", seed=0, block=BLOCK)
+        assert r.schedule.genes[i] == tuple(s.best_point)
+        assert r.schedule.per_layer[i]["value"] == \
+            pytest.approx(s.best_value, rel=1e-5)
+        total_e += s.best_stats["energy_pj"]
+        total_r += s.best_stats["runtime"]
+    # network totals = sums of the independent per-layer results
+    assert r.schedule.energy_pj == pytest.approx(total_e, rel=1e-5)
+    assert r.schedule.runtime == pytest.approx(total_r, rel=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Baselines + network co-DSE
+# ----------------------------------------------------------------------
+
+def test_uniform_baseline_shape(chain):
+    model = NetCostModel(hw=HWConfig(num_pes=PES, noc_bw=BW,
+                                     noc_latency=2.0))
+    base = uniform_baseline(chain, model)
+    assert set(base) == {"C-P", "X-P", "YX-P", "YR-P", "KC-P"}
+    for v in base.values():
+        assert np.isfinite(v["edp"]) and v["edp"] > 0
+    flow, b = best_uniform(base)
+    assert b["edp"] == min(v["edp"] for v in base.values())
+
+
+def test_co_search_network(chain, ns):
+    cfg = DSEConfig(pe_range=(16, 32, 64), bw_range=(4.0, 8.0, 16.0))
+    co = co_search_network(chain, cfg, objective="edp", budget=100,
+                           num_pes=32, noc_bw=8.0, seed=0,
+                           frontier_k=3, block=BLOCK, netspace=ns)
+    assert co.n_hw == 9
+    assert co.n_valid > 0
+    assert co.pareto, "empty network frontier"
+    # frontier is strictly improving in both axes
+    es = [p["energy_pj"] for p in co.pareto]
+    ts = [p["throughput"] for p in co.pareto]
+    assert es == sorted(es) and ts == sorted(ts)
+    assert co.best["edp"] is not None
+    assert co.top and "segments" in co.top[0]
+    # hardware rides existing executables: no compiles beyond the
+    # reference search's own (per-class, per-level) budget
+    assert co.n_compiles <= 2 * 2 * len(ns.classes)
