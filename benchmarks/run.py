@@ -42,6 +42,22 @@ def _emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
 
 
+def _write_bench(name: str, payload: dict) -> None:
+    """Emit a BENCH_<name>.json perf artifact through the unified
+    ``repro.api.Report`` schema — under ``benchmarks/out`` (CI artifact)
+    AND at the repo root (perf trajectory tracker).  Payload keys stay at
+    top level, so historical readers keep working."""
+    import json
+    from repro.api import Report
+    doc = Report.bench(name, payload).to_json()
+    os.makedirs(OUT, exist_ok=True)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for path in (os.path.join(OUT, f"BENCH_{name}.json"),
+                 os.path.join(root, f"BENCH_{name}.json")):
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)
+
+
 # ----------------------------------------------------------------------
 # Fig. 9 — runtime-model validation workloads (MAERI 64 PEs / Eyeriss 168)
 # ----------------------------------------------------------------------
@@ -372,12 +388,7 @@ def bench_mapspace(quick: bool) -> None:
             "n_devices": joint.n_devices,
         },
     }
-    os.makedirs(OUT, exist_ok=True)
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    for path in (os.path.join(OUT, "BENCH_mapspace.json"),
-                 os.path.join(root, "BENCH_mapspace.json")):
-        with open(path, "w") as f:
-            json.dump(payload, f, indent=2)
+    _write_bench("mapspace", payload)
     us = elapsed / max(n_eval, 1) * 1e6
     _emit("mapspace", us,
           f"e2e={e2e / 1e6:.2f}M/s;legacy_e2e={e2e_legacy / 1e6:.3f}M/s;"
@@ -449,6 +460,7 @@ def bench_netspace(quick: bool) -> None:
         "budget_per_layer": budget,
         "frontier_k": frontier_k,
         "n_evaluated": r.n_evaluated,
+        "n_compiles": compiles,
         "universal_compiles_process": compiles,
         "compile_budget": compile_budget,
         "compile_s": round(r.compile_s, 3),
@@ -468,12 +480,7 @@ def bench_netspace(quick: bool) -> None:
         "fusion_edp_gain": fusion_gain,
         "elapsed_s": round(elapsed, 3),
     }
-    os.makedirs(OUT, exist_ok=True)
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    for path in (os.path.join(OUT, "BENCH_netspace.json"),
-                 os.path.join(root, "BENCH_netspace.json")):
-        with open(path, "w") as f:
-            json.dump(payload, f, indent=2)
+    _write_bench("netspace", payload)
     us = elapsed / max(r.n_evaluated, 1) * 1e6
     _emit("netspace", us,
           f"edp_win_vs_uniform={edp_win:.2f}x;"
@@ -481,6 +488,105 @@ def bench_netspace(quick: bool) -> None:
           f"compiles={compiles}/{compile_budget};"
           f"stacks={len(r.schedule.segments)};"
           f"sched_exts_per_s={r.schedules_per_s / 1e3:.0f}k")
+
+
+def bench_api(quick: bool) -> None:
+    """The declarative front door (repro.api) and its HEADLINE number:
+    ``Session.run_many`` on a mixed batch of >= 6 heterogeneous layer
+    queries (conv + GEMM classes, different shapes, objectives AND fixed
+    hardware points) must
+
+      * compile at most ONE executable per unique (op-class,
+        level-count) family — the coalesced gene-tensor pass through the
+        shape-as-operand executables, vs 2 compiles per DISTINCT layer
+        on the sequential path; and
+      * beat sequential per-query ``mapspace.search()`` wall time by
+        >= 2x (both paths cold: the query layers are unique to this
+        bench, so neither side reuses earlier benches' executables);
+
+    plus the coalesced-vs-sequential determinism check (same family
+    spaces, per-query passes) riding the already-warm executables.
+
+    Writes ``BENCH_api.json`` (repo root + benchmarks/out) through
+    ``Report.to_json()``; ci.sh asserts the compile budget, the speedup
+    and determinism."""
+    import jax
+    from repro.api import Hardware, Query, SearchSpec, Session, Workload
+    from repro.mapspace import search
+    from repro.mapspace.universal import compile_count
+    t0 = time.perf_counter()
+    budget = 96 if quick else 512
+    block = 128 if quick else 1024
+    sc = 1 if quick else 2
+    ops = [
+        ta.conv2d("api-conv1", k=16 * sc, c=8 * sc, y=16, x=16, r=3, s=3),
+        ta.conv2d("api-conv2", k=8 * sc, c=16 * sc, y=12, x=12, r=3, s=3),
+        ta.conv2d("api-conv3", k=12 * sc, c=12 * sc, y=20, x=20, r=3,
+                  s=3),
+        ta.conv2d("api-conv4", k=24 * sc, c=4 * sc, y=10, x=10, r=3, s=3),
+        ta.gemm("api-gemm1", m=16, n=64 * sc, k=32 * sc),
+        ta.fc("api-fc1", k=48 * sc, c=64 * sc),
+    ]
+    objectives = ["edp", "runtime", "energy", "edp", "energy", "edp"]
+    queries = [
+        Query(Workload.of_layer(op),
+              Hardware(num_pes=64 + 32 * (i % 3),
+                       noc_bw=8.0 * (1 + i % 2)),
+              SearchSpec(objective=objectives[i], budget=budget,
+                         strategy="random", block=block, top_k=4))
+        for i, op in enumerate(ops)]
+
+    session = Session()
+    c0 = compile_count()
+    t = time.perf_counter()
+    reports = session.run_many(queries)
+    batch_wall = time.perf_counter() - t
+    batch = dict(session.last_batch)
+    batch_compiles = compile_count() - c0
+
+    # determinism oracle: per-query passes through the SAME family
+    # spaces (warm executables) must reproduce the coalesced answers
+    reports_seq = session.run_many(queries, coalesce=False)
+    deterministic = all(a.results_json() == b.results_json()
+                        for a, b in zip(reports, reports_seq))
+
+    # the old way: sequential per-query search() — per-op executables,
+    # cold (these layer shapes appear nowhere else in the bench suite)
+    c1 = compile_count()
+    t = time.perf_counter()
+    seq_compile_s = 0.0
+    for q, op in zip(queries, ops):
+        r = search(op, objective=q.search.objective, budget=budget,
+                   num_pes=q.hardware.num_pes, noc_bw=q.hardware.noc_bw,
+                   strategy="random", seed=0, block=block, top_k=4)
+        seq_compile_s += r.compile_s
+    seq_wall = time.perf_counter() - t
+    seq_compiles = compile_count() - c1
+    speedup = seq_wall / max(batch_wall, 1e-9)
+
+    payload = {
+        "quick": quick,
+        "n_queries": len(queries),
+        "n_evaluated": sum(r.n_evaluated for r in reports),
+        "n_families": batch["n_families"],
+        "compile_budget": batch["compile_budget"],
+        "n_compiles": batch_compiles,
+        "compile_s": batch["compile_s"],
+        "batch_wall_s": round(batch_wall, 3),
+        "coalesced_deterministic": deterministic,
+        "sequential_search_wall_s": round(seq_wall, 3),
+        "sequential_search_compiles": seq_compiles,
+        "sequential_search_compile_s": round(seq_compile_s, 3),
+        "run_many_speedup_vs_sequential_search": round(speedup, 2),
+        "n_devices": jax.local_device_count(),
+        "elapsed_s": round(time.perf_counter() - t0, 3),
+    }
+    _write_bench("api", payload)
+    us = (time.perf_counter() - t0) / max(len(queries), 1) * 1e6
+    _emit("api", us,
+          f"speedup_vs_sequential={speedup:.1f}x;"
+          f"compiles={batch_compiles}/{batch['n_families']}families;"
+          f"seq_compiles={seq_compiles};deterministic={deterministic}")
 
 
 def bench_kernels(quick: bool) -> None:
@@ -503,7 +609,7 @@ def bench_kernels(quick: bool) -> None:
 BENCHES = [bench_fig9_validation, bench_fig10_tradeoffs,
            bench_fig11_reuse_bw, bench_fig12_energy_breakdown,
            bench_fig13_dse, bench_dse_rate, bench_mapspace,
-           bench_netspace, bench_kernels]
+           bench_netspace, bench_api, bench_kernels]
 
 
 def main(argv=None) -> None:

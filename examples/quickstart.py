@@ -1,28 +1,57 @@
-"""Quickstart: analyze one (layer × dataflow × hardware) with MAESTRO.
+"""Quickstart: the declarative front door (``repro.api``).
+
+One ``Query`` = workload x hardware x search spec; a ``Session`` routes
+it to the right engine and answers in the unified ``Report`` schema.
+Batches of heterogeneous queries coalesce into shared device passes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+from repro.api import Hardware, Query, SearchSpec, Session, Workload
 from repro.core import HWConfig, analyze, conv2d
 from repro.core.dataflows import table3_for_layer
 
-# VGG16 conv11 — the paper's running example (Table 5 / Fig. 12)
-layer = conv2d("vgg16-conv11", k=512, c=512, y=16, x=16, r=3, s=3)
+# VGG16 conv11 at reduced channel counts (keeps the demo snappy) — the
+# paper's running example shape (Table 5 / Fig. 12)
+layer = conv2d("demo-conv11", k=64, c=64, y=16, x=16, r=3, s=3)
 
-# An Eyeriss-class accelerator: 256 PEs, 32 elements/cycle NoC
+# -- the paper's fixed Table-3 dataflows, via the core analysis engine --
 hw = HWConfig(num_pes=256, noc_bw=32.0, noc_latency=2.0)
-
 print(f"layer {layer.name}: {layer.total_macs / 1e6:.0f}M MACs\n")
-print(f"{'dataflow':8s} {'cycles':>12s} {'MACs/cyc':>9s} {'util':>6s} "
-      f"{'energy(mJ)':>11s} {'L1KB':>6s} {'L2KB':>7s} {'bw req':>7s}")
+print(f"{'dataflow':8s} {'cycles':>12s} {'MACs/cyc':>9s} "
+      f"{'energy(uJ)':>11s} {'L1KB':>6s} {'L2KB':>7s}")
 for name in ("C-P", "X-P", "YX-P", "YR-P", "KC-P"):
-    df = table3_for_layer(name, layer)
-    s = analyze(layer, df, hw)
+    s = analyze(layer, table3_for_layer(name, layer), hw)
     print(f"{name:8s} {s.runtime:12.0f} {s.throughput:9.2f} "
-          f"{s.utilization:6.2f} {s.energy_pj / 1e9:11.3f} "
-          f"{s.l1_req_kb:6.2f} {s.l2_req_kb:7.1f} "
-          f"{s.peak_bw.get(0, 0):7.1f}")
+          f"{s.energy_pj / 1e6:11.3f} {s.l1_req_kb:6.2f} "
+          f"{s.l2_req_kb:7.1f}")
 
-print("\nReuse classes at the top cluster level (KC-P):")
-s = analyze(layer, table3_for_layer("KC-P", layer), hw)
-for tensor, r in s.reuse[0].items():
-    print(f"  {tensor}: spatial={r.spatial:10s} temporal={r.temporal}")
+# -- the declarative front door: search the mapping space instead ------
+session = Session()                     # owns caches + warm executables
+query = Query(Workload.of_layer(layer),
+              Hardware(num_pes=256, noc_bw=32.0),
+              SearchSpec(objective="edp", budget=300, top_k=3))
+report = session.run(query)
+print(f"\nsearched {report.n_evaluated} mappings "
+      f"({report.n_compiles} XLA compiles): "
+      f"best EDP = {report.best['value']:.4g}")
+print(report.raw.best_dataflow)
+
+# -- batch mode: heterogeneous queries share family executables --------
+batch = [
+    Query(Workload.of_layer(
+        conv2d("demo-early", k=32, c=16, y=32, x=32, r=3, s=3)),
+        Hardware(num_pes=128, noc_bw=16.0),
+        SearchSpec(objective="runtime", budget=200)),
+    Query(Workload.of_layer(
+        conv2d("demo-late", k=96, c=96, y=8, x=8, r=3, s=3)),
+        Hardware(num_pes=256, noc_bw=32.0),
+        SearchSpec(objective="edp", budget=200)),
+]
+reports = session.run_many(batch)       # ONE device pass per op-class
+for rep in reports:
+    print(f"{rep.name}: best {rep.objective} = "
+          f"{rep.best['value']:.4g} (coalesced={rep.coalesced})")
+print(f"batch stats: {session.last_batch}")
+
+# every report serializes through one schema
+print(f"\nreport JSON keys: {sorted(report.to_json())}")

@@ -15,21 +15,49 @@ python -m pytest -x -q \
     tests/test_mapspace.py \
     tests/test_universal.py \
     tests/test_genes.py \
-    tests/test_netspace.py
+    tests/test_netspace.py \
+    tests/test_api.py
 
 echo "== 4-host-device sharded smoke =="
 # The gene pipeline stripes chunks over all local devices; forcing four
 # host CPU devices exercises the pmap path and the 1-vs-N-device
-# determinism assertions inside tests/test_genes.py and
-# tests/test_netspace.py for real.
+# determinism assertions inside tests/test_genes.py, tests/test_netspace.py
+# and tests/test_api.py (coalesced run_many) for real.
 XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
-    python -m pytest -x -q tests/test_genes.py tests/test_netspace.py
+    python -m pytest -x -q tests/test_genes.py tests/test_netspace.py \
+    tests/test_api.py
 
 echo "== small-budget netsearch smoke =="
-# End-to-end network schedule search through the CLI: VGG16 at a tiny
-# budget must complete with the shape-as-operand executables and print a
-# schedule + baseline comparison.
+# End-to-end network schedule search through the CLI shim: VGG16 at a
+# tiny budget must complete with the shape-as-operand executables and
+# print a schedule + baseline comparison.
 python -m repro.launch.netsearch --model vgg16 --quick --jax-cache-dir ''
+
+echo "== declarative batch front door (--file) smoke =="
+# Serving-style mixed batch through repro.launch.query: 4 coalescible
+# layer queries (conv + GEMM classes, heterogeneous objectives AND fixed
+# hardware points), one adaptive-budget network query, one hardware-grid
+# co-DSE query.  The coalesced layer queries must stay within the
+# (op-class, level-count) family compile budget.
+python -m repro.launch.query --file examples/queries.json \
+    --out benchmarks/out/api_batch_smoke.json \
+    --cache-dir '' --jax-cache-dir ''
+python - <<'EOF'
+import json
+d = json.load(open("benchmarks/out/api_batch_smoke.json"))
+b = d["batch"]
+print(json.dumps(b, indent=2))
+assert b["n_queries"] == 6, b
+# the 4 layer queries coalesce; network + grid queries route to their
+# engines
+assert b["n_coalesced"] == 4, b
+assert b["n_families"] <= 4, b
+assert b["n_compiles"] <= b["compile_budget"], b
+kinds = [r["kind"] for r in d["reports"]]
+assert kinds.count("layer") == 4, kinds
+assert "network" in kinds and "layer_codse" in kinds, kinds
+assert all(r["schema_version"] == 1 for r in d["reports"])
+EOF
 
 echo "== benchmarks --quick =="
 python -m benchmarks.run --quick
@@ -72,6 +100,27 @@ assert d["universal_compiles_process"] <= d["compile_budget"], \
 # the searched schedule's network EDP must beat the best single uniform
 # Table-3 dataflow applied network-wide
 assert d["edp_win_vs_best_uniform"] >= 1.0, d["edp_win_vs_best_uniform"]
+EOF
+
+echo "== BENCH_api smoke artifact =="
+test -f benchmarks/out/BENCH_api.json
+test -f BENCH_api.json
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_api.json"))
+print(json.dumps(d, indent=2))
+# Session.run_many on the mixed heterogeneous batch must compile at most
+# ONE executable per unique (op-class, level-count) family ...
+assert d["n_compiles"] <= d["n_families"], \
+    (d["n_compiles"], d["n_families"],
+     "coalesced batch must stay within the family compile budget")
+# ... answer identically whether queries are coalesced or run one at a
+# time through the same family spaces ...
+assert d["coalesced_deterministic"] is True
+# ... and beat sequential per-query search() wall time by >= 2x (the
+# compile amortization IS the headline)
+assert d["run_many_speedup_vs_sequential_search"] >= 2.0, \
+    d["run_many_speedup_vs_sequential_search"]
 EOF
 
 echo "CI smoke gate passed."

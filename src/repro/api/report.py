@@ -1,0 +1,200 @@
+"""The unified :class:`Report` result schema of the declarative front
+door.
+
+Every engine behind :class:`repro.api.Session` — per-layer mapping
+search, joint co-DSE, whole-network schedule search, the coalesced
+``run_many`` pass — answers in the SAME shape: a best design, a top-k
+list, an optional Pareto frontier, and one set of counters/rates.
+``to_json()``/``from_json()`` round-trip exactly, and the BENCH_* perf
+artifacts are emitted through the same schema (``Report.bench``) so CI
+and the perf tracker read one format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from .spec import SCHEMA_VERSION, Query
+
+# Field names reserved by the flat JSON form (everything else in a
+# payload round-trips through ``extras``).
+_RESERVED = ("schema_version", "kind", "name", "objective", "strategy",
+             "query", "tag", "best", "top_k", "pareto", "n_evaluated",
+             "n_compiles", "compile_s", "eval_s", "encode_s",
+             "elapsed_s", "n_devices", "coalesced", "rates")
+
+
+def _jsonable(v: Any) -> Any:
+    """numpy scalars/arrays -> Python scalars/lists, tuples -> lists."""
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if hasattr(v, "item") and not hasattr(v, "__len__"):
+        return v.item()
+    if hasattr(v, "tolist"):
+        return v.tolist()
+    return v
+
+
+@dataclasses.dataclass
+class Report:
+    """One query's answer (or one benchmark's payload) in the unified
+    schema.  ``raw`` keeps the engine-native result object for callers
+    that need the full dataclass (never serialized)."""
+    kind: str                          # layer | layer_codse | network |
+    #                                    network_codse | bench
+    name: str = ""                     # workload / bench label
+    objective: str = ""
+    strategy: str = ""
+    query: dict[str, Any] | None = None
+    tag: str | None = None
+    best: dict[str, Any] = dataclasses.field(default_factory=dict)
+    top_k: list[dict[str, Any]] = dataclasses.field(default_factory=list)
+    pareto: list[dict[str, Any]] = dataclasses.field(default_factory=list)
+    n_evaluated: int = 0
+    n_compiles: int = 0
+    compile_s: float = 0.0
+    eval_s: float = 0.0
+    encode_s: float = 0.0
+    elapsed_s: float = 0.0
+    n_devices: int = 1
+    coalesced: bool = False            # answered by a shared device pass
+    rates: dict[str, float] = dataclasses.field(default_factory=dict)
+    extras: dict[str, Any] = dataclasses.field(default_factory=dict)
+    raw: Any = None
+
+    # ------------------------------------------------------------------
+    # JSON round trip
+    # ------------------------------------------------------------------
+
+    def to_json(self) -> dict[str, Any]:
+        """Flat JSON dict: the reserved schema fields plus ``extras``
+        merged at top level (benchmark payload keys stay where CI and
+        the perf tracker have always read them)."""
+        d: dict[str, Any] = {"schema_version": SCHEMA_VERSION}
+        for f in _RESERVED[1:]:
+            d[f] = _jsonable(getattr(self, f))
+        clash = set(self.extras) & set(_RESERVED)
+        if clash:
+            raise ValueError(f"extras collide with schema fields: "
+                             f"{sorted(clash)}")
+        d.update(_jsonable(self.extras))
+        return d
+
+    @staticmethod
+    def from_json(d: dict[str, Any]) -> "Report":
+        d = dict(d)
+        d.pop("schema_version", None)
+        kw = {f: d.pop(f) for f in _RESERVED[1:] if f in d}
+        return Report(**kw, extras=d)
+
+    def results_json(self) -> dict[str, Any]:
+        """The DETERMINISTIC slice of the report — what two runs of the
+        same query must agree on bit-for-bit (no timings, no rates)."""
+        return {k: _jsonable(getattr(self, k))
+                for k in ("kind", "name", "objective", "strategy",
+                          "best", "top_k", "pareto", "n_evaluated")}
+
+    # ------------------------------------------------------------------
+    # Constructors from the engine result dataclasses
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def bench(name: str, payload: dict[str, Any]) -> "Report":
+        """Wrap a benchmark payload: keys matching schema fields land on
+        the report itself, the rest ride in ``extras`` — the flat JSON
+        keeps every historical BENCH_* key at top level."""
+        payload = dict(payload)
+        kw = {f: payload.pop(f) for f in _RESERVED[3:] if f in payload}
+        return Report(kind="bench", name=name, **kw, extras=payload)
+
+    @staticmethod
+    def from_search(r, query: Query | None = None) -> "Report":
+        """From :class:`repro.mapspace.search.SearchResult`."""
+        return Report(
+            kind="layer", name=getattr(r.space, "op_name", "") or "",
+            objective=r.objective, strategy=r.strategy,
+            query=query.describe() if query else None,
+            tag=query.tag if query else None,
+            best={"point": list(r.best_point), "value": float(r.best_value),
+                  "stats": _jsonable(r.best_stats)},
+            top_k=[{"point": list(e["point"]), "value": float(e["value"]),
+                    "stats": _jsonable(e["stats"])} for e in r.top_k],
+            n_evaluated=int(r.n_evaluated), n_compiles=int(r.n_compiles),
+            compile_s=float(r.compile_s), eval_s=float(r.eval_s),
+            encode_s=float(r.encode_s), elapsed_s=float(r.elapsed_s),
+            n_devices=int(r.n_devices),
+            rates={"mappings_per_s": float(r.mappings_per_s),
+                   "end_to_end_mappings_per_s":
+                       float(r.end_to_end_mappings_per_s)},
+            extras={"cached": bool(r.cached), "pipeline": r.pipeline,
+                    "n_groups": int(r.n_groups)},
+            raw=r)
+
+    @staticmethod
+    def from_codse(co, query: Query | None = None) -> "Report":
+        """From :class:`repro.mapspace.codse.CoDSEResult`."""
+        rep = Report.from_search(co.search, query)
+        rep.kind = "layer_codse"
+        rep.pareto = _jsonable(co.pareto)
+        rep.best = {"per_objective": _jsonable(co.best),
+                    "mapping": rep.best}
+        rep.n_evaluated = int(co.n_evaluated)
+        rep.n_compiles = int(co.n_compiles)
+        rep.elapsed_s = float(co.elapsed_s)
+        if co.joint is not None:
+            rep.extras["joint"] = {
+                "n_designs": int(co.joint.n_designs),
+                "n_hw": int(co.joint.n_hw),
+                "n_valid": int(co.joint.n_valid),
+                "designs_per_s": float(co.joint.designs_per_s),
+                "top": _jsonable(co.joint.top[:4]),
+            }
+        rep.raw = co
+        return rep
+
+    @staticmethod
+    def from_network(r, query: Query | None = None) -> "Report":
+        """From :class:`repro.netspace.search.NetSearchResult`."""
+        s = r.schedule
+        return Report(
+            kind="network", objective=r.objective, strategy=r.strategy,
+            query=query.describe() if query else None,
+            tag=query.tag if query else None,
+            best={"cost": float(s.cost), "runtime": float(s.runtime),
+                  "energy_pj": float(s.energy_pj),
+                  "edp": float(s.network_edp),
+                  "throughput": float(s.throughput),
+                  "segments": _jsonable(s.segments),
+                  "n_reconfigs": int(s.n_reconfigs),
+                  "per_layer": _jsonable(s.per_layer)},
+            n_evaluated=int(r.n_evaluated), n_compiles=int(r.n_compiles),
+            compile_s=float(r.compile_s), eval_s=float(r.eval_s),
+            encode_s=float(r.encode_s), elapsed_s=float(r.elapsed_s),
+            n_devices=int(r.n_devices),
+            rates={"schedules_per_s": float(r.schedules_per_s)},
+            extras={"composer": r.composer, "n_layers": int(r.n_layers),
+                    "n_unique": int(r.n_unique),
+                    "n_classes": int(r.n_classes),
+                    "budget_policy": getattr(r, "budget_policy",
+                                             "uniform"),
+                    "refined": _jsonable(getattr(r, "refined", []))},
+            raw=r)
+
+    @staticmethod
+    def from_conet(co, query: Query | None = None) -> "Report":
+        """From :class:`repro.netspace.search.CoNetResult`."""
+        rep = Report.from_network(co.search, query)
+        rep.kind = "network_codse"
+        rep.pareto = _jsonable(co.pareto)
+        rep.best = {"per_objective": _jsonable(co.best),
+                    "schedule": rep.best}
+        rep.top_k = _jsonable(co.top)
+        rep.n_evaluated = int(co.n_designs)
+        rep.n_compiles = int(co.n_compiles)
+        rep.elapsed_s = float(co.elapsed_s)
+        rep.extras.update({"n_hw": int(co.n_hw),
+                           "n_valid": int(co.n_valid)})
+        rep.raw = co
+        return rep

@@ -1,11 +1,13 @@
-"""CLI for the mapping-space search engine (``repro.mapspace``).
+"""CLI for per-layer mapping search — a thin shim over the declarative
+query backend (``repro.launch.query`` / ``repro.api``), kept for
+compatibility.  Prefer ``python -m repro.launch.query``.
 
 Examples::
 
     # best EDP mapping for VGG16 conv1_2 at the Fig. 10 reference design
     PYTHONPATH=src python -m repro.launch.mapsearch --model vgg16 --layer 1
 
-    # joint mapping x hardware co-DSE with Table 3 baselines on the frontier
+    # joint mapping x hardware co-DSE
     PYTHONPATH=src python -m repro.launch.mapsearch --model resnet50 \
         --layer conv2 --objective edp --co-dse --budget 1500
 
@@ -16,73 +18,17 @@ Examples::
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 
+from repro.api import Hardware, Query, SearchSpec, Workload, select_layers
 from repro.core import dnn_models as zoo
 from repro.core.dataflows import TABLE3, table3_for_layer
-from repro.core.dse import DSEConfig
 from repro.core.model import analyze
 from repro.core.performance import HWConfig
-from repro.mapspace import (build_space, co_search,
-                            enable_compilation_cache, search)
-
-DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache",
-                             "repro-mapspace")
-DEFAULT_JAX_CACHE = os.path.join(DEFAULT_CACHE, "xla")
-
-
-def _pick_layers(layers, which: str):
-    """Resolve ``--layer``: an index, a name substring, ``all``, or a
-    comma-separated list of those (multi-match substrings select every
-    match) — one entry per selected layer, model order, deduplicated."""
-    if which == "all":
-        return list(layers)
-    out = []
-    for part in which.split(","):
-        part = part.strip()
-        if not part:
-            continue
-        if part.isdigit():
-            out.append(layers[int(part)])
-            continue
-        matches = [l for l in layers if part in l.name]
-        if not matches:
-            raise SystemExit(f"no layer matching {part!r}; "
-                             f"try --list-layers")
-        out.extend(matches)
-    seen: set[str] = set()
-    uniq = [l for l in out
-            if not (l.name in seen or seen.add(l.name))]
-    if not uniq:
-        raise SystemExit(f"no layer matching {which!r}; try --list-layers")
-    order = [l.name for l in layers]
-    return sorted(uniq, key=lambda l: order.index(l.name))
-
-
-def _fmt(v: float) -> str:
-    return f"{v:.4g}"
-
-
-def _search_one(op, args, budget=None):
-    if args.quick:
-        dims = tuple(args.dims.split(",")) if args.dims else \
-            (("K", "C") if "K" in op.dims else None)
-        space = build_space(op, dims=dims, cluster=False)
-        budget = min(budget or args.budget, 200)
-    else:
-        dims = tuple(args.dims.split(",")) if args.dims else None
-        space = build_space(op, dims=dims, cluster=not args.no_cluster)
-        budget = budget or args.budget
-    r = search(op, objective=args.objective, budget=budget, space=space,
-               num_pes=args.pes, noc_bw=args.bw, strategy=args.strategy,
-               seed=args.seed, top_k=args.top_k,
-               population=args.population,
-               l1_budget_kb=args.l1_budget_kb,
-               l2_budget_kb=args.l2_budget_kb,
-               pipeline=args.pipeline, devices=args.devices,
-               cache_dir=args.cache_dir or None)
-    return space, budget, r
+from repro.launch.query import (DEFAULT_CACHE, DEFAULT_JAX_CACHE, _fmt,
+                                print_batch_summary, print_layer_report,
+                                print_layer_codse_report,
+                                session_from_args)
 
 
 def _table3_values(op, args) -> tuple[float, dict[str, float]]:
@@ -104,22 +50,47 @@ def _table3_values(op, args) -> tuple[float, dict[str, float]]:
     return best, per_flow
 
 
-def _multi_layer(picked, args) -> None:
-    """Per-layer best-mapping table for --layer all / comma lists."""
+def _spec_from_args(args, op) -> SearchSpec:
+    if args.quick:
+        dims = tuple(args.dims.split(",")) if args.dims else \
+            (("K", "C") if "K" in op.dims else None)
+        cluster = False
+        budget = min(args.budget, 200)
+    else:
+        dims = tuple(args.dims.split(",")) if args.dims else None
+        cluster = not args.no_cluster
+        budget = args.budget
+    return SearchSpec(
+        objective=args.objective, budget=budget, strategy=args.strategy,
+        seed=args.seed, top_k=args.top_k, population=args.population,
+        cluster=cluster, dims=dims, l1_prune_kb=args.l1_budget_kb,
+        l2_prune_kb=args.l2_budget_kb, block=1024,
+        pipeline=args.pipeline,
+        codse_top_k=min(args.top_k, 4), joint_genes=args.joint_genes)
+
+
+def _multi_layer(picked, session, args) -> None:
+    """Per-layer best-mapping table for --layer all / comma lists — now
+    answered as ONE coalesced ``run_many`` batch (shared family
+    executables) instead of N independent searches."""
+    hw = Hardware(num_pes=args.pes, noc_bw=args.bw)
+    qs = [Query(Workload.of_layer(op), hw, _spec_from_args(args, op))
+          for op in picked]
+    reps = session.run_many(qs)
     print(f"# {len(picked)} layers, objective={args.objective}, "
-          f"budget={args.budget}/layer")
-    print(f"{'layer':28s} {'space':>10s} {'eval':>6s} "
+          f"budget={qs[0].search.budget}/layer")
+    print(f"{'layer':28s} {'eval':>6s} "
           f"{'best ' + args.objective:>12s} {'bestT3':>12s} "
           f"{'vs T3':>6s}  mapping")
-    for op in picked:
-        space, budget, r = _search_one(op, args)
+    for op, r in zip(picked, reps):
         t3, _ = _table3_values(op, args)
-        imp = (r.best_value / t3 if args.objective == "throughput"
-               else t3 / r.best_value)
-        gene = "-".join(str(g) for g in r.best_point)
-        print(f"{op.name:28s} {space.size:>10d} {r.n_evaluated:>6d} "
-              f"{_fmt(r.best_value):>12s} {_fmt(t3):>12s} "
+        imp = (r.best["value"] / t3 if args.objective == "throughput"
+               else t3 / r.best["value"])
+        gene = "-".join(str(g) for g in r.best["point"])
+        print(f"{op.name:28s} {r.n_evaluated:>6d} "
+              f"{_fmt(r.best['value']):>12s} {_fmt(t3):>12s} "
               f"{imp:>5.2f}x  {gene}")
+    print_batch_summary(session)
 
 
 def main(argv=None) -> None:
@@ -157,7 +128,8 @@ def main(argv=None) -> None:
     ap.add_argument("--pipeline", default="gene",
                     choices=["gene", "legacy"],
                     help="gene: device-resident vectorized pipeline "
-                         "(default); legacy: tuple-point parity oracle")
+                         "(default); legacy: tuple-point parity oracle "
+                         "(never coalesced)")
     ap.add_argument("--devices", type=int, default=None,
                     help="local devices to stripe evaluation chunks over "
                          "(default: all; CPU multi-device needs XLA_FLAGS="
@@ -166,96 +138,57 @@ def main(argv=None) -> None:
                     help="cross top-k mappings with the hardware DSE grid")
     ap.add_argument("--joint-genes", type=int, default=0,
                     help="with --co-dse: also run the paper-scale joint "
-                         "sweep — this many sampled mappings x the FULL "
-                         "hardware grid through the fused device pipeline")
+                         "sweep through the fused device pipeline")
     ap.add_argument("--cache-dir", default=DEFAULT_CACHE,
                     help="on-disk result cache ('' disables)")
     ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
-                    help="persistent XLA compilation cache: the universal "
-                         "evaluator's one compile also amortizes across "
-                         "processes ('' disables)")
+                    help="persistent XLA compilation cache ('' disables)")
     args = ap.parse_args(argv)
 
-    if args.jax_cache_dir:
-        if not enable_compilation_cache(args.jax_cache_dir):
-            print(f"# warning: could not enable XLA compilation cache at "
-                  f"{args.jax_cache_dir!r}; compiles will not persist "
-                  f"across processes", file=sys.stderr)
-
+    session = session_from_args(args)
     layers = zoo.MODELS[args.model]()
     if args.list_layers:
         for i, l in enumerate(layers):
             print(f"{i:3d} {l.op_type:10s} {l.name} {l.dims}")
         return
-    picked = _pick_layers(layers, args.layer)
+    try:
+        picked = select_layers(layers, args.layer)
+    except ValueError as e:
+        raise SystemExit(f"{e}; try --list-layers")
     if len(picked) > 1:
         if args.co_dse:
             print("# note: --co-dse applies to single-layer selections "
                   "only; running the per-layer table instead "
                   "(pick one layer for the co-DSE)", file=sys.stderr)
-        _multi_layer(picked, args)
+        _multi_layer(picked, session, args)
         return
     op = picked[0]
     print(f"# layer {op.name} {op.op_type} {op.dims}")
 
-    space, budget, r = _search_one(op, args)
-    print(f"# space: {space.size} mappings in {space.n_groups} "
-          f"structure groups")
-    tag = " (cached)" if r.cached else ""
-    print(f"# pipeline={r.pipeline} devices={r.n_devices} "
-          f"strategy={r.strategy}{tag} evaluated={r.n_evaluated} "
-          f"groups={r.n_groups} encode={r.encode_s:.2f}s "
-          f"eval={r.eval_s:.2f}s compiles={r.n_compiles} "
-          f"({r.compile_s:.1f}s) "
-          f"rate={r.mappings_per_s / 1e6:.2f}M mappings/s "
-          f"e2e={r.end_to_end_mappings_per_s / 1e6:.2f}M mappings/s")
-    print(f"\nbest {args.objective} = {_fmt(r.best_value)}")
-    print(r.best_dataflow)
-    s = r.best_stats
-    print(f"runtime={_fmt(s['runtime'])}cy energy={_fmt(s['energy_pj'])}pJ "
-          f"util={s['util']:.2f} l1={_fmt(s['l1_kb'])}KB "
-          f"l2={_fmt(s['l2_kb'])}KB")
+    spec = _spec_from_args(args, op)
+    hw = Hardware(num_pes=args.pes, noc_bw=args.bw)
+    rep = session.run(Query(Workload.of_layer(op), hw, spec))
+    print_layer_report(rep)
 
     # Table 3 baselines at the same hardware point
     print("\n# Table 3 baselines (same hardware):")
     best_t3, per_flow = _table3_values(op, args)
     for f, v in per_flow.items():
         print(f"  {f:5s} {args.objective}={_fmt(v)}")
+    best_val = rep.best["value"]
     if args.objective == "throughput":
-        imp = r.best_value / best_t3
+        imp = best_val / best_t3
     else:
-        imp = best_t3 / r.best_value
+        imp = best_t3 / best_val
     print(f"# best-found vs best-Table-3: {imp:.2f}x")
 
     if args.co_dse:
-        cfg = DSEConfig(pe_range=tuple(range(32, 513, 32)),
+        grid = Hardware(num_pes=args.pes, noc_bw=args.bw,
+                        pe_range=tuple(range(32, 513, 32)),
                         bw_range=tuple(float(b) for b in range(4, 65, 4)))
-        co = co_search(op, objective=args.objective,
-                       mapping_budget=budget, top_k=min(args.top_k, 4),
-                       cfg=cfg, num_pes=args.pes, noc_bw=args.bw,
-                       seed=args.seed, space=space,
-                       include_table3=list(TABLE3),
-                       joint_genes=args.joint_genes,
-                       cache_dir=args.cache_dir or None)
-        if co.joint is not None:
-            j = co.joint
-            print(f"\n# joint sweep: {j.n_designs} designs "
-                  f"({j.n_mappings} mappings x {j.n_hw} hw points) in "
-                  f"{j.elapsed_s:.1f}s = "
-                  f"{j.designs_per_s / 1e6:.2f}M designs/s on "
-                  f"{j.n_devices} device(s); {j.n_valid} valid, "
-                  f"{len(j.pareto)} frontier points")
-        print(f"\n# co-DSE: {co.n_evaluated} designs in "
-              f"{co.elapsed_s:.1f}s; merged Pareto frontier "
-              f"({len(co.pareto)} points, energy vs throughput):")
-        for p in co.pareto[:12]:
-            print(f"  {p['mapping']:28s} pes={p['num_pes']:4d} "
-                  f"bw={p['noc_bw']:5.1f} energy={_fmt(p['energy_pj'])} "
-                  f"thr={_fmt(p['throughput'])}")
-        for obj, p in co.best.items():
-            if p:
-                print(f"  best {obj:10s}: {p['mapping']} "
-                      f"pes={p['num_pes']} bw={p['noc_bw']}")
+        co = session.run(Query(Workload.of_layer(op), grid, spec))
+        print()
+        print_layer_codse_report(co)
 
 
 if __name__ == "__main__":

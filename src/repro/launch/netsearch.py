@@ -1,4 +1,6 @@
-"""CLI for whole-network, fusion-aware schedule search (``repro.netspace``).
+"""CLI for whole-network schedule search — a thin shim over the
+declarative query backend (``repro.launch.query`` / ``repro.api``), kept
+for compatibility.  Prefer ``python -m repro.launch.query --model <net>``.
 
 Examples::
 
@@ -18,17 +20,12 @@ from __future__ import annotations
 
 import argparse
 
+from repro.api import Hardware, Query, SearchSpec, Workload
 from repro.core import dnn_models as zoo
-from repro.core.dse import DSEConfig
-from repro.core.performance import HWConfig
-from repro.mapspace import enable_compilation_cache
-from repro.netspace import (best_uniform, co_search_network,
-                            search_network, uniform_baseline)
-from repro.launch.mapsearch import DEFAULT_JAX_CACHE
-
-
-def _fmt(v: float) -> str:
-    return f"{v:.4g}"
+from repro.launch.query import (DEFAULT_JAX_CACHE, _fmt,
+                                print_network_codse_report,
+                                print_network_report, session_from_args)
+from repro.netspace import best_uniform, uniform_baseline
 
 
 def main(argv=None) -> None:
@@ -47,6 +44,12 @@ def main(argv=None) -> None:
                     choices=["auto", "exhaustive", "random"])
     ap.add_argument("--composer", default="auto",
                     choices=["auto", "dp", "genetic"])
+    ap.add_argument("--budget-policy", default="uniform",
+                    choices=["uniform", "adaptive"],
+                    help="adaptive: cheap first pass, then refine the "
+                         "top network-cost contributors (the new-API "
+                         "default; uniform kept as the legacy default "
+                         "here)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable fused-stack/off-chip boundary modeling")
     ap.add_argument("--no-reconfig", action="store_true",
@@ -66,53 +69,32 @@ def main(argv=None) -> None:
                          "DSE grid")
     ap.add_argument("--quick", action="store_true",
                     help="tiny budget/frontier (smoke test)")
+    ap.add_argument("--cache-dir", default="",
+                    help="on-disk result cache ('' disables)")
     ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
                     help="persistent XLA compilation cache ('' disables)")
     args = ap.parse_args(argv)
 
-    if args.jax_cache_dir:
-        enable_compilation_cache(args.jax_cache_dir)
+    session = session_from_args(args)
     budget = min(args.budget, 128) if args.quick else args.budget
     frontier_k = min(args.frontier_k, 4) if args.quick else args.frontier_k
 
-    hw = HWConfig(num_pes=args.pes, noc_bw=args.bw, noc_latency=2.0,
+    hw = Hardware(num_pes=args.pes, noc_bw=args.bw,
                   dram_bw=args.dram_bw,
                   dram_energy_pj=args.dram_energy_pj,
                   reconfig_latency=args.reconfig_latency)
-    r = search_network(args.model, objective=args.objective,
-                       budget=budget, num_pes=args.pes, noc_bw=args.bw,
-                       seed=args.seed, strategy=args.strategy,
-                       frontier_k=frontier_k, fuse=not args.no_fuse,
-                       reconfig=not args.no_reconfig,
-                       l2_budget_kb=args.l2_budget_kb, hw=hw,
-                       composer=args.composer, devices=args.devices,
-                       block=args.block)
-    s = r.schedule
-    print(f"# {args.model}: {r.n_layers} layers ({r.n_unique} unique "
-          f"shapes, {r.n_classes} op-classes) strategy={r.strategy} "
-          f"composer={r.composer}")
-    print(f"# evaluated={r.n_evaluated} mappings, compiles="
-          f"{r.n_compiles} ({r.compile_s:.1f}s), eval={r.eval_s:.2f}s, "
-          f"compose={r.compose_s:.2f}s "
-          f"({r.schedules_per_s / 1e3:.1f}k sched-exts/s), "
-          f"wall={r.elapsed_s:.1f}s, devices={r.n_devices}")
-    seg_of = {}
-    for si, (a, b) in enumerate(s.segments):
-        for i in range(a, b + 1):
-            seg_of[i] = si
-    print(f"\n{'layer':28s} {'seg':>4s} {'runtime':>12s} "
-          f"{'energy':>12s} {'l2KB':>8s}  mapping")
-    for i, pl in enumerate(s.per_layer):
-        gene = "-".join(str(g) for g in pl["gene"])
-        print(f"{pl['layer']:28s} {seg_of[i]:>4d} "
-              f"{_fmt(pl['runtime']):>12s} {_fmt(pl['energy_pj']):>12s} "
-              f"{pl['l2_kb']:>8.1f}  {gene}")
-    print(f"\n# schedule: {len(s.segments)} fused stacks, "
-          f"{s.n_reconfigs} reconfigurations")
-    print(f"# totals: runtime={_fmt(s.runtime)}cy "
-          f"energy={_fmt(s.energy_pj)}pJ EDP={_fmt(s.network_edp)} "
-          f"throughput={s.throughput:.2f} MACs/cy")
+    spec = SearchSpec(objective=args.objective, budget=budget,
+                      strategy=args.strategy, seed=args.seed,
+                      frontier_k=frontier_k, fuse=not args.no_fuse,
+                      reconfig=not args.no_reconfig,
+                      l2_budget_kb=args.l2_budget_kb,
+                      composer=args.composer,
+                      budget_policy=args.budget_policy,
+                      block=args.block, codse_top_k=4)
+    rep = session.run(Query(Workload.of_network(args.model), hw, spec))
+    print_network_report(rep)
 
+    r = rep.raw
     base = uniform_baseline(r.netspace.layers, r.model)
     flow, b = best_uniform(base, "edp")
     print(f"\n# uniform Table-3 baselines (network EDP, same cost model):")
@@ -120,33 +102,34 @@ def main(argv=None) -> None:
         mark = " <- best uniform" if f == flow else ""
         print(f"  {f:5s} EDP={_fmt(v['edp'])}{mark}")
     print(f"# schedule vs best uniform ({flow}): "
-          f"{b['edp'] / s.network_edp:.2f}x better EDP")
+          f"{b['edp'] / r.schedule.network_edp:.2f}x better EDP")
 
     if args.co_dse:
-        cfg = DSEConfig(pe_range=tuple(range(32, 513, 32)),
-                        bw_range=tuple(float(b) for b in range(4, 65, 4)))
         if args.quick:
-            cfg = DSEConfig(pe_range=(64, 128, 256),
+            grid = Hardware(num_pes=args.pes, noc_bw=args.bw,
+                            dram_bw=args.dram_bw,
+                            dram_energy_pj=args.dram_energy_pj,
+                            reconfig_latency=args.reconfig_latency,
+                            pe_range=(64, 128, 256),
                             bw_range=(8.0, 16.0, 32.0))
-        co = co_search_network(
-            args.model, cfg, objective=args.objective, budget=budget,
-            num_pes=args.pes, noc_bw=args.bw, seed=args.seed,
+        else:
+            grid = Hardware(
+                num_pes=args.pes, noc_bw=args.bw, dram_bw=args.dram_bw,
+                dram_energy_pj=args.dram_energy_pj,
+                reconfig_latency=args.reconfig_latency,
+                pe_range=tuple(range(32, 513, 32)),
+                bw_range=tuple(float(b) for b in range(4, 65, 4)))
+        co_spec = SearchSpec(
+            objective=args.objective, budget=budget,
+            strategy=args.strategy, seed=args.seed,
             frontier_k=min(frontier_k, 4), fuse=not args.no_fuse,
             reconfig=not args.no_reconfig,
-            l2_budget_kb=args.l2_budget_kb, hw=hw, devices=args.devices,
-            block=args.block)
-        print(f"\n# co-DSE: {co.n_designs} designs over {co.n_hw} hw "
-              f"points in {co.elapsed_s:.1f}s; {co.n_valid} valid, "
-              f"{len(co.pareto)} frontier points, compiles="
-              f"{co.n_compiles}")
-        for p in co.pareto[:12]:
-            print(f"  pes={p['num_pes']:4d} bw={p['noc_bw']:5.1f} "
-                  f"energy={_fmt(p['energy_pj'])} "
-                  f"thr={_fmt(p['throughput'])}")
-        for obj, p in co.best.items():
-            if p:
-                print(f"  best {obj:10s}: pes={p['num_pes']} "
-                      f"bw={p['noc_bw']} EDP={_fmt(p['edp'])}")
+            l2_budget_kb=args.l2_budget_kb, composer=args.composer,
+            budget_policy=args.budget_policy, block=args.block)
+        co = session.run(Query(Workload.of_network(args.model), grid,
+                               co_spec))
+        print()
+        print_network_codse_report(co)
 
 
 if __name__ == "__main__":

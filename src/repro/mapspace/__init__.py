@@ -21,10 +21,10 @@ See ``repro.launch.mapsearch`` for the CLI.
 """
 from .batched import EvalStats, evaluate_points, measure_rate
 from .cache import enable_compilation_cache
-from .codse import (CoDSEResult, JointSweepResult, co_search, hw_grid,
-                    joint_sweep, merged_pareto)
+from .codse import (CoDSEResult, JointSweepResult, co_search,
+                    co_search_impl, hw_grid, joint_sweep, merged_pareto)
 from .search import (OBJECTIVES, PIPELINES, STRATEGIES, SearchResult,
-                     search, static_candidates)
+                     search, search_impl, static_candidates)
 from .space import (ClusterOption, GeneTables, MapSpace, MapSpaceError,
                     TileAxis, build_space, buffer_estimate_kb,
                     buffer_estimates_genes, canonical_signature,
@@ -51,6 +51,6 @@ __all__ = [
     "genes_from_points", "group_template", "hw_grid", "joint_sweep",
     "measure_rate", "merged_pareto", "pad_tile_axes", "point_dataflow",
     "points_from_genes", "prune_by_budget", "prune_genes_by_budget",
-    "sample_genes", "sample_points", "search", "static_candidates",
-    "universal_specs",
+    "sample_genes", "sample_points", "search", "search_impl",
+    "co_search_impl", "static_candidates", "universal_specs",
 ]

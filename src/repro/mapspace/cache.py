@@ -25,7 +25,16 @@ from typing import Any
 from ..core.tensor_analysis import LayerOp
 from .space import MapSpace
 
-CACHE_VERSION = 2
+# Result-cache payload version.  Bumped to 3 for the PR-5 declarative
+# api surface: the key now carries the engine schema version and (via
+# ``extra``) the full Query fingerprint, so stale PR-4-era entries can
+# never be replayed into ``Session.run``.
+CACHE_VERSION = 3
+
+# Version of the engine/query schema behind the declarative front door
+# (``repro.api`` re-exports this as ``SCHEMA_VERSION``).  Bump when query
+# semantics, the Report schema, or engine numerics change incompatibly.
+ENGINE_SCHEMA_VERSION = 1
 
 # Set once per process; repeated calls with the same directory are no-ops.
 _COMPILATION_CACHE_DIR: str | None = None
@@ -42,6 +51,7 @@ def enable_compilation_cache(cache_dir: str) -> bool:
     global _COMPILATION_CACHE_DIR
     if not cache_dir:
         return False
+    cache_dir = os.path.expanduser(cache_dir)
     if _COMPILATION_CACHE_DIR is not None:
         return True
     try:
@@ -70,7 +80,8 @@ def search_key(op: LayerOp, space: MapSpace, num_pes: int, noc_bw: float,
                objective: str, budget: int, strategy: str, seed: int,
                extra: str = "") -> str:
     txt = "|".join([
-        f"v{CACHE_VERSION}", op_fingerprint(op), space.fingerprint(),
+        f"v{CACHE_VERSION}", f"schema{ENGINE_SCHEMA_VERSION}",
+        op_fingerprint(op), space.fingerprint(),
         f"pes={num_pes}", f"bw={noc_bw}", objective, f"budget={budget}",
         strategy, f"seed={seed}", extra])
     return hashlib.sha256(txt.encode()).hexdigest()[:24]

@@ -218,13 +218,28 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
 
 def co_search(op: LayerOp, objective: str = "edp",
               mapping_budget: int = 2000, top_k: int = 4,
-              cfg: DSEConfig | None = None, *, num_pes: int = 256,
-              noc_bw: float = 32.0, seed: int = 0,
-              space: MapSpace | None = None,
-              include_table3: Sequence[str] = (),
-              cache_dir: str | None = None,
-              joint_genes: int = 0, joint_block: int = 8192,
-              search_kwargs: dict[str, Any] | None = None) -> CoDSEResult:
+              cfg: DSEConfig | None = None, **kwargs) -> CoDSEResult:
+    """Joint mapping × hardware co-DSE — the legacy entry point, now a
+    thin wrapper over the declarative session path (``repro.api``);
+    forwards verbatim to :func:`co_search_impl` (bit-equal by
+    construction, see ``tests/test_api.py``)."""
+    from ..api.session import default_session
+    return default_session().run_co_search(
+        op, objective=objective, mapping_budget=mapping_budget,
+        top_k=top_k, cfg=cfg, **kwargs)
+
+
+def co_search_impl(op: LayerOp, objective: str = "edp",
+                   mapping_budget: int = 2000, top_k: int = 4,
+                   cfg: DSEConfig | None = None, *, num_pes: int = 256,
+                   noc_bw: float = 32.0, seed: int = 0,
+                   space: MapSpace | None = None,
+                   include_table3: Sequence[str] = (),
+                   cache_dir: str | None = None,
+                   joint_genes: int = 0, joint_block: int = 8192,
+                   cache_extra: str = "",
+                   search_kwargs: dict[str, Any] | None = None
+                   ) -> CoDSEResult:
     """Joint DSE in one frontier: mapping search at ``(num_pes, noc_bw)``,
     then the hardware grid for each of the ``top_k`` distinct found
     mappings — evaluated through the same universal executable with the
@@ -244,7 +259,8 @@ def co_search(op: LayerOp, objective: str = "edp",
     spatial_reduction = search_kwargs.get("spatial_reduction", True)
     sr = search(op, objective=objective, budget=mapping_budget,
                 space=space, num_pes=num_pes, noc_bw=noc_bw, seed=seed,
-                cache_dir=cache_dir, **search_kwargs)
+                cache_dir=cache_dir, cache_extra=cache_extra,
+                **search_kwargs)
 
     picked: list[tuple[str, tuple]] = []
     seen: set[tuple] = set()

@@ -453,22 +453,37 @@ def _search_genes(op, space, rng, objective, budget, strategy, *, seed,
     return strategy
 
 
-def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
-           space: MapSpace | None = None, num_pes: int = 256,
-           noc_bw: float = 32.0, strategy: str = "auto", seed: int = 0,
-           top_k: int = 8, max_groups: int | None = None,
-           refine_frac: float = 0.3, block: int = 1024,
-           population: int | None = None,
-           l1_budget_kb: float | None = None,
-           l2_budget_kb: float | None = None,
-           cache_dir: str | None = None, engine: str = "universal",
-           pipeline: str = "gene", devices: int | None = None,
-           multicast: bool = True, spatial_reduction: bool = True
-           ) -> SearchResult:
+def search(op: LayerOp, objective: str = "edp", budget: int = 2000,
+           **kwargs) -> SearchResult:
     """Search the mapping space of ``op`` for the best dataflow at a fixed
-    hardware point.  ``budget`` caps evaluated mappings; ``strategy`` is
-    ``auto`` or one of ``exhaustive`` / ``random`` / ``greedy`` /
-    ``genetic``.
+    hardware point — the legacy entry point, now a thin wrapper over the
+    declarative session path (``repro.api``): the shared default session
+    owns process-level caches and query accounting, and forwards verbatim
+    to :func:`search_impl` (bit-equal by construction; see
+    ``tests/test_api.py``).  Accepts exactly :func:`search_impl`'s
+    keywords."""
+    from ..api.session import default_session
+    return default_session().run_search(op, objective=objective,
+                                        budget=budget, **kwargs)
+
+
+def search_impl(op: LayerOp, objective: str = "edp", budget: int = 2000,
+                *, space: MapSpace | None = None, num_pes: int = 256,
+                noc_bw: float = 32.0, strategy: str = "auto",
+                seed: int = 0,
+                top_k: int = 8, max_groups: int | None = None,
+                refine_frac: float = 0.3, block: int = 1024,
+                population: int | None = None,
+                l1_budget_kb: float | None = None,
+                l2_budget_kb: float | None = None,
+                cache_dir: str | None = None, engine: str = "universal",
+                pipeline: str = "gene", devices: int | None = None,
+                multicast: bool = True, spatial_reduction: bool = True,
+                cache_extra: str = "") -> SearchResult:
+    """The per-layer mapping-search engine behind :func:`search` and
+    ``repro.api.Session``.  ``budget`` caps evaluated mappings;
+    ``strategy`` is ``auto`` or one of ``exhaustive`` / ``random`` /
+    ``greedy`` / ``genetic``.
 
     ``pipeline="gene"`` (default) runs the device-resident gene-matrix
     pipeline — vectorized host side, fused on-device reduction, chunks
@@ -483,7 +498,8 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
     exploration compile-free, so nothing is clamped anymore (the value
     still participates in the result-cache key for reproducibility).
     ``l1_budget_kb``/``l2_budget_kb`` drop over-budget tile sets before
-    evaluation."""
+    evaluation.  ``cache_extra`` is an opaque component of the disk-cache
+    key (the session path passes the full ``Query`` fingerprint)."""
     if objective not in OBJECTIVES:
         raise ValueError(f"objective must be one of {sorted(OBJECTIVES)}")
     if pipeline not in PIPELINES:
@@ -502,7 +518,7 @@ def search(op: LayerOp, objective: str = "edp", budget: int = 2000, *,
         extra=f"mc={multicast},sr={spatial_reduction},mg={max_groups},"
               f"rf={refine_frac},blk={block},tk={top_k},"
               f"pop={population},l1={l1_budget_kb},l2={l2_budget_kb},"
-              f"eng={engine},pipe={pipeline}")
+              f"eng={engine},pipe={pipeline},q={cache_extra}")
     hit = _cache.load(cache_dir, key)
     if hit is not None:
         return SearchResult(

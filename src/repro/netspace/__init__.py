@@ -33,15 +33,18 @@ from .composer import (CandStat, NetCostModel, NetworkSchedule,
                        compose_dp, compose_genetic, edge_terms,
                        evaluate_schedule, node_cost)
 from .evaluator import COLS, NetEval, evaluate_candidates, evaluate_rows
-from .search import (CoNetResult, NetSearchResult, best_uniform,
-                     co_search_network, search_network, uniform_baseline)
+from .search import (BUDGET_POLICIES, CoNetResult, NetSearchResult,
+                     best_uniform, co_search_network,
+                     co_search_network_impl, search_network,
+                     search_network_impl, uniform_baseline)
 from .space import (NetClass, NetSpace, build_netspace, halo_fractions)
 
 __all__ = [
-    "COLS", "CandStat", "CoNetResult", "NetClass", "NetCostModel",
-    "NetEval", "NetSearchResult", "NetworkSchedule", "best_uniform",
-    "build_netspace", "co_search_network", "compose_dp",
-    "compose_genetic", "edge_terms", "evaluate_candidates",
-    "evaluate_rows", "evaluate_schedule", "halo_fractions", "node_cost",
-    "search_network", "uniform_baseline",
+    "BUDGET_POLICIES", "COLS", "CandStat", "CoNetResult", "NetClass",
+    "NetCostModel", "NetEval", "NetSearchResult", "NetworkSchedule",
+    "best_uniform", "build_netspace", "co_search_network",
+    "co_search_network_impl", "compose_dp", "compose_genetic",
+    "edge_terms", "evaluate_candidates", "evaluate_rows",
+    "evaluate_schedule", "halo_fractions", "node_cost", "search_network",
+    "search_network_impl", "uniform_baseline",
 ]

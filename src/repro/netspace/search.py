@@ -34,7 +34,8 @@ from ..core.performance import HWConfig
 from ..core.tensor_analysis import LayerOp
 from ..mapspace.codse import hw_grid
 from ..mapspace.search import OBJECTIVES, static_candidates
-from ..mapspace.space import point_dataflow, prune_genes_by_budget
+from ..mapspace.space import (enumerate_genes, flat_index, point_dataflow,
+                              prune_genes_by_budget, sample_genes)
 from ..mapspace.universal import pareto_front
 from .composer import (CandStat, NetCostModel, NetworkSchedule,
                        compose_dp, compose_genetic, evaluate_schedule)
@@ -42,6 +43,7 @@ from .evaluator import evaluate_candidates
 from .space import NetSpace, build_netspace, halo_fractions
 
 COMPOSERS = ("dp", "genetic", "auto")
+BUDGET_POLICIES = ("uniform", "adaptive")
 
 
 @dataclasses.dataclass
@@ -65,6 +67,9 @@ class NetSearchResult:
     n_transitions: int                 # composer-explored extensions
     elapsed_s: float
     n_devices: int
+    budget_policy: str = "uniform"
+    refined: tuple[int, ...] = ()      # unique ids the adaptive policy
+    #                                    spent extra budget on
 
     @property
     def network_edp(self) -> float:
@@ -118,21 +123,81 @@ def _out_vols(layers: Sequence[LayerOp]) -> list[float]:
     return [float(op.output.volume(op.dims)) for op in layers]
 
 
-def search_network(model, objective: str = "edp", budget: int = 512, *,
-                   num_pes: int = 256, noc_bw: float = 32.0,
-                   seed: int = 0, strategy: str = "auto",
-                   frontier_k: int = 8, fuse: bool = True,
-                   reconfig: bool = True,
-                   l2_budget_kb: float | None = None,
-                   l1_prune_kb: float | None = None,
-                   l2_prune_kb: float | None = None,
-                   hw: HWConfig | None = None, composer: str = "auto",
-                   devices: int | None = None, block: int = 1024,
-                   multicast: bool = True, spatial_reduction: bool = True,
-                   netspace: NetSpace | None = None,
-                   max_states: int = 4096,
-                   build_kwargs: dict[str, Any] | None = None
-                   ) -> NetSearchResult:
+def search_network(model, objective: str = "edp", budget: int = 512,
+                   **kwargs) -> NetSearchResult:
+    """Whole-network schedule search — the legacy entry point, now a
+    thin wrapper over the declarative session path (``repro.api``);
+    forwards verbatim to :func:`search_network_impl` (bit-equal by
+    construction, see ``tests/test_api.py``)."""
+    from ..api.session import default_session
+    return default_session().run_search_network(
+        model, objective=objective, budget=budget, **kwargs)
+
+
+def _adaptive_refine(ns: NetSpace, cand, vals, cols, strats_u, *,
+                     budget: int, cheap: int, seed: int,
+                     l1_prune_kb, l2_prune_kb, adapt_cover: float
+                     ) -> tuple[list[np.ndarray], list[int]]:
+    """Pick the unique layers that dominate the cheap first pass's
+    network cost and draw their remaining candidate budget.  Returns
+    ``(extra_candidate_matrices, refined_unique_ids)`` — extras are
+    empty for non-refined layers."""
+    reps_n = np.bincount(np.asarray(ns.index), minlength=len(ns.unique))
+    contrib = np.empty(len(ns.unique))
+    for u in range(len(ns.unique)):
+        best = float(np.min(vals[u])) if len(vals[u]) else np.inf
+        contrib[u] = reps_n[u] * best
+    inf_mask = ~np.isfinite(contrib)
+    fin = np.where(inf_mask, 0.0, contrib)
+    total = float(fin.sum())
+    # infeasible-so-far layers always refine; finite ones by descending
+    # network-cost contribution until `adapt_cover` of the total is in
+    key = np.where(inf_mask, np.finfo(np.float64).max, fin)
+    refined: list[int] = []
+    cum = 0.0
+    for u in np.argsort(-key, kind="stable"):
+        if refined and not inf_mask[u] and total > 0 \
+                and cum >= adapt_cover * total:
+            break
+        refined.append(int(u))
+        cum += fin[u]
+    extra = [np.empty((0, len(ns.spaces[u].gene_ranges())), np.int64)
+             for u in range(len(ns.unique))]
+    for u in refined:
+        space = ns.spaces[u]
+        if strats_u[u].startswith("exhaustive"):
+            g = enumerate_genes(space, cheap, min(space.size, budget))
+        else:
+            g = sample_genes(space, np.random.default_rng([seed, u + 1]),
+                             budget - cheap,
+                             exclude_flat=flat_index(space, cand[u]))
+        if g.shape[0]:
+            g = prune_genes_by_budget(ns.unique[u], space, g,
+                                      l1_kb=l1_prune_kb,
+                                      l2_kb=l2_prune_kb)
+        extra[u] = g
+    return extra, refined
+
+
+def search_network_impl(model, objective: str = "edp", budget: int = 512,
+                        *, num_pes: int = 256, noc_bw: float = 32.0,
+                        seed: int = 0, strategy: str = "auto",
+                        frontier_k: int = 8, fuse: bool = True,
+                        reconfig: bool = True,
+                        l2_budget_kb: float | None = None,
+                        l1_prune_kb: float | None = None,
+                        l2_prune_kb: float | None = None,
+                        hw: HWConfig | None = None,
+                        composer: str = "auto",
+                        devices: int | None = None, block: int = 1024,
+                        multicast: bool = True,
+                        spatial_reduction: bool = True,
+                        netspace: NetSpace | None = None,
+                        max_states: int = 4096,
+                        budget_policy: str = "uniform",
+                        adapt_cover: float = 0.7,
+                        build_kwargs: dict[str, Any] | None = None
+                        ) -> NetSearchResult:
     """Search a whole-network schedule: per-layer mapping selection plus
     DeFiNES-style fused-stack segmentation.
 
@@ -148,11 +213,22 @@ def search_network(model, objective: str = "edp", budget: int = 512, *,
     the composed schedule's per-layer choices then provably coincide
     with independent per-layer searches at the same strategy/seed.  A caller-supplied ``hw`` is the reference design outright:
     its ``num_pes``/``noc_bw`` take precedence over the keyword defaults,
-    and the reconfiguration/DRAM cost-model fields live on it."""
+    and the reconfiguration/DRAM cost-model fields live on it.
+
+    ``budget_policy="adaptive"`` spends a cheap uniform first pass
+    (``budget // 4`` per unique shape), then steers the remaining budget
+    toward the layers that dominate network cost: unique shapes are
+    refined, by descending (multiplicity × best-value) contribution,
+    until ``adapt_cover`` of the first-pass total is covered.  The
+    refinement pass rides the already-warm family executables — zero
+    extra compiles."""
     t0 = time.perf_counter()
     eval_obj = _eval_objective(objective)
     if composer not in COMPOSERS:
         raise ValueError(f"composer must be one of {COMPOSERS}")
+    if budget_policy not in BUDGET_POLICIES:
+        raise ValueError(f"budget_policy must be one of "
+                         f"{BUDGET_POLICIES}")
     layers = _layers_of(model)
     ns = netspace or build_netspace(layers, **(build_kwargs or {}))
     if hw is None:
@@ -161,25 +237,44 @@ def search_network(model, objective: str = "edp", budget: int = 512, *,
     # point wins over the num_pes/noc_bw keyword defaults
     num_pes, noc_bw = int(hw.num_pes), float(hw.noc_bw)
 
+    cheap = budget if budget_policy == "uniform" \
+        else max(16, budget // 4)
     cand: list[np.ndarray] = []
-    strats: dict[str, None] = {}
+    strats_u: list[str] = []
     for u, op in enumerate(ns.unique):
-        g, s = static_candidates(ns.spaces[u], strategy, budget, seed)
-        strats[s] = None                 # auto may resolve per layer
+        g, s = static_candidates(ns.spaces[u], strategy, cheap, seed)
+        strats_u.append(s)               # auto may resolve per layer
         g = prune_genes_by_budget(op, ns.spaces[u], g,
                                   l1_kb=l1_prune_kb, l2_kb=l2_prune_kb)
         if not g.shape[0]:
             raise RuntimeError(f"{op.name}: budget pruning dropped every "
                                f"candidate")
         cand.append(g)
-    strat = "+".join(strats)
+    strat = "+".join(dict.fromkeys(strats_u))
 
-    ev = evaluate_candidates(
-        ns, cand, objective=eval_obj, num_pes=num_pes, noc_bw=noc_bw,
-        block=block, n_devices=devices, multicast=multicast,
-        spatial_reduction=spatial_reduction)
+    ev_kw = dict(objective=eval_obj, num_pes=num_pes, noc_bw=noc_bw,
+                 block=block, n_devices=devices, multicast=multicast,
+                 spatial_reduction=spatial_reduction)
+    ev = evaluate_candidates(ns, cand, **ev_kw)
+    vals = list(ev.vals)
+    cols = list(ev.cols)
 
-    fronts_u = [_frontier(ns, u, cand[u], ev.vals[u], ev.cols[u],
+    refined: list[int] = []
+    if budget_policy == "adaptive" and cheap < budget:
+        extra, refined = _adaptive_refine(
+            ns, cand, vals, cols, strats_u, budget=budget, cheap=cheap,
+            seed=seed, l1_prune_kb=l1_prune_kb, l2_prune_kb=l2_prune_kb,
+            adapt_cover=adapt_cover)
+        if any(g.shape[0] for g in extra):
+            ev2 = evaluate_candidates(ns, extra, **ev_kw)
+            ev.run.merge(ev2.run)
+            for u in refined:
+                if extra[u].shape[0]:
+                    cand[u] = np.concatenate([cand[u], extra[u]])
+                    vals[u] = np.concatenate([vals[u], ev2.vals[u]])
+                    cols[u] = np.concatenate([cols[u], ev2.cols[u]])
+
+    fronts_u = [_frontier(ns, u, cand[u], vals[u], cols[u],
                           frontier_k) for u in range(len(ns.unique))]
     frontiers = [fronts_u[ns.index[i]] for i in range(ns.n_layers)]
 
@@ -211,7 +306,8 @@ def search_network(model, objective: str = "edp", budget: int = 512, *,
         compile_s=ev.run.compile_s, eval_s=ev.run.eval_s,
         encode_s=ev.run.encode_s, compose_s=compose_s,
         n_transitions=n_trans, elapsed_s=time.perf_counter() - t0,
-        n_devices=ev.run.n_devices)
+        n_devices=ev.run.n_devices, budget_policy=budget_policy,
+        refined=tuple(refined))
 
 
 # ----------------------------------------------------------------------
@@ -275,11 +371,23 @@ class CoNetResult:
 
 
 def co_search_network(model, cfg: DSEConfig | None = None,
-                      objective: str = "edp", budget: int = 512, *,
-                      num_pes: int = 256, noc_bw: float = 32.0,
-                      seed: int = 0, frontier_k: int = 4,
-                      refine_k: int = 4,
-                      **search_kwargs) -> CoNetResult:
+                      objective: str = "edp", budget: int = 512,
+                      **kwargs) -> CoNetResult:
+    """Network-level joint co-DSE — the legacy entry point, now a thin
+    wrapper over the declarative session path (``repro.api``); forwards
+    verbatim to :func:`co_search_network_impl` (bit-equal by
+    construction, see ``tests/test_api.py``)."""
+    from ..api.session import default_session
+    return default_session().run_co_search_network(
+        model, cfg=cfg, objective=objective, budget=budget, **kwargs)
+
+
+def co_search_network_impl(model, cfg: DSEConfig | None = None,
+                           objective: str = "edp", budget: int = 512, *,
+                           num_pes: int = 256, noc_bw: float = 32.0,
+                           seed: int = 0, frontier_k: int = 4,
+                           refine_k: int = 4,
+                           **search_kwargs) -> CoNetResult:
     """Network-level joint mapping × hardware sweep: the reference
     ``search_network`` frontiers crossed with the full (PEs × bw) grid —
     hardware as per-row operands of the already-compiled shape-as-operand
@@ -293,9 +401,9 @@ def co_search_network(model, cfg: DSEConfig | None = None,
     t0 = time.perf_counter()
     cfg = cfg or DSEConfig()
     eval_obj = _eval_objective(objective)
-    ref = search_network(model, objective=objective, budget=budget,
-                         num_pes=num_pes, noc_bw=noc_bw, seed=seed,
-                         frontier_k=frontier_k, **search_kwargs)
+    ref = search_network_impl(model, objective=objective, budget=budget,
+                              num_pes=num_pes, noc_bw=noc_bw, seed=seed,
+                              frontier_k=frontier_k, **search_kwargs)
     ns = ref.netspace
     pes, bws = hw_grid(cfg)
     h = len(pes)

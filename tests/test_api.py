@@ -1,0 +1,372 @@
+"""Tests for the declarative front door (``repro.api``).
+
+Load-bearing properties:
+
+  * the legacy entry points (``mapspace.search``/``co_search``,
+    ``netspace.search_network``) are thin wrappers over the session
+    path and stay BIT-EQUAL to `Session.run` on the equivalent query;
+  * ``Session.run_many`` answers a coalesced heterogeneous batch with at
+    most one executable per unique (op-class, level-count) family, and
+    its results are identical to per-query passes through the same
+    family spaces — at any device count;
+  * ``Report`` JSON round-trips exactly; query fingerprints feed the
+    disk-cache key, and stale (old-version) cache entries are never
+    replayed;
+  * the adaptive per-layer budget policy refines the dominant layers
+    deterministically with zero extra compiles.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import tensor_analysis as ta
+from repro.api import (Hardware, Query, Report, SearchSpec, Session,
+                       Workload)
+from repro.mapspace import cache as ms_cache
+from repro.mapspace import co_search, search
+from repro.mapspace.space import build_space
+from repro.mapspace.universal import compile_count
+from repro.core.dse import DSEConfig
+from repro.netspace import search_network
+
+PES, BW = 48, 12.0
+BLOCK = 64
+
+
+@pytest.fixture(scope="module")
+def conv():
+    return ta.conv2d("api-t-c1", k=8, c=4, y=12, x=12, r=3, s=3)
+
+
+@pytest.fixture(scope="module")
+def chain():
+    return [ta.conv2d("api-t-n1", k=8, c=4, y=12, x=12, r=3, s=3),
+            ta.conv2d("api-t-n2", k=12, c=8, y=14, x=14, r=3, s=3),
+            ta.fc("api-t-f1", k=16, c=32)]
+
+
+@pytest.fixture(scope="module")
+def batch_queries():
+    ops = [ta.conv2d("api-b-c1", k=8, c=4, y=12, x=12, r=3, s=3),
+           ta.conv2d("api-b-c2", k=12, c=8, y=10, x=10, r=3, s=3),
+           ta.conv2d("api-b-c3", k=6, c=6, y=8, x=8, r=3, s=3),
+           ta.fc("api-b-f1", k=16, c=32),
+           ta.gemm("api-b-g1", m=8, n=24, k=16),
+           ta.conv2d("api-b-c4", k=4, c=8, y=14, x=14, r=3, s=3)]
+    objectives = ["edp", "energy", "runtime", "throughput", "edp",
+                  "energy"]
+    return [Query(Workload.of_layer(op),
+                  Hardware(num_pes=32 + 16 * (i % 2),
+                           noc_bw=8.0 + 4 * (i % 3)),
+                  SearchSpec(objective=objectives[i], budget=50,
+                             block=BLOCK, top_k=3))
+            for i, op in enumerate(ops)]
+
+
+@pytest.fixture(scope="module")
+def session():
+    return Session()
+
+
+@pytest.fixture(scope="module")
+def batch_reports(session, batch_queries):
+    """One coalesced run shared by the batching tests."""
+    c0 = compile_count()
+    reports = session.run_many(batch_queries)
+    return reports, dict(session.last_batch), compile_count() - c0
+
+
+# ----------------------------------------------------------------------
+# Spec machinery
+# ----------------------------------------------------------------------
+
+def test_query_kinds(conv, chain):
+    fixed, grid = Hardware(), Hardware(pe_range=(32, 64))
+    assert Query(Workload.of_layer(conv), fixed).kind == "layer"
+    assert Query(Workload.of_layer(conv), grid).kind == "layer_codse"
+    assert Query(Workload.of_layers(chain), fixed).kind == "network"
+    assert Query(Workload.of_network("vgg16"), grid).kind == \
+        "network_codse"
+    assert Query(Workload(model="vgg16", layer="conv13"),
+                 fixed).kind == "layer"
+
+
+def test_query_json_and_fingerprint(conv):
+    d = {"tag": "t", "workload": {"op": {"type": "conv2d", "name": "j1",
+                                         "k": 8, "c": 4, "y": 12,
+                                         "x": 12, "r": 3, "s": 3}},
+         "hardware": {"num_pes": 64, "pe_range": [32, 64]},
+         "search": {"objective": "energy", "budget": 77}}
+    q = Query.from_json(d)
+    assert q.kind == "layer_codse"
+    assert q.hardware.pe_range == (32, 64)
+    assert q.search.budget == 77
+    # fingerprint is stable and sensitive to every component
+    assert q.fingerprint() == Query.from_json(d).fingerprint()
+    d2 = json.loads(json.dumps(d))
+    d2["search"]["budget"] = 78
+    assert Query.from_json(d2).fingerprint() != q.fingerprint()
+    # invalid specs are rejected loudly
+    with pytest.raises(ValueError):
+        Query.from_json({"workload": {"op": {"type": "nope"}}})
+    with pytest.raises(ValueError):
+        Query.from_json({"workload": {"model": "vgg16"},
+                         "search": {"not_a_knob": 1}})
+
+
+def test_workload_validation(conv):
+    with pytest.raises(ValueError):
+        Workload()
+    with pytest.raises(ValueError):
+        Workload(model="vgg16", ops=(conv,))
+    with pytest.raises(ValueError):
+        Workload.of_network("not-a-model")
+
+
+# ----------------------------------------------------------------------
+# Old-API vs Session bit-equal parity (the wrapper contract)
+# ----------------------------------------------------------------------
+
+def test_search_parity(session, conv):
+    q = Query(Workload.of_layer(conv), Hardware(num_pes=PES, noc_bw=BW),
+              SearchSpec(objective="edp", budget=60, block=BLOCK,
+                         top_k=4))
+    rep = session.run(q)
+    r = search(conv, objective="edp", budget=60, num_pes=PES, noc_bw=BW,
+               block=BLOCK, top_k=4)
+    assert list(r.best_point) == rep.best["point"]
+    assert r.best_value == rep.best["value"]
+    assert [list(e["point"]) for e in r.top_k] == \
+        [e["point"] for e in rep.top_k]
+    assert [e["value"] for e in r.top_k] == \
+        [e["value"] for e in rep.top_k]
+    assert r.best_stats == rep.best["stats"]
+    assert rep.kind == "layer" and rep.raw.n_evaluated == r.n_evaluated
+
+
+def test_co_search_parity(session, conv):
+    cfg = DSEConfig(pe_range=(16, 32, 64), bw_range=(4.0, 8.0, 16.0))
+    q = Query(Workload.of_layer(conv),
+              Hardware(num_pes=PES, noc_bw=BW, pe_range=(16, 32, 64),
+                       bw_range=(4.0, 8.0, 16.0)),
+              SearchSpec(objective="edp", budget=60, block=BLOCK,
+                         top_k=4, codse_top_k=2))
+    rep = session.run(q)
+    co = co_search(conv, objective="edp", mapping_budget=60, top_k=2,
+                   cfg=cfg, num_pes=PES, noc_bw=BW, seed=0,
+                   search_kwargs=dict(strategy="auto", top_k=4,
+                                      population=None, block=BLOCK,
+                                      multicast=True,
+                                      spatial_reduction=True,
+                                      l1_budget_kb=None,
+                                      l2_budget_kb=None, devices=None))
+    assert rep.kind == "layer_codse"
+    assert rep.pareto == json.loads(json.dumps(
+        Report.from_codse(co).pareto))
+    assert rep.best["per_objective"] == Report.from_codse(co).best[
+        "per_objective"]
+    assert rep.n_evaluated == co.n_evaluated
+
+
+def test_search_network_parity(session, chain):
+    hw = Hardware(num_pes=PES, noc_bw=BW, reconfig_latency=100.0)
+    q = Query(Workload.of_layers(chain), hw,
+              SearchSpec(objective="edp", budget=80, block=BLOCK,
+                         frontier_k=3, budget_policy="uniform"))
+    rep = session.run(q)
+    r = search_network(chain, objective="edp", budget=80,
+                       frontier_k=3, block=BLOCK, hw=hw.hwconfig(),
+                       build_kwargs={"cluster": True})
+    assert rep.kind == "network"
+    assert rep.best["cost"] == r.schedule.cost
+    assert rep.best["edp"] == r.schedule.network_edp
+    assert tuple(tuple(g) for g in
+                 (pl["gene"] for pl in rep.best["per_layer"])) == \
+        tuple(tuple(pl["gene"]) for pl in r.schedule.per_layer)
+    assert rep.n_evaluated == r.n_evaluated
+
+
+# ----------------------------------------------------------------------
+# run_many: coalescing, determinism, compile budget
+# ----------------------------------------------------------------------
+
+def test_run_many_compile_budget(batch_reports, batch_queries):
+    reports, batch, compiles = batch_reports
+    assert len(reports) == len(batch_queries)
+    assert batch["n_coalesced"] == len(batch_queries)
+    # at most ONE executable per unique (op-class, level-count) family
+    assert compiles <= batch["n_families"]
+    assert batch["n_compiles"] <= batch["compile_budget"]
+    for q, rep in zip(batch_queries, reports):
+        assert rep.kind == "layer" and rep.coalesced
+        assert rep.objective == q.search.objective
+        assert rep.n_evaluated > 0
+        assert len(rep.top_k) <= q.search.top_k
+        assert np.isfinite(rep.best["value"])
+        # winning genes stay decodable: raw ships the family space
+        assert rep.raw.best_dataflow.directives
+        # top-k is sorted on the query's own objective
+        vals = [e["value"] for e in rep.top_k]
+        if q.search.objective == "throughput":
+            assert vals == sorted(vals, reverse=True)
+        else:
+            assert vals == sorted(vals)
+
+
+def test_run_many_coalesced_vs_sequential(session, batch_queries,
+                                          batch_reports):
+    reports, _, _ = batch_reports
+    seq = session.run_many(batch_queries, coalesce=False)
+    assert session.last_batch["n_compiles"] == 0   # families stay warm
+    for a, b in zip(reports, seq):
+        assert a.results_json() == b.results_json()
+        assert a.coalesced and not b.coalesced
+
+
+def test_run_many_device_determinism(batch_queries, batch_reports):
+    """With XLA_FLAGS=--xla_force_host_platform_device_count=4 (the CI
+    smoke job) this compares a real multi-device pmap batch against the
+    1-device pass."""
+    reports, _, _ = batch_reports
+    s_one = Session(devices=1)
+    s_many = Session(devices=jax.local_device_count())
+    one = s_one.run_many(batch_queries)
+    many = s_many.run_many(batch_queries)
+    for a, b, c in zip(one, many, reports):
+        assert a.results_json() == b.results_json()
+        # and both match the module-fixture session's answers
+        assert a.results_json() == c.results_json()
+
+
+def test_submit_flush(session, batch_queries):
+    pending = [session.submit(q) for q in batch_queries[:3]]
+    assert not any(p.done() for p in pending)
+    first = pending[0].result()          # triggers the flush
+    assert all(p.done() for p in pending)
+    assert first.results_json() == pending[0].result().results_json()
+    assert session.last_batch["n_queries"] == 3
+
+
+def test_mixed_batch_routes_non_coalescible(session, conv, chain):
+    qs = [Query(Workload.of_layer(conv),
+                Hardware(num_pes=PES, noc_bw=BW),
+                SearchSpec(budget=40, block=BLOCK)),
+          Query(Workload.of_layers(chain),
+                Hardware(num_pes=PES, noc_bw=BW),
+                SearchSpec(budget=40, block=BLOCK, frontier_k=2,
+                           budget_policy="uniform"))]
+    reports = session.run_many(qs)
+    assert [r.kind for r in reports] == ["layer", "network"]
+    assert reports[0].coalesced and not reports[1].coalesced
+    assert session.last_batch["n_coalesced"] == 1
+
+
+# ----------------------------------------------------------------------
+# Report JSON round trip
+# ----------------------------------------------------------------------
+
+def test_report_roundtrip(session, conv, batch_reports):
+    reports, _, _ = batch_reports
+    q = Query(Workload.of_layer(conv), Hardware(num_pes=PES, noc_bw=BW),
+              SearchSpec(budget=40, block=BLOCK), tag="rt")
+    for rep in [session.run(q)] + list(reports):
+        d = rep.to_json()
+        rt = Report.from_json(json.loads(json.dumps(d)))
+        assert rt.to_json() == d
+        assert rt.best == rep.best and rt.kind == rep.kind
+    bench = Report.bench("x", {"n_compiles": 3, "custom_key": 1.5})
+    d = bench.to_json()
+    assert d["n_compiles"] == 3 and d["custom_key"] == 1.5
+    assert Report.from_json(d).to_json() == d
+    with pytest.raises(ValueError):
+        Report(kind="bench", extras={"best": {}}).to_json()
+
+
+# ----------------------------------------------------------------------
+# Disk-cache keying: schema version + query hash
+# ----------------------------------------------------------------------
+
+def test_cache_version_invalidates_stale_entries(tmp_path, conv):
+    space = build_space(conv, dims=("K", "C"), cluster=False)
+    key = ms_cache.search_key(conv, space, PES, BW, "edp", 50, "auto", 0)
+    # a stale PR-4-era payload (version 2) under the same key must NOT
+    # be replayed
+    ms_cache.store(str(tmp_path), key, {"best_value": 1.0})
+    import os
+    path = os.path.join(str(tmp_path), f"mapsearch-{key}.json")
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["version"] == ms_cache.CACHE_VERSION
+    payload["version"] = 2
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    assert ms_cache.load(str(tmp_path), key) is None
+    # current-version entries load fine
+    ms_cache.store(str(tmp_path), key, {"best_value": 2.0})
+    assert ms_cache.load(str(tmp_path), key)["best_value"] == 2.0
+
+
+def test_cache_key_carries_schema_and_query_hash(conv):
+    space = build_space(conv, dims=("K", "C"), cluster=False)
+    base = ms_cache.search_key(conv, space, PES, BW, "edp", 50, "auto",
+                               0, extra="q=aaa")
+    assert ms_cache.search_key(conv, space, PES, BW, "edp", 50, "auto",
+                               0, extra="q=bbb") != base
+    # the session feeds the query fingerprint through cache_extra: a
+    # result cached under one query never answers a different one
+    import dataclasses
+    q1 = Query(Workload.of_layer(conv), Hardware(num_pes=PES),
+               SearchSpec(budget=50))
+    q2 = dataclasses.replace(q1, tag="other")
+    assert q1.fingerprint() != q2.fingerprint()
+
+
+def test_session_cache_hit_via_query_fingerprint(tmp_path, conv):
+    s = Session(cache_dir=str(tmp_path))
+    q = Query(Workload.of_layer(conv), Hardware(num_pes=PES, noc_bw=BW),
+              SearchSpec(budget=40, block=BLOCK))
+    a = s.run(q)
+    assert not a.extras["cached"]
+    b = s.run(q)
+    assert b.extras["cached"]
+    assert a.best == b.best and a.top_k == b.top_k
+    # a different query (new fingerprint) misses
+    q2 = Query(Workload.of_layer(conv), Hardware(num_pes=PES, noc_bw=BW),
+               SearchSpec(budget=40, block=BLOCK), tag="different")
+    assert not s.run(q2).extras["cached"]
+
+
+# ----------------------------------------------------------------------
+# Adaptive per-layer budgets
+# ----------------------------------------------------------------------
+
+def test_adaptive_budget_policy(session, chain):
+    hw = Hardware(num_pes=PES, noc_bw=BW)
+    mk = lambda policy, budget: Query(
+        Workload.of_layers(chain), hw,
+        SearchSpec(objective="edp", budget=budget, block=BLOCK,
+                   frontier_k=3, budget_policy=policy))
+    uni = session.run(mk("uniform", 120))
+    c0 = compile_count()
+    ada = session.run(mk("adaptive", 120))
+    # refinement rides the warm family executables: zero extra compiles
+    assert compile_count() == c0
+    assert ada.extras["budget_policy"] == "adaptive"
+    assert ada.extras["refined"], "adaptive refined no layer"
+    # adaptive spends less than uniform-at-full-budget but more than the
+    # cheap first pass alone
+    n_unique = ada.extras["n_unique"]
+    cheap = max(16, 120 // 4)
+    assert ada.n_evaluated <= uni.n_evaluated
+    assert ada.n_evaluated > cheap * n_unique
+    # deterministic
+    ada2 = session.run(mk("adaptive", 120))
+    assert ada.results_json() == ada2.results_json()
+    # refined layers actually received extra candidates: the refined
+    # layer's frontier can only improve on the cheap pass
+    cheap_only = session.run(mk("uniform", cheap))
+    assert ada.best["cost"] <= cheap_only.best["cost"] * (1 + 1e-9)
+    with pytest.raises(ValueError):
+        session.run(mk("not-a-policy", 120))
