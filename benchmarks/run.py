@@ -46,9 +46,17 @@ def _write_bench(name: str, payload: dict) -> None:
     """Emit a BENCH_<name>.json perf artifact through the unified
     ``repro.api.Report`` schema — under ``benchmarks/out`` (CI artifact)
     AND at the repo root (perf trajectory tracker).  Payload keys stay at
-    top level, so historical readers keep working."""
+    top level, so historical readers keep working.
+
+    Every artifact carries the process-wide ``repro.obs`` metrics
+    snapshot (compiles per family, cache hits, chunk occupancy, ...) and
+    the environment provenance block ``Report.bench`` injects — perf
+    numbers ship with the counters that explain them."""
     import json
+    from repro import obs
     from repro.api import Report
+    payload = dict(payload)
+    payload.setdefault("metrics", obs.metrics().snapshot())
     doc = Report.bench(name, payload).to_json()
     os.makedirs(OUT, exist_ok=True)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -16,7 +16,8 @@ python -m pytest -x -q \
     tests/test_universal.py \
     tests/test_genes.py \
     tests/test_netspace.py \
-    tests/test_api.py
+    tests/test_api.py \
+    tests/test_obs.py
 
 echo "== 4-host-device sharded smoke =="
 # The gene pipeline stripes chunks over all local devices; forcing four
@@ -37,10 +38,14 @@ echo "== declarative batch front door (--file) smoke =="
 # Serving-style mixed batch through repro.launch.query: 4 coalescible
 # layer queries (conv + GEMM classes, heterogeneous objectives AND fixed
 # hardware points), one adaptive-budget network query, one hardware-grid
-# co-DSE query.  The coalesced layer queries must stay within the
-# (op-class, level-count) family compile budget.
+# co-DSE query.  Runs with --trace + --metrics, so the compile and
+# cache budgets below are asserted from the STRUCTURED obs snapshot
+# embedded in the --out payload (not grepped from stdout), and the
+# Chrome trace_event timeline is validated and uploaded as a CI
+# artifact.
 python -m repro.launch.query --file examples/queries.json \
     --out benchmarks/out/api_batch_smoke.json \
+    --trace benchmarks/out/api_batch_trace.json --metrics \
     --cache-dir '' --jax-cache-dir ''
 python - <<'EOF'
 import json
@@ -56,7 +61,41 @@ assert b["n_compiles"] <= b["compile_budget"], b
 kinds = [r["kind"] for r in d["reports"]]
 assert kinds.count("layer") == 4, kinds
 assert "network" in kinds and "layer_codse" in kinds, kinds
-assert all(r["schema_version"] == 1 for r in d["reports"])
+assert all(r["schema_version"] == 2 for r in d["reports"])
+
+# --- obs metrics snapshot: the budget asserts read ONE structured
+# payload now ------------------------------------------------------
+m = d["metrics"]
+c = m["counters"]
+assert m["schema_version"] == 1, m["schema_version"]
+fam = {k: v for k, v in c.items()
+       if k.startswith("universal.compiles_by_family[")}
+# single-writer parity: the process total == the per-family sum
+assert c["universal.compiles"] == sum(fam.values()), (c, fam)
+# the 4 coalesced families (conv + gemm class reps x 1/2 levels)
+# compiled EXACTLY once each — the coalescing headline, asserted
+# per family instead of as one opaque total
+for f in ("q-conv1:L1", "q-conv1:L2", "q-gemm1:L1", "q-gemm1:L2"):
+    k = f"universal.compiles_by_family[family={f}]"
+    assert fam.get(k) == 1, (k, fam)
+assert c["session.queries"] == 6, c
+assert c["session.queries_by_kind[kind=layer_coalesced]"] == 4, c
+# environment provenance rides with every payload
+assert d["environment"]["backend"], d.get("environment")
+
+# --- the trace renders the whole batch as a timeline ---------------
+t = json.load(open("benchmarks/out/api_batch_trace.json"))
+evs = t["traceEvents"]
+assert evs and t["displayTimeUnit"] == "ms", "empty/invalid trace"
+names = {e["name"] for e in evs}
+for want in ("run_many", "coalesce", "encode", "compile",
+             "device-pass", "topk-merge", "compose", "query"):
+    assert want in names, (want, sorted(names))
+n_compile_spans = sum(e["name"] == "compile" for e in evs)
+assert n_compile_spans == b["n_compiles"], \
+    (n_compile_spans, b["n_compiles"],
+     "one compile span per actual XLA compile")
+print(f"trace OK: {len(evs)} events, {n_compile_spans} compile spans")
 EOF
 
 echo "== benchmarks --quick =="
@@ -83,6 +122,14 @@ assert d["universal_compiles_process"] <= d["compile_budget"], \
      "compile count must stay O(1) per (layer, level-count), not O(groups)")
 # the gene pipeline must beat the legacy tuple-point path end to end
 assert d["e2e_speedup_vs_legacy"] >= 1.0, d["e2e_speedup_vs_legacy"]
+# every BENCH artifact ships the obs metrics snapshot + environment
+# provenance (schema_version 2)
+assert d["schema_version"] == 2, d["schema_version"]
+assert d["environment"]["backend"], d.get("environment")
+c = d["metrics"]["counters"]
+fam = {k: v for k, v in c.items()
+       if k.startswith("universal.compiles_by_family[")}
+assert c["universal.compiles"] == sum(fam.values()), (c, fam)
 EOF
 
 echo "== BENCH_netspace smoke artifact =="
@@ -100,6 +147,8 @@ assert d["universal_compiles_process"] <= d["compile_budget"], \
 # the searched schedule's network EDP must beat the best single uniform
 # Table-3 dataflow applied network-wide
 assert d["edp_win_vs_best_uniform"] >= 1.0, d["edp_win_vs_best_uniform"]
+assert d["schema_version"] == 2 and d["environment"]["backend"], d
+assert "universal.compiles" in d["metrics"]["counters"], d["metrics"]
 EOF
 
 echo "== BENCH_api smoke artifact =="
@@ -121,6 +170,8 @@ assert d["coalesced_deterministic"] is True
 # compile amortization IS the headline)
 assert d["run_many_speedup_vs_sequential_search"] >= 2.0, \
     d["run_many_speedup_vs_sequential_search"]
+assert d["schema_version"] == 2 and d["environment"]["backend"], d
+assert "universal.compiles" in d["metrics"]["counters"], d["metrics"]
 EOF
 
 echo "CI smoke gate passed."

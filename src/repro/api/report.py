@@ -104,8 +104,15 @@ class Report:
     def bench(name: str, payload: dict[str, Any]) -> "Report":
         """Wrap a benchmark payload: keys matching schema fields land on
         the report itself, the rest ride in ``extras`` — the flat JSON
-        keeps every historical BENCH_* key at top level."""
+        keeps every historical BENCH_* key at top level.
+
+        Every bench artifact carries an ``environment`` provenance block
+        (jax/jaxlib version, backend, device kind/count, host, git SHA —
+        schema_version 2) so BENCH_* numbers are comparable across
+        machines; pass an explicit ``environment`` key to override."""
+        from .. import obs
         payload = dict(payload)
+        payload.setdefault("environment", obs.environment())
         kw = {f: payload.pop(f) for f in _RESERVED[3:] if f in payload}
         return Report(kind="bench", name=name, **kw, extras=payload)
 

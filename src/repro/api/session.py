@@ -27,6 +27,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core import dnn_models as zoo
 from ..core.tensor_analysis import LayerOp
 from .report import Report
@@ -135,15 +136,31 @@ class Session:
         :class:`Report` schema."""
         kind = query.kind
         self.n_queries += 1
-        if kind == "layer":
-            return self._run_layer(query)
-        if kind == "layer_codse":
-            return self._run_layer_codse(query)
-        if kind == "network":
-            return self._run_network(query)
-        if kind == "network_codse":
-            return self._run_network_codse(query)
-        raise ValueError(f"unroutable query kind {kind!r}")
+        met = obs.metrics()
+        met.inc("session.queries")
+        met.inc("session.queries_by_kind", kind=kind)
+        # query fingerprint = the span's trace id (only computed when a
+        # tracer is live; span() itself is a no-op singleton otherwise)
+        fp = query.fingerprint() if obs.tracing_enabled() else None
+        with obs.span("query", kind=kind, id=fp):
+            if kind == "layer":
+                return self._run_layer(query)
+            if kind == "layer_codse":
+                return self._run_layer_codse(query)
+            if kind == "network":
+                return self._run_network(query)
+            if kind == "network_codse":
+                return self._run_network_codse(query)
+            raise ValueError(f"unroutable query kind {kind!r}")
+
+    def metrics(self) -> dict[str, Any]:
+        """The process-wide obs metrics snapshot plus this session's own
+        counters — THE structured payload CI budget asserts read (also
+        embedded in ``--out`` files and BENCH_* artifacts)."""
+        snap = obs.metrics().snapshot()
+        snap["session"] = {"n_queries": self.n_queries,
+                           "last_batch": self.last_batch}
+        return snap
 
     def run_search(self, op: LayerOp, **kwargs) -> "Any":
         """The session path behind the legacy ``mapspace.search()`` entry
@@ -324,32 +341,35 @@ class Session:
         (``raw.best_dataflow``)."""
         t0 = time.perf_counter()
         queries = list(queries)
+        obs.metrics().inc("session.batches")
         reports: list[Report | None] = [None] * len(queries)
         coal: dict[tuple, list[int]] = {}
         budget_rest = 0
         n_compiles = 0
-        for i, q in enumerate(queries):
-            if self.coalescible(q):
-                coal.setdefault(self._batch_settings(q), []).append(i)
-            else:
-                reports[i] = self.run(q)
-                budget_rest += self._compile_budget_of(reports[i])
-                n_compiles += reports[i].n_compiles
-        n_coal = sum(len(v) for v in coal.values())
-        n_families = 0
-        compile_s = eval_s = encode_s = 0.0
-        n_devices = 1
-        for settings, idxs in coal.items():
-            out = self._run_family_batch(
-                [queries[i] for i in idxs], settings, coalesce=coalesce)
-            for i, rep in zip(idxs, out["reports"]):
-                reports[i] = rep
-            n_compiles += out["n_compiles"]
-            n_families += out["n_families"]
-            compile_s += out["compile_s"]
-            eval_s += out["eval_s"]
-            encode_s += out["encode_s"]
-            n_devices = max(n_devices, out["n_devices"])
+        with obs.span("run_many", queries=len(queries)):
+            for i, q in enumerate(queries):
+                if self.coalescible(q):
+                    coal.setdefault(self._batch_settings(q), []).append(i)
+                else:
+                    reports[i] = self.run(q)
+                    budget_rest += self._compile_budget_of(reports[i])
+                    n_compiles += reports[i].n_compiles
+            n_coal = sum(len(v) for v in coal.values())
+            n_families = 0
+            compile_s = eval_s = encode_s = 0.0
+            n_devices = 1
+            for settings, idxs in coal.items():
+                out = self._run_family_batch(
+                    [queries[i] for i in idxs], settings,
+                    coalesce=coalesce)
+                for i, rep in zip(idxs, out["reports"]):
+                    reports[i] = rep
+                n_compiles += out["n_compiles"]
+                n_families += out["n_families"]
+                compile_s += out["compile_s"]
+                eval_s += out["eval_s"]
+                encode_s += out["encode_s"]
+                n_devices = max(n_devices, out["n_devices"])
         self.last_batch = {
             "n_queries": len(queries),
             "n_coalesced": n_coal,
@@ -388,38 +408,40 @@ class Session:
         from ..netspace.evaluator import evaluate_rows
         block, multicast, spatial_reduction, cluster = settings
 
-        ops = [q.workload.resolve()[0] for q in queries]
-        # fold into distinct shapes (first-appearance order keeps the
-        # family registry stable across repeated batches)
-        distinct: list[LayerOp] = []
-        seen: dict[tuple, int] = {}
-        uid_of: list[int] = []
-        for op in ops:
-            k = zoo.layer_shape_key(op)
-            if k not in seen:
-                seen[k] = len(distinct)
-                distinct.append(op)
-            uid_of.append(seen[k])
-        ns = self._netspace_for(distinct, cluster=cluster)
-        # build_netspace dedupes again; map our distinct ids through it
-        uid_of = [ns.index[u] for u in uid_of]
+        with obs.span("coalesce", queries=len(queries)):
+            ops = [q.workload.resolve()[0] for q in queries]
+            # fold into distinct shapes (first-appearance order keeps the
+            # family registry stable across repeated batches)
+            distinct: list[LayerOp] = []
+            seen: dict[tuple, int] = {}
+            uid_of: list[int] = []
+            for op in ops:
+                k = zoo.layer_shape_key(op)
+                if k not in seen:
+                    seen[k] = len(distinct)
+                    distinct.append(op)
+                uid_of.append(seen[k])
+            ns = self._netspace_for(distinct, cluster=cluster)
+            # build_netspace dedupes again; map distinct ids through it
+            uid_of = [ns.index[u] for u in uid_of]
 
-        # per-query candidate matrices (the SAME draws one-query
-        # netspace-style search would make on the shared space)
-        cand: list[np.ndarray] = []
-        strat: list[str] = []
-        for q, op, u in zip(queries, ops, uid_of):
-            sp = q.search
-            g, s = static_candidates(ns.spaces[u], sp.strategy,
-                                     sp.budget, sp.seed)
-            g = prune_genes_by_budget(ns.unique[u], ns.spaces[u], g,
-                                      l1_kb=sp.l1_prune_kb,
-                                      l2_kb=sp.l2_prune_kb)
-            if not g.shape[0]:
-                raise RuntimeError(
-                    f"{op.name}: budget pruning dropped every candidate")
-            cand.append(g)
-            strat.append(s)
+            # per-query candidate matrices (the SAME draws one-query
+            # netspace-style search would make on the shared space)
+            cand: list[np.ndarray] = []
+            strat: list[str] = []
+            for q, op, u in zip(queries, ops, uid_of):
+                sp = q.search
+                g, s = static_candidates(ns.spaces[u], sp.strategy,
+                                         sp.budget, sp.seed)
+                g = prune_genes_by_budget(ns.unique[u], ns.spaces[u], g,
+                                          l1_kb=sp.l1_prune_kb,
+                                          l2_kb=sp.l2_prune_kb)
+                if not g.shape[0]:
+                    raise RuntimeError(
+                        f"{op.name}: budget pruning dropped every "
+                        f"candidate")
+                cand.append(g)
+                strat.append(s)
 
         run = GeneRun()
         cols_q: list[np.ndarray | None] = [None] * len(queries)
@@ -458,8 +480,14 @@ class Session:
                     cols_q[qi] = cols[at:at + m]
                     at += m
 
+        met = obs.metrics()
         reports: list[Report] = []
         for qi, (q, op) in enumerate(zip(queries, ops)):
+            met.inc("session.queries")
+            met.inc("session.queries_by_kind", kind="layer_coalesced")
+            if obs.tracing_enabled():
+                obs.instant("query", kind="layer", id=q.fingerprint(),
+                            coalesced=True)
             sp = q.search
             cols = cols_q[qi]
             macs = float(op.total_macs)

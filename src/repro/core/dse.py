@@ -22,6 +22,7 @@ from typing import Any, Callable, Iterable, Sequence
 import numpy as np
 import jax.numpy as jnp
 
+from .. import obs
 from .dataflows import table3_for_layer
 from .directives import Cluster, Dataflow, SpatialMap, TemporalMap
 from .energy import (DEFAULT_AREA_POWER, AreaPowerModel, EYERISS_AREA_MM2,
@@ -117,15 +118,20 @@ def run_dse(op: LayerOp, df: Dataflow, cfg: DSEConfig | None = None,
                               np.asarray(cfg.bw_range, np.float32),
                               indexing="ij")
     pes, bws = pes_g.ravel(), bw_g.ravel()
+    obs.metrics().inc("dse.designs", len(pes))
     # warm up the executable so the reported rate is the steady-state rate
-    _ = f(jnp.asarray(pes[:2]), jnp.asarray(bws[:2]))
+    with obs.span("warmup", engine="dse-grid", op=op.name, df=df.name):
+        _ = f(jnp.asarray(pes[:2]), jnp.asarray(bws[:2]))
     feats_out = []
-    t0 = time.perf_counter()
-    for i in range(0, len(pes), cfg.batch):
-        feats_out.append(np.asarray(
-            f(jnp.asarray(pes[i:i + cfg.batch]),
-              jnp.asarray(bws[i:i + cfg.batch]))))
-    elapsed = time.perf_counter() - t0
+    with obs.span("device-pass", engine="dse-grid", op=op.name,
+                  df=df.name, rows=len(pes)):
+        t0 = time.perf_counter()
+        for i in range(0, len(pes), cfg.batch):
+            feats_out.append(np.asarray(
+                f(jnp.asarray(pes[i:i + cfg.batch]),
+                  jnp.asarray(bws[i:i + cfg.batch]))))
+        elapsed = time.perf_counter() - t0
+    obs.metrics().observe("dse.grid_s", elapsed)
     feats = np.concatenate(feats_out, axis=0)
     stats = BatchStats.from_features(feats)
 

@@ -18,14 +18,14 @@ Examples::
 from __future__ import annotations
 
 import argparse
-import sys
 
 from repro.api import Hardware, Query, SearchSpec, Workload, select_layers
 from repro.core import dnn_models as zoo
 from repro.core.dataflows import TABLE3, table3_for_layer
 from repro.core.model import analyze
 from repro.core.performance import HWConfig
-from repro.launch.query import (DEFAULT_CACHE, DEFAULT_JAX_CACHE, _fmt,
+from repro.launch.query import (DEFAULT_CACHE, DEFAULT_JAX_CACHE, LOG,
+                                _fmt, add_obs_args, obs_scope,
                                 print_batch_summary, print_layer_report,
                                 print_layer_codse_report,
                                 session_from_args)
@@ -143,52 +143,55 @@ def main(argv=None) -> None:
                     help="on-disk result cache ('' disables)")
     ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
                     help="persistent XLA compilation cache ('' disables)")
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
-    session = session_from_args(args)
-    layers = zoo.MODELS[args.model]()
-    if args.list_layers:
-        for i, l in enumerate(layers):
-            print(f"{i:3d} {l.op_type:10s} {l.name} {l.dims}")
-        return
-    try:
-        picked = select_layers(layers, args.layer)
-    except ValueError as e:
-        raise SystemExit(f"{e}; try --list-layers")
-    if len(picked) > 1:
+    with obs_scope(args):
+        session = session_from_args(args)
+        layers = zoo.MODELS[args.model]()
+        if args.list_layers:
+            for i, l in enumerate(layers):
+                print(f"{i:3d} {l.op_type:10s} {l.name} {l.dims}")
+            return
+        try:
+            picked = select_layers(layers, args.layer)
+        except ValueError as e:
+            raise SystemExit(f"{e}; try --list-layers")
+        if len(picked) > 1:
+            if args.co_dse:
+                LOG.warning("--co-dse applies to single-layer selections "
+                            "only; running the per-layer table instead "
+                            "(pick one layer for the co-DSE)")
+            _multi_layer(picked, session, args)
+            return
+        op = picked[0]
+        print(f"# layer {op.name} {op.op_type} {op.dims}")
+
+        spec = _spec_from_args(args, op)
+        hw = Hardware(num_pes=args.pes, noc_bw=args.bw)
+        rep = session.run(Query(Workload.of_layer(op), hw, spec))
+        print_layer_report(rep)
+
+        # Table 3 baselines at the same hardware point
+        print("\n# Table 3 baselines (same hardware):")
+        best_t3, per_flow = _table3_values(op, args)
+        for f, v in per_flow.items():
+            print(f"  {f:5s} {args.objective}={_fmt(v)}")
+        best_val = rep.best["value"]
+        if args.objective == "throughput":
+            imp = best_val / best_t3
+        else:
+            imp = best_t3 / best_val
+        print(f"# best-found vs best-Table-3: {imp:.2f}x")
+
         if args.co_dse:
-            print("# note: --co-dse applies to single-layer selections "
-                  "only; running the per-layer table instead "
-                  "(pick one layer for the co-DSE)", file=sys.stderr)
-        _multi_layer(picked, session, args)
-        return
-    op = picked[0]
-    print(f"# layer {op.name} {op.op_type} {op.dims}")
-
-    spec = _spec_from_args(args, op)
-    hw = Hardware(num_pes=args.pes, noc_bw=args.bw)
-    rep = session.run(Query(Workload.of_layer(op), hw, spec))
-    print_layer_report(rep)
-
-    # Table 3 baselines at the same hardware point
-    print("\n# Table 3 baselines (same hardware):")
-    best_t3, per_flow = _table3_values(op, args)
-    for f, v in per_flow.items():
-        print(f"  {f:5s} {args.objective}={_fmt(v)}")
-    best_val = rep.best["value"]
-    if args.objective == "throughput":
-        imp = best_val / best_t3
-    else:
-        imp = best_t3 / best_val
-    print(f"# best-found vs best-Table-3: {imp:.2f}x")
-
-    if args.co_dse:
-        grid = Hardware(num_pes=args.pes, noc_bw=args.bw,
-                        pe_range=tuple(range(32, 513, 32)),
-                        bw_range=tuple(float(b) for b in range(4, 65, 4)))
-        co = session.run(Query(Workload.of_layer(op), grid, spec))
-        print()
-        print_layer_codse_report(co)
+            grid = Hardware(
+                num_pes=args.pes, noc_bw=args.bw,
+                pe_range=tuple(range(32, 513, 32)),
+                bw_range=tuple(float(b) for b in range(4, 65, 4)))
+            co = session.run(Query(Workload.of_layer(op), grid, spec))
+            print()
+            print_layer_codse_report(co)
 
 
 if __name__ == "__main__":

@@ -22,8 +22,8 @@ import argparse
 
 from repro.api import Hardware, Query, SearchSpec, Workload
 from repro.core import dnn_models as zoo
-from repro.launch.query import (DEFAULT_JAX_CACHE, _fmt,
-                                print_network_codse_report,
+from repro.launch.query import (DEFAULT_JAX_CACHE, _fmt, add_obs_args,
+                                obs_scope, print_network_codse_report,
                                 print_network_report, session_from_args)
 from repro.netspace import best_uniform, uniform_baseline
 
@@ -73,63 +73,69 @@ def main(argv=None) -> None:
                     help="on-disk result cache ('' disables)")
     ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
                     help="persistent XLA compilation cache ('' disables)")
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
-    session = session_from_args(args)
-    budget = min(args.budget, 128) if args.quick else args.budget
-    frontier_k = min(args.frontier_k, 4) if args.quick else args.frontier_k
+    with obs_scope(args):
+        session = session_from_args(args)
+        budget = min(args.budget, 128) if args.quick else args.budget
+        frontier_k = min(args.frontier_k, 4) if args.quick \
+            else args.frontier_k
 
-    hw = Hardware(num_pes=args.pes, noc_bw=args.bw,
-                  dram_bw=args.dram_bw,
-                  dram_energy_pj=args.dram_energy_pj,
-                  reconfig_latency=args.reconfig_latency)
-    spec = SearchSpec(objective=args.objective, budget=budget,
-                      strategy=args.strategy, seed=args.seed,
-                      frontier_k=frontier_k, fuse=not args.no_fuse,
-                      reconfig=not args.no_reconfig,
-                      l2_budget_kb=args.l2_budget_kb,
-                      composer=args.composer,
-                      budget_policy=args.budget_policy,
-                      block=args.block, codse_top_k=4)
-    rep = session.run(Query(Workload.of_network(args.model), hw, spec))
-    print_network_report(rep)
+        hw = Hardware(num_pes=args.pes, noc_bw=args.bw,
+                      dram_bw=args.dram_bw,
+                      dram_energy_pj=args.dram_energy_pj,
+                      reconfig_latency=args.reconfig_latency)
+        spec = SearchSpec(objective=args.objective, budget=budget,
+                          strategy=args.strategy, seed=args.seed,
+                          frontier_k=frontier_k, fuse=not args.no_fuse,
+                          reconfig=not args.no_reconfig,
+                          l2_budget_kb=args.l2_budget_kb,
+                          composer=args.composer,
+                          budget_policy=args.budget_policy,
+                          block=args.block, codse_top_k=4)
+        rep = session.run(Query(Workload.of_network(args.model), hw,
+                                spec))
+        print_network_report(rep)
 
-    r = rep.raw
-    base = uniform_baseline(r.netspace.layers, r.model)
-    flow, b = best_uniform(base, "edp")
-    print(f"\n# uniform Table-3 baselines (network EDP, same cost model):")
-    for f, v in base.items():
-        mark = " <- best uniform" if f == flow else ""
-        print(f"  {f:5s} EDP={_fmt(v['edp'])}{mark}")
-    print(f"# schedule vs best uniform ({flow}): "
-          f"{b['edp'] / r.schedule.network_edp:.2f}x better EDP")
+        r = rep.raw
+        base = uniform_baseline(r.netspace.layers, r.model)
+        flow, b = best_uniform(base, "edp")
+        print(f"\n# uniform Table-3 baselines (network EDP, same cost "
+              f"model):")
+        for f, v in base.items():
+            mark = " <- best uniform" if f == flow else ""
+            print(f"  {f:5s} EDP={_fmt(v['edp'])}{mark}")
+        print(f"# schedule vs best uniform ({flow}): "
+              f"{b['edp'] / r.schedule.network_edp:.2f}x better EDP")
 
-    if args.co_dse:
-        if args.quick:
-            grid = Hardware(num_pes=args.pes, noc_bw=args.bw,
-                            dram_bw=args.dram_bw,
-                            dram_energy_pj=args.dram_energy_pj,
-                            reconfig_latency=args.reconfig_latency,
-                            pe_range=(64, 128, 256),
-                            bw_range=(8.0, 16.0, 32.0))
-        else:
-            grid = Hardware(
-                num_pes=args.pes, noc_bw=args.bw, dram_bw=args.dram_bw,
-                dram_energy_pj=args.dram_energy_pj,
-                reconfig_latency=args.reconfig_latency,
-                pe_range=tuple(range(32, 513, 32)),
-                bw_range=tuple(float(b) for b in range(4, 65, 4)))
-        co_spec = SearchSpec(
-            objective=args.objective, budget=budget,
-            strategy=args.strategy, seed=args.seed,
-            frontier_k=min(frontier_k, 4), fuse=not args.no_fuse,
-            reconfig=not args.no_reconfig,
-            l2_budget_kb=args.l2_budget_kb, composer=args.composer,
-            budget_policy=args.budget_policy, block=args.block)
-        co = session.run(Query(Workload.of_network(args.model), grid,
-                               co_spec))
-        print()
-        print_network_codse_report(co)
+        if args.co_dse:
+            if args.quick:
+                grid = Hardware(num_pes=args.pes, noc_bw=args.bw,
+                                dram_bw=args.dram_bw,
+                                dram_energy_pj=args.dram_energy_pj,
+                                reconfig_latency=args.reconfig_latency,
+                                pe_range=(64, 128, 256),
+                                bw_range=(8.0, 16.0, 32.0))
+            else:
+                grid = Hardware(
+                    num_pes=args.pes, noc_bw=args.bw,
+                    dram_bw=args.dram_bw,
+                    dram_energy_pj=args.dram_energy_pj,
+                    reconfig_latency=args.reconfig_latency,
+                    pe_range=tuple(range(32, 513, 32)),
+                    bw_range=tuple(float(b) for b in range(4, 65, 4)))
+            co_spec = SearchSpec(
+                objective=args.objective, budget=budget,
+                strategy=args.strategy, seed=args.seed,
+                frontier_k=min(frontier_k, 4), fuse=not args.no_fuse,
+                reconfig=not args.no_reconfig,
+                l2_budget_kb=args.l2_budget_kb, composer=args.composer,
+                budget_policy=args.budget_policy, block=args.block)
+            co = session.run(Query(Workload.of_network(args.model), grid,
+                                   co_spec))
+            print()
+            print_network_codse_report(co)
 
 
 if __name__ == "__main__":

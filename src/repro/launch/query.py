@@ -27,11 +27,14 @@ thin shims over this backend.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
+import logging
 import os
 import sys
 from typing import Any, Sequence
 
+from repro import obs
 from repro.api import (Hardware, Query, Report, SearchSpec, Session,
                        Workload, queries_from_file)
 from repro.core import dnn_models as zoo
@@ -39,6 +42,11 @@ from repro.core import dnn_models as zoo
 DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache",
                              "repro-mapspace")
 DEFAULT_JAX_CACHE = os.path.join(DEFAULT_CACHE, "xla")
+
+# THE launch-CLI logger: every diagnostic/progress line across the query
+# CLI and its shims routes through here (results still print to stdout);
+# ``-v``/``-q`` pick the level in :func:`obs_scope`.
+LOG = logging.getLogger("repro.launch")
 
 
 def _fmt(v: float) -> str:
@@ -51,7 +59,45 @@ def _write_json(path: str, payload: Any) -> None:
         os.makedirs(d, exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"# wrote {path}")
+    LOG.info("wrote %s", path)
+
+
+def configure_logging(args) -> None:
+    """One logging config for every launch CLI: ``-v`` -> DEBUG,
+    default INFO, ``-q`` -> WARNING (diagnostics go to stderr; result
+    tables stay on stdout)."""
+    level = logging.INFO
+    if getattr(args, "quiet", 0):
+        level = logging.WARNING
+    if getattr(args, "verbose", 0):
+        level = logging.DEBUG
+    logging.basicConfig(level=level, stream=sys.stderr,
+                        format="# %(message)s")
+    logging.getLogger("repro").setLevel(level)
+
+
+@contextlib.contextmanager
+def obs_scope(args):
+    """Observability bracket around one CLI run (shared by the query CLI
+    and the mapsearch/netsearch shims): configures logging, turns on the
+    span tracer for ``--trace``, wraps the run in ``jax.profiler`` for
+    ``--profile-dir``, and on exit writes the trace file and prints the
+    metrics snapshot for ``--metrics``."""
+    configure_logging(args)
+    if getattr(args, "trace", None):
+        obs.enable_tracing()
+    try:
+        if getattr(args, "profile_dir", None):
+            with obs.profile_to(args.profile_dir):
+                yield
+        else:
+            yield
+    finally:
+        if getattr(args, "trace", None):
+            obs.save_trace(args.trace)
+            LOG.info("wrote trace %s", args.trace)
+        if getattr(args, "metrics", False):
+            print(json.dumps(obs.metrics().snapshot(), indent=2))
 
 
 # ----------------------------------------------------------------------
@@ -249,6 +295,25 @@ def add_common_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
                     help="persistent XLA compilation cache "
                          "('' disables)")
+    add_obs_args(ap)
+
+
+def add_obs_args(ap: argparse.ArgumentParser) -> None:
+    """The shared observability flags (also used by the mapsearch/
+    netsearch shims): logging verbosity, span tracing, metrics snapshot,
+    jax profiler."""
+    ap.add_argument("-v", "--verbose", action="count", default=0,
+                    help="debug logging")
+    ap.add_argument("-q", "--quiet", action="count", default=0,
+                    help="warnings only")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a Chrome/Perfetto trace_event timeline "
+                         "of the run (open in ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the obs metrics snapshot (JSON) at exit")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler (TensorBoard/"
+                         "Perfetto device-level dump)")
 
 
 def main(argv=None) -> None:
@@ -286,59 +351,62 @@ def main(argv=None) -> None:
     add_common_args(ap)
     args = ap.parse_args(argv)
 
-    session = session_from_args(args)
+    with obs_scope(args):
+        session = session_from_args(args)
 
-    if args.file:
-        queries = queries_from_file(args.file)
-        reports = session.run_many(queries,
-                                   coalesce=not args.no_coalesce)
-        for i, rep in enumerate(reports):
-            tag = f" [{rep.tag}]" if rep.tag else ""
-            print(f"\n=== query {i}{tag}: {rep.kind} {rep.name} ===")
+        if args.file:
+            queries = queries_from_file(args.file)
+            reports = session.run_many(queries,
+                                       coalesce=not args.no_coalesce)
+            for i, rep in enumerate(reports):
+                tag = f" [{rep.tag}]" if rep.tag else ""
+                print(f"\n=== query {i}{tag}: {rep.kind} {rep.name} ===")
+                print_report(rep)
+            print_batch_summary(session)
+            if args.out:
+                payload = {"reports": [r.to_json() for r in reports],
+                           "batch": session.last_batch,
+                           "metrics": session.metrics(),
+                           "environment": obs.environment()}
+                _write_json(args.out, payload)
+            return
+
+        if not args.model:
+            ap.error("give --model (single query) or --file (batch)")
+        layers = zoo.MODELS[args.model]()
+        if args.list_layers:
+            for i, l in enumerate(layers):
+                print(f"{i:3d} {l.op_type:10s} {l.name} {l.dims}")
+            return
+
+        from repro.api import select_layers
+        hw = hardware_from_args(args)
+        spec = searchspec_from_args(args)
+        if args.layer is None:
+            rep = session.run(Query(Workload.of_network(args.model), hw,
+                                    spec))
             print_report(rep)
-        print_batch_summary(session)
+            out_payload: Any = rep.to_json()
+        elif len(select_layers(layers, args.layer)) == 1:
+            rep = session.run(Query(
+                Workload(model=args.model, layer=args.layer), hw, spec))
+            print_report(rep)
+            out_payload = rep.to_json()
+        else:
+            if args.co_dse:
+                LOG.warning("--co-dse applies to single-layer selections "
+                            "only; running the per-layer batch instead")
+                hw = Hardware(num_pes=args.pes, noc_bw=args.bw)
+            qs = [Query(Workload.of_layer(op), hw, spec)
+                  for op in select_layers(layers, args.layer)]
+            reps = session.run_many(qs)
+            print_layer_table(reps, args.objective)
+            print_batch_summary(session)
+            out_payload = {"reports": [r.to_json() for r in reps],
+                           "batch": session.last_batch,
+                           "metrics": session.metrics()}
         if args.out:
-            payload = {"reports": [r.to_json() for r in reports],
-                       "batch": session.last_batch}
-            _write_json(args.out, payload)
-        return
-
-    if not args.model:
-        ap.error("give --model (single query) or --file (batch)")
-    layers = zoo.MODELS[args.model]()
-    if args.list_layers:
-        for i, l in enumerate(layers):
-            print(f"{i:3d} {l.op_type:10s} {l.name} {l.dims}")
-        return
-
-    from repro.api import select_layers
-    hw = hardware_from_args(args)
-    spec = searchspec_from_args(args)
-    if args.layer is None:
-        rep = session.run(Query(Workload.of_network(args.model), hw,
-                                spec))
-        print_report(rep)
-        out_payload: Any = rep.to_json()
-    elif len(select_layers(layers, args.layer)) == 1:
-        rep = session.run(Query(
-            Workload(model=args.model, layer=args.layer), hw, spec))
-        print_report(rep)
-        out_payload = rep.to_json()
-    else:
-        if args.co_dse:
-            print("# note: --co-dse applies to single-layer selections "
-                  "only; running the per-layer batch instead",
-                  file=sys.stderr)
-            hw = Hardware(num_pes=args.pes, noc_bw=args.bw)
-        qs = [Query(Workload.of_layer(op), hw, spec)
-              for op in select_layers(layers, args.layer)]
-        reps = session.run_many(qs)
-        print_layer_table(reps, args.objective)
-        print_batch_summary(session)
-        out_payload = {"reports": [r.to_json() for r in reps],
-                       "batch": session.last_batch}
-    if args.out:
-        _write_json(args.out, out_payload)
+            _write_json(args.out, out_payload)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from typing import Sequence
 import numpy as np
 import jax.numpy as jnp
 
+from .. import obs
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES, batched_tile_evaluator
 from .space import GroupKey, MapSpace, Point, group_template, point_operands
@@ -96,6 +97,7 @@ def evaluate_points(op: LayerOp, space: MapSpace, points: Sequence[Point],
             op, space, points, num_pes=num_pes, noc_bw=noc_bw,
             block=block, multicast=multicast,
             spatial_reduction=spatial_reduction)
+        obs.metrics().inc("mappings.evaluated", len(points))
         groups = {space.group_key(p) for p in points}
         return feats, EvalStats(
             n_points=len(points), n_groups=len(groups),
@@ -132,16 +134,24 @@ def evaluate_points(op: LayerOp, space: MapSpace, points: Sequence[Point],
             if warm_key not in _WARMED:
                 # first call at this shape: jit compile — re-run timed so
                 # every group contributes a steady-rate sample
-                t0 = time.perf_counter()
-                out = np.asarray(f(sj, oj))
-                stats.compile_s += time.perf_counter() - t0
+                with obs.span("compile", engine="grouped", op=op.name,
+                              group=template.name):
+                    t0 = time.perf_counter()
+                    out = np.asarray(f(sj, oj))
+                    dt = time.perf_counter() - t0
+                stats.compile_s += dt
                 stats.n_compiles += 1
                 _WARMED.add(warm_key)
-            t0 = time.perf_counter()
-            out = np.asarray(f(sj, oj))
-            stats.eval_s += time.perf_counter() - t0
+                obs.metrics().inc("grouped.compiles")
+                obs.metrics().inc("grouped.compile_s", dt)
+            with obs.span("device-pass", engine="grouped", op=op.name,
+                          rows=hi - lo):
+                t0 = time.perf_counter()
+                out = np.asarray(f(sj, oj))
+                stats.eval_s += time.perf_counter() - t0
             stats.n_steady += hi - lo
             feats[idxs[lo:hi]] = out[:hi - lo]
+    obs.metrics().inc("mappings.evaluated", len(points))
     return feats, stats
 
 

@@ -22,6 +22,7 @@ import json
 import os
 from typing import Any
 
+from .. import obs
 from ..core.tensor_analysis import LayerOp
 from .space import MapSpace
 
@@ -34,7 +35,9 @@ CACHE_VERSION = 3
 # Version of the engine/query schema behind the declarative front door
 # (``repro.api`` re-exports this as ``SCHEMA_VERSION``).  Bump when query
 # semantics, the Report schema, or engine numerics change incompatibly.
-ENGINE_SCHEMA_VERSION = 1
+# 2: Report carries the obs environment-provenance block in bench
+# artifacts and the metrics snapshot schema exists alongside it.
+ENGINE_SCHEMA_VERSION = 2
 
 # Set once per process; repeated calls with the same directory are no-ops.
 _COMPILATION_CACHE_DIR: str | None = None
@@ -98,15 +101,19 @@ def load(cache_dir: str | None, key: str) -> dict[str, Any] | None:
         with open(_path(cache_dir, key)) as f:
             payload = json.load(f)
     except (OSError, ValueError):
+        obs.metrics().inc("result_cache.misses")
         return None
     if payload.get("version") != CACHE_VERSION:
+        obs.metrics().inc("result_cache.misses")
         return None
+    obs.metrics().inc("result_cache.hits")
     return payload
 
 
 def store(cache_dir: str | None, key: str, payload: dict[str, Any]) -> None:
     if not cache_dir:
         return
+    obs.metrics().inc("result_cache.stores")
     os.makedirs(cache_dir, exist_ok=True)
     payload = dict(payload, version=CACHE_VERSION)
     tmp = _path(cache_dir, key) + ".tmp"

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Sequence
 
@@ -29,6 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import (FEATURES, HWTail, ReduceSpec, UniversalSpec,
                                universal_evaluator,
@@ -37,16 +39,21 @@ from .space import (ClusterOption, MapSpace, Point, _resolve_sz,
                     gene_tables)
 
 # Executables warmed at a given block shape this process (same role as
-# ``batched._WARMED``), plus a monotone compile counter for regression
-# tests and benchmarks: the whole point of the universal evaluator is that
-# this counter stays O(1) per (op, level-count), not O(groups).
+# ``batched._WARMED``).  The matching compile COUNT lives in the obs
+# metrics registry (``universal.compiles``): warm_once() is the single
+# writer of both, so the process counter, the per-family counters, and
+# every run-local ``n_compiles`` (which increments iff warm_once returned
+# True) can never drift apart — the whole point of the universal
+# evaluator is that this count stays O(1) per (op, level-count), not
+# O(groups).
 _WARMED: set[tuple] = set()
-_COMPILE_COUNT = 0
+_WARM_LOCK = threading.Lock()
 
 
 def compile_count() -> int:
-    """Process-wide number of first-call (compiling) universal executions."""
-    return _COMPILE_COUNT
+    """Process-wide number of first-call (compiling) universal executions.
+    Reads the obs metrics counter that :func:`warm_once` maintains."""
+    return int(obs.metrics().value("universal.compiles"))
 
 
 def is_warm(key: tuple) -> bool:
@@ -55,7 +62,8 @@ def is_warm(key: tuple) -> bool:
     return key in _WARMED
 
 
-def warm_once(key: tuple) -> bool:
+def warm_once(key: tuple, *, family: str | None = None,
+              seconds: float = 0.0) -> bool:
     """Record a first-call (compiling) universal execution under an
     arbitrary hashable key; returns True when the key was new.  Every
     universal execution path — batched, gene pipeline, netspace's
@@ -63,12 +71,25 @@ def warm_once(key: tuple) -> bool:
     :func:`compile_count` (the bench/CI O(1)-compile gate) stays honest.
     Call AFTER the first execution completes (gate on :func:`is_warm`)
     so a failed/interrupted compile is retried and counted, not silently
-    treated as warm."""
-    global _COMPILE_COUNT
-    if key in _WARMED:
-        return False
-    _WARMED.add(key)
-    _COMPILE_COUNT += 1
+    treated as warm.
+
+    THE single writer of the compile metrics: bumps ``universal.compiles``
+    plus the per-``family`` counter (label e.g. ``conv1:L2``) and
+    ``universal.compile_s``.  Callers increment their run-local
+    ``n_compiles`` iff this returns True, so run stats and the process
+    counter agree by construction (asserted here)."""
+    m = obs.metrics()
+    with _WARM_LOCK:
+        if key in _WARMED:
+            return False
+        _WARMED.add(key)
+        n = m.inc("universal.compiles")
+        m.inc("universal.compiles_by_family", family=family or "other")
+        if seconds:
+            m.inc("universal.compile_s", seconds)
+        # parity: the counter counts exactly the warmed keys
+        assert int(n) == len(_WARMED), \
+            f"compile counter drift: {int(n)} != {len(_WARMED)} warmed keys"
     return True
 
 
@@ -77,7 +98,14 @@ def mark_warmed(op: LayerOp, spec, multicast: bool, reduction: bool,
     """Record a first-call (compiling) universal execution at an ad-hoc
     batch shape — e.g. ``measure_rate``'s timing batches, which bypass
     :func:`evaluate_encoded`.  Returns True when the shape was new."""
-    return warm_once(_warm_key(op, spec, multicast, reduction, n_rows))
+    return warm_once(_warm_key(op, spec, multicast, reduction, n_rows),
+                     family=family_label(op, spec))
+
+
+def family_label(op: LayerOp, spec) -> str:
+    """Human-readable (op, level-count) family name for metrics/spans:
+    ``conv1:L2`` = conv1's 2-level (clustered) executable family."""
+    return f"{op.name}:L{2 if getattr(spec, 'cluster', None) else 1}"
 
 
 def _cluster_candidate(copt: ClusterOption, op: LayerOp
@@ -210,17 +238,23 @@ def evaluate_encoded(op: LayerOp, spec: UniversalSpec,
                 chunk = np.concatenate(
                     [chunk, np.repeat(v[lo:lo + 1], pad, 0)])
             batch[k] = jnp.asarray(chunk)
+        fam = family_label(op, spec)
         if not is_warm(wk):
             # first call at this shape: jit compile — re-run timed so every
             # batch contributes a steady-rate sample
+            with obs.span("compile", family=fam, rows=block):
+                t0 = time.perf_counter()
+                np.asarray(f(batch))
+                dt = time.perf_counter() - t0
+            if warm_once(wk, family=fam, seconds=dt):
+                run.compile_s += dt
+                run.n_compiles += 1
+        else:
+            obs.metrics().inc("universal.warm_hits", family=fam)
+        with obs.span("device-pass", family=fam, rows=hi - lo):
             t0 = time.perf_counter()
-            np.asarray(f(batch))
-            run.compile_s += time.perf_counter() - t0
-            run.n_compiles += 1
-            warm_once(wk)
-        t0 = time.perf_counter()
-        out = np.asarray(f(batch))
-        run.eval_s += time.perf_counter() - t0
+            out = np.asarray(f(batch))
+            run.eval_s += time.perf_counter() - t0
         feats[lo:hi] = out[:hi - lo]
     return feats, run
 
@@ -386,38 +420,53 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
     cand_t: list[np.ndarray] = []
 
     def collect(sub: np.ndarray, m: int, out: dict) -> None:
-        t0 = time.perf_counter()
-        host = {kk: np.asarray(v) for kk, v in out.items()}
-        run.eval_s += time.perf_counter() - t0
+        met = obs.metrics()
+        # the blocked wait for (and host copy of) this chunk's reduced
+        # device results — the host-visible tail of the device pass
+        with obs.span("device-pass", op=op.name, rows=m, devices=nd):
+            t0 = time.perf_counter()
+            host = {kk: np.asarray(v) for kk, v in out.items()}
+            dt = time.perf_counter() - t0
+        run.eval_s += dt
+        met.observe("gene.collect_wait_s", dt)
+        met.inc("gene.merge_bytes", sum(v.nbytes for v in host.values()))
         chunk_rows = nd * block
-        if return_vals:
-            vals[sub] = host["vals"].reshape(chunk_rows)[:m]
-        tv = host["top_vals"].reshape(-1)
-        ti = host["top_idx"].reshape(-1).astype(np.int64)
-        tf = host["top_feats"].reshape(-1, len(FEATURES))
-        if nd > 1:  # local shard index -> chunk row
-            kk = host["top_vals"].shape[-1]
-            ti = ti + np.repeat(np.arange(nd) * block, kk)
-        # padding rows can never reach the top (live=0 forces obj=inf AND
-        # idx >= m); real rows with an inf objective are kept, mirroring
-        # the legacy host reduction which sorts them last rather than
-        # dropping them
-        keep = ti < m
-        for v, i, row in zip(tv[keep], ti[keep], tf[keep]):
-            top_entries.append((float(v), int(sub[i]), row))
-        run.n_valid += int(np.sum(host["n_valid"]))
-        if pareto:
-            mask = host["pareto_mask"].reshape(chunk_rows)[:m]
-            w = np.where(mask)[0]
-            cand_rows.append(sub[w])
-            cand_e.append(host["pareto_energy"].reshape(chunk_rows)[:m][w])
-            cand_t.append(host["pareto_thr"].reshape(chunk_rows)[:m][w])
+        with obs.span("topk-merge", op=op.name, rows=m):
+            if return_vals:
+                vals[sub] = host["vals"].reshape(chunk_rows)[:m]
+            tv = host["top_vals"].reshape(-1)
+            ti = host["top_idx"].reshape(-1).astype(np.int64)
+            tf = host["top_feats"].reshape(-1, len(FEATURES))
+            if nd > 1:  # local shard index -> chunk row
+                kk = host["top_vals"].shape[-1]
+                ti = ti + np.repeat(np.arange(nd) * block, kk)
+            # padding rows can never reach the top (live=0 forces obj=inf
+            # AND idx >= m); real rows with an inf objective are kept,
+            # mirroring the legacy host reduction which sorts them last
+            # rather than dropping them
+            keep = ti < m
+            for v, i, row in zip(tv[keep], ti[keep], tf[keep]):
+                top_entries.append((float(v), int(sub[i]), row))
+            run.n_valid += int(np.sum(host["n_valid"]))
+            if pareto:
+                mask = host["pareto_mask"].reshape(chunk_rows)[:m]
+                w = np.where(mask)[0]
+                cand_rows.append(sub[w])
+                cand_e.append(
+                    host["pareto_energy"].reshape(chunk_rows)[:m][w])
+                cand_t.append(
+                    host["pareto_thr"].reshape(chunk_rows)[:m][w])
 
+    met = obs.metrics()
+    met.inc("gene.rows_evaluated", n)
+    n_compiles_at_entry = run.n_compiles
+    c0 = compile_count()
     for spec, fam in ((spec1, np.where(~is2)[0]),
                       (spec2, np.where(is2)[0])):
         if fam.size == 0:
             continue
         assert spec is not None
+        fam_label = family_label(op, spec)
         chunk_rows = nd * block
         reduce = ReduceSpec(objective=objective, maximize=maximize,
                             k=min(k, chunk_rows), return_vals=return_vals,
@@ -431,34 +480,53 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
         for lo in range(0, fam.size, chunk_rows):
             sub = fam[lo:lo + chunk_rows]
             m = sub.size
-            t0 = time.perf_counter()
-            batch = encode_genes(op, space, genes[sub], spec,
-                                 num_pes=pes[sub], noc_bw=bw[sub])
-            pad = chunk_rows - m
-            live = np.zeros(chunk_rows, np.float32)
-            live[:m] = 1.0
-            batch = {kk: _pad_rows(v, pad) for kk, v in batch.items()}
-            batch["live"] = live
-            if nd > 1:
-                batch = {kk: v.reshape((nd, block) + v.shape[1:])
-                         for kk, v in batch.items()}
-            jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
-            run.encode_s += time.perf_counter() - t0
-            if not is_warm(wk):
+            with obs.span("encode", family=fam_label, rows=m):
                 t0 = time.perf_counter()
-                out = f(jbatch)
-                jax.block_until_ready(out)
-                run.compile_s += time.perf_counter() - t0
-                run.n_compiles += 1
-                warm_once(wk)
+                batch = encode_genes(op, space, genes[sub], spec,
+                                     num_pes=pes[sub], noc_bw=bw[sub])
+                pad = chunk_rows - m
+                live = np.zeros(chunk_rows, np.float32)
+                live[:m] = 1.0
+                batch = {kk: _pad_rows(v, pad) for kk, v in batch.items()}
+                batch["live"] = live
+                if nd > 1:
+                    batch = {kk: v.reshape((nd, block) + v.shape[1:])
+                             for kk, v in batch.items()}
+                jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
+                t_enc = time.perf_counter() - t0
+                run.encode_s += t_enc
+            if pending:
+                # double-buffer overlap, measured not guessed: host
+                # encode time spent while >= 1 chunk was in flight
+                met.inc("gene.overlap_encode_s", t_enc)
+            met.observe("gene.chunk_occupancy", m / chunk_rows)
+            if not is_warm(wk):
+                with obs.span("compile", family=fam_label,
+                              rows=chunk_rows, devices=nd):
+                    t0 = time.perf_counter()
+                    out = f(jbatch)
+                    jax.block_until_ready(out)
+                    dt = time.perf_counter() - t0
+                if warm_once(wk, family=fam_label, seconds=dt):
+                    run.compile_s += dt
+                    run.n_compiles += 1
             else:
-                out = f(jbatch)        # async dispatch
+                met.inc("universal.warm_hits", family=fam_label)
+                with obs.span("dispatch", family=fam_label, rows=m,
+                              devices=nd):
+                    t0 = time.perf_counter()
+                    out = f(jbatch)    # async dispatch
+                    met.observe("gene.dispatch_s",
+                                time.perf_counter() - t0)
                 run.n_steady += m
             pending.append((sub, m, out))
             while len(pending) > depth:
                 collect(*pending.popleft())
         while pending:
             collect(*pending.popleft())
+    # run-local vs process compile accounting cannot drift: both increment
+    # on the same warm_once() event
+    assert compile_count() - c0 == run.n_compiles - n_compiles_at_entry
 
     top_entries.sort(key=lambda e: (e[0], e[1]))
     top = [{"row": r, "value": v, "feats": fr}

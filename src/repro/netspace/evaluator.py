@@ -31,12 +31,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..core.vectorized import (HWTail, ReduceSpec,
                                universal_reduced_evaluator)
 from ..mapspace.search import OBJECTIVES
 from ..mapspace.space import dedupe_equivalent_genes, gene_tables
-from ..mapspace.universal import (GeneRun, _pad_rows, encode_genes_base,
-                                  is_warm, warm_once)
+from ..mapspace.universal import (GeneRun, _pad_rows, compile_count,
+                                  encode_genes_base, is_warm, warm_once)
 from .space import NetSpace
 
 # The per-row feature columns the composer consumes.
@@ -142,10 +143,22 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
     cols = np.empty((n, len(COLS)), np.float64)
     t_start = time.perf_counter()
 
+    met = obs.metrics()
+    met.inc("netspace.rows_evaluated", n)
+    n_compiles_at_entry = run.n_compiles
+    c0 = compile_count()
+
     def collect(sub: np.ndarray, m: int, out: dict) -> None:
-        t0 = time.perf_counter()
-        host = {kk: np.asarray(v) for kk, v in out.items()}
-        run.eval_s += time.perf_counter() - t0
+        # the blocked wait for (and host copy of) this chunk's reduced
+        # device results — the host-visible tail of the device pass
+        with obs.span("device-pass", op=cls.rep.name, rows=m, devices=nd):
+            t0 = time.perf_counter()
+            host = {kk: np.asarray(v) for kk, v in out.items()}
+            dt = time.perf_counter() - t0
+        run.eval_s += dt
+        met.observe("netspace.collect_wait_s", dt)
+        met.inc("netspace.merge_bytes",
+                sum(v.nbytes for v in host.values()))
         chunk_rows = nd * block
         vals[sub] = host["vals"].reshape(chunk_rows)[:m]
         cols[sub] = host["cols"].reshape(chunk_rows, len(COLS))[:m]
@@ -156,6 +169,7 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
         if fam.size == 0:
             continue
         assert spec is not None
+        fam_label = f"{cls.rep.name}:L{2 if spec.cluster else 1}"
         chunk_rows = nd * block
         reduce = ReduceSpec(objective=col, maximize=maximize,
                             k=1, return_vals=True, pareto=False,
@@ -169,28 +183,44 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
         for lo in range(0, fam.size, chunk_rows):
             sub = fam[lo:lo + chunk_rows]
             m = sub.size
-            t0 = time.perf_counter()
-            batch = _encode_rows(ns, cls, uid[sub], genes[sub], spec,
-                                 pes=pes[sub], bw=bw[sub])
-            pad = chunk_rows - m
-            live = np.zeros(chunk_rows, np.float32)
-            live[:m] = 1.0
-            batch = {kk: _pad_rows(v, pad) for kk, v in batch.items()}
-            batch["live"] = live
-            if nd > 1:
-                batch = {kk: v.reshape((nd, block) + v.shape[1:])
-                         for kk, v in batch.items()}
-            jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
-            run.encode_s += time.perf_counter() - t0
-            if not is_warm(wk):
+            with obs.span("encode", family=fam_label, rows=m):
                 t0 = time.perf_counter()
-                out = f(jbatch)
-                jax.block_until_ready(out)
-                run.compile_s += time.perf_counter() - t0
-                run.n_compiles += 1
-                warm_once(wk)
+                batch = _encode_rows(ns, cls, uid[sub], genes[sub], spec,
+                                     pes=pes[sub], bw=bw[sub])
+                pad = chunk_rows - m
+                live = np.zeros(chunk_rows, np.float32)
+                live[:m] = 1.0
+                batch = {kk: _pad_rows(v, pad) for kk, v in batch.items()}
+                batch["live"] = live
+                if nd > 1:
+                    batch = {kk: v.reshape((nd, block) + v.shape[1:])
+                             for kk, v in batch.items()}
+                jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
+                t_enc = time.perf_counter() - t0
+                run.encode_s += t_enc
+            if pending:
+                # double-buffer overlap, measured not guessed: host
+                # encode time spent while >= 1 chunk was in flight
+                met.inc("netspace.overlap_encode_s", t_enc)
+            met.observe("netspace.chunk_occupancy", m / chunk_rows)
+            if not is_warm(wk):
+                with obs.span("compile", family=fam_label,
+                              rows=chunk_rows, devices=nd):
+                    t0 = time.perf_counter()
+                    out = f(jbatch)
+                    jax.block_until_ready(out)
+                    dt = time.perf_counter() - t0
+                if warm_once(wk, family=fam_label, seconds=dt):
+                    run.compile_s += dt
+                    run.n_compiles += 1
             else:
-                out = f(jbatch)        # async dispatch
+                met.inc("universal.warm_hits", family=fam_label)
+                with obs.span("dispatch", family=fam_label, rows=m,
+                              devices=nd):
+                    t0 = time.perf_counter()
+                    out = f(jbatch)    # async dispatch
+                    met.observe("netspace.dispatch_s",
+                                time.perf_counter() - t0)
                 run.n_steady += m
             pending.append((sub, m, out))
             while len(pending) > depth:
@@ -198,6 +228,9 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
         while pending:
             collect(*pending.popleft())
 
+    # run-local vs process compile accounting cannot drift: both increment
+    # on the same warm_once() event
+    assert compile_count() - c0 == run.n_compiles - n_compiles_at_entry
     run.e2e_s += time.perf_counter() - t_start
     return vals, cols
 

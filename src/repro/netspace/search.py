@@ -26,6 +26,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core import dnn_models as zoo
 from ..core.dataflows import TABLE3, table3_for_layer
 from ..core.dse import DSEConfig
@@ -284,17 +285,20 @@ def search_network_impl(model, objective: str = "edp", budget: int = 512,
     names = [op.name for op in layers]
     macs = float(sum(op.total_macs for op in layers))
     t_c = time.perf_counter()
-    if composer == "genetic":
-        schedule, n_trans = compose_genetic(
-            frontiers, _out_vols(layers), ns.fusible, cost_model, names,
-            macs, seed=seed)
-        used = "genetic"
-    else:
-        schedule, n_trans = compose_dp(
-            frontiers, _out_vols(layers), ns.fusible, cost_model, names,
-            macs, max_states=max_states)
-        used = "dp"
+    with obs.span("compose", composer=composer, layers=ns.n_layers):
+        if composer == "genetic":
+            schedule, n_trans = compose_genetic(
+                frontiers, _out_vols(layers), ns.fusible, cost_model,
+                names, macs, seed=seed)
+            used = "genetic"
+        else:
+            schedule, n_trans = compose_dp(
+                frontiers, _out_vols(layers), ns.fusible, cost_model,
+                names, macs, max_states=max_states)
+            used = "dp"
     compose_s = time.perf_counter() - t_c
+    obs.metrics().observe("netspace.compose_s", compose_s)
+    obs.metrics().inc("netspace.transitions", n_trans)
 
     return NetSearchResult(
         objective=objective, strategy=strat, composer=used,
@@ -482,9 +486,11 @@ def co_search_network_impl(model, cfg: DSEConfig | None = None,
             fronts_u.append(_frontier(ns, u, genes, vals, cols, f))
         frontiers = [fronts_u[ns.index[j]] for j in range(ns.n_layers)]
         model_i = dataclasses.replace(ref.model, hw=hw_i)
-        sched, _ = compose_dp(frontiers, _out_vols(ns.layers),
-                              ns.fusible, model_i,
-                              [op.name for op in ns.layers], macs)
+        with obs.span("compose", composer="dp-refine",
+                      layers=ns.n_layers):
+            sched, _ = compose_dp(frontiers, _out_vols(ns.layers),
+                                  ns.fusible, model_i,
+                                  [op.name for op in ns.layers], macs)
         d = design(int(i))
         d.update({"schedule_cost": sched.cost,
                   "schedule_energy_pj": sched.energy_pj

@@ -1,0 +1,34 @@
+"""repro.obs — tracing, metrics, and profiling spine of the search stack.
+
+Three independent, stdlib-only primitives (jax is only touched lazily,
+for provenance and the profiler hook — safe to import from any layer):
+
+  * :func:`span` / :func:`enable_tracing` / :func:`save_trace` — a
+    thread-safe span tracer emitting Chrome/Perfetto ``trace_event``
+    JSON; a no-op singleton when disabled (`trace.py`);
+  * :func:`metrics` — the process-wide typed counter/gauge/histogram
+    registry with a JSON ``snapshot()`` schema (`metrics.py`);
+  * :func:`environment` / :func:`profile_to` — artifact provenance and
+    the opt-in ``jax.profiler`` hook (`env.py`, `profile.py`).
+
+Quick start::
+
+    from repro import obs
+    obs.enable_tracing()
+    ... session.run_many(queries) ...
+    obs.save_trace("trace.json")          # open in ui.perfetto.dev
+    print(obs.metrics().snapshot())
+"""
+from .env import environment
+from .metrics import SNAPSHOT_SCHEMA_VERSION, Metrics, metrics
+from .profile import profile_to
+from .trace import (NULL_SPAN, Tracer, current_tracer, disable_tracing,
+                    enable_tracing, instant, save_trace, span,
+                    tracing_enabled)
+
+__all__ = [
+    "NULL_SPAN", "Metrics", "SNAPSHOT_SCHEMA_VERSION", "Tracer",
+    "current_tracer", "disable_tracing", "enable_tracing", "environment",
+    "instant", "metrics", "profile_to", "save_trace", "span",
+    "tracing_enabled",
+]

@@ -1,0 +1,57 @@
+"""Environment provenance: what produced this artifact?
+
+BENCH_* numbers are only comparable across machines when the artifact
+records what produced them — jax/jaxlib versions, backend, device
+kind/count, host, git SHA.  ``environment()`` gathers that once per
+process; ``Report.bench`` and trace files embed it.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import socket
+import subprocess
+from typing import Any
+
+__all__ = ["environment"]
+
+_ENV: dict[str, Any] | None = None
+
+
+def _git_sha() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def environment() -> dict[str, Any]:
+    """Provenance block for artifacts (computed once per process).
+
+    Returns a fresh copy each call so callers can't corrupt the cache."""
+    global _ENV
+    if _ENV is None:
+        env: dict[str, Any] = {
+            "hostname": socket.gethostname(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "git_sha": _git_sha(),
+        }
+        try:
+            import jax
+            import jaxlib
+            env["jax"] = jax.__version__
+            env["jaxlib"] = jaxlib.__version__
+            env["backend"] = jax.default_backend()
+            devs = jax.devices()
+            env["device_kind"] = devs[0].device_kind if devs else None
+            env["device_count"] = jax.local_device_count()
+        except Exception:  # pragma: no cover - jax is a hard dep in-repo
+            env["jax"] = None
+        _ENV = env
+    return dict(_ENV)

@@ -1,0 +1,143 @@
+"""Typed counters, gauges, and histograms for the search stack.
+
+One process-wide :class:`Metrics` registry (``metrics()``) collects the
+quantities the engine already *computes* but never *kept*: compiles per
+(op-class, level-count) family, warm-executable and result-cache
+hit/miss, genes evaluated, chunk occupancy, per-device dispatch time,
+bytes shipped across the top-k merge.  Everything is thread-safe and
+cheap (a dict update under a lock, at chunk — not row — granularity).
+
+``snapshot()`` returns a plain JSON-serializable dict with its own
+schema version; ``Report.bench`` and the query CLI embed it in BENCH_*
+artifacts and ``--out`` payloads so CI asserts budgets from ONE
+structured snapshot instead of grepping stdout.
+
+Label convention: a metric instance is keyed ``name[k=v,...]`` with
+labels sorted, e.g. ``universal.compiles_by_family[family=conv1:L2]``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+__all__ = ["Metrics", "SNAPSHOT_SCHEMA_VERSION", "metrics"]
+
+# Version of the dict layout returned by ``Metrics.snapshot``.
+SNAPSHOT_SCHEMA_VERSION = 1
+
+
+def _key(name: str, labels: dict[str, Any]) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}[{inner}]"
+
+
+class _Hist:
+    """Streaming summary of one histogram: count/total/min/max."""
+    __slots__ = ("count", "total", "min", "max")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def summary(self) -> dict[str, float]:
+        return {"count": self.count, "total": self.total,
+                "min": self.min if self.count else 0.0,
+                "max": self.max if self.count else 0.0,
+                "mean": (self.total / self.count) if self.count else 0.0}
+
+
+class Metrics:
+    """Thread-safe registry of counters (monotonic), gauges (last value),
+    and histograms (streaming count/total/min/max/mean)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._hists: dict[str, _Hist] = {}
+
+    # -- counters ------------------------------------------------------
+
+    def inc(self, name: str, value: float = 1.0, **labels: Any) -> float:
+        """Add ``value`` to a counter; returns the new total."""
+        k = _key(name, labels)
+        with self._lock:
+            v = self._counters.get(k, 0.0) + value
+            self._counters[k] = v
+        return v
+
+    def value(self, name: str, **labels: Any) -> float:
+        """Current counter total (0.0 when never incremented)."""
+        with self._lock:
+            return self._counters.get(_key(name, labels), 0.0)
+
+    def counters(self, prefix: str = "") -> dict[str, float]:
+        """Counters whose key starts with ``prefix`` (all by default)."""
+        with self._lock:
+            return {k: v for k, v in self._counters.items()
+                    if k.startswith(prefix)}
+
+    # -- gauges --------------------------------------------------------
+
+    def gauge(self, name: str, value: float, **labels: Any) -> None:
+        with self._lock:
+            self._gauges[_key(name, labels)] = value
+
+    # -- histograms ----------------------------------------------------
+
+    def observe(self, name: str, value: float, **labels: Any) -> None:
+        k = _key(name, labels)
+        with self._lock:
+            h = self._hists.get(k)
+            if h is None:
+                h = self._hists[k] = _Hist()
+            h.observe(float(value))
+
+    # -- snapshot ------------------------------------------------------
+
+    def snapshot(self) -> dict[str, Any]:
+        """JSON-serializable view of every metric.  Counters that hold
+        integral totals serialize as ints so ``==`` asserts in CI read
+        naturally."""
+        with self._lock:
+            counters = {k: (int(v) if float(v).is_integer() else v)
+                        for k, v in sorted(self._counters.items())}
+            gauges = dict(sorted(self._gauges.items()))
+            hists = {k: h.summary()
+                     for k, h in sorted(self._hists.items())}
+        return {"schema_version": SNAPSHOT_SCHEMA_VERSION,
+                "counters": counters, "gauges": gauges,
+                "histograms": hists}
+
+    def reset(self) -> None:
+        """Drop every metric.  Test-only: the process registry backs
+        ``universal.compile_count()``, whose parity with the warmed-key
+        set must hold for the life of the process — never reset the
+        global registry outside an isolated test ``Metrics()``."""
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._hists.clear()
+
+
+# Process-wide registry.  Always on: recording a counter is a dict update
+# under a lock, at chunk granularity — there is no "disabled" mode to
+# keep semantics (e.g. compile_count parity) unconditional.
+_METRICS = Metrics()
+
+
+def metrics() -> Metrics:
+    """The process-wide metrics registry."""
+    return _METRICS

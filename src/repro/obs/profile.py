@@ -1,0 +1,39 @@
+"""Opt-in ``jax.profiler`` hook.
+
+The span tracer times host-side phases; when the question is *inside*
+the device pass (fusion, layout, HLO-level time), wrap the region in
+``obs.profile_to(log_dir)`` and open the resulting TensorBoard/Perfetto
+dump.  Best-effort: profiling failures (unsupported backend, nested
+trace) never break the run.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+
+__all__ = ["profile_to"]
+
+LOG = logging.getLogger("repro.obs")
+
+
+@contextlib.contextmanager
+def profile_to(log_dir: str):
+    """Record a ``jax.profiler`` trace of the wrapped region into
+    ``log_dir`` (viewable in TensorBoard or Perfetto)."""
+    import jax
+
+    started = False
+    try:
+        jax.profiler.start_trace(str(log_dir))
+        started = True
+    except Exception as e:  # pragma: no cover - backend-dependent
+        LOG.warning("jax profiler unavailable: %s", e)
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+                LOG.info("wrote jax profile to %s", log_dir)
+            except Exception as e:  # pragma: no cover
+                LOG.warning("jax profiler stop failed: %s", e)

@@ -1,0 +1,282 @@
+"""Tests for the observability spine (``repro.obs``).
+
+Load-bearing properties:
+
+  * the disabled-tracer fast path allocates NOTHING — ``obs.span()``
+    returns the one shared :data:`NULL_SPAN` singleton, so the hot
+    paths can call it unconditionally;
+  * the tracer is thread-safe and its output is a valid Chrome
+    ``trace_event`` document (loads in chrome://tracing / Perfetto);
+  * the metrics snapshot JSON round-trips exactly;
+  * compile accounting has ONE writer: ``universal.compile_count()``,
+    the per-family counters, and the engine's run-local ``n_compiles``
+    all agree — and a cold coalesced ``Session.run_many`` batch records
+    exactly ``n_families`` compile spans;
+  * every ``Report.bench`` artifact carries the environment provenance
+    block (schema_version 2).
+"""
+import json
+import threading
+
+import pytest
+
+from repro import obs
+from repro.api import Hardware, Query, Report, SearchSpec, Session, \
+    Workload
+from repro.core import tensor_analysis as ta
+from repro.mapspace.universal import compile_count
+from repro.obs.metrics import Metrics
+from repro.obs.trace import NULL_SPAN, Tracer
+
+
+@pytest.fixture
+def tracer():
+    """A fresh process tracer, always uninstalled on exit."""
+    obs.disable_tracing()
+    t = obs.enable_tracing()
+    yield t
+    obs.disable_tracing()
+
+
+# ----------------------------------------------------------------------
+# Disabled mode: the zero-allocation fast path
+# ----------------------------------------------------------------------
+
+def test_disabled_span_is_the_shared_singleton():
+    obs.disable_tracing()
+    assert not obs.tracing_enabled()
+    a = obs.span("compile", family="x:L1")
+    b = obs.span("device-pass", rows=4096)
+    assert a is b is NULL_SPAN          # zero allocation per call
+    with a as s:
+        s.set(discovered="late")        # no-op, must not raise
+    assert obs.save_trace("/nonexistent/never-written.json") is None
+    obs.instant("marker")               # no-op, must not raise
+
+
+# ----------------------------------------------------------------------
+# Enabled mode: spans, nesting, threads, instants
+# ----------------------------------------------------------------------
+
+def test_span_nesting_records_complete_events(tracer):
+    with obs.span("outer", kind="t"):
+        with obs.span("inner", family="conv:L1") as s:
+            s.set(rows=128)
+    evs = tracer.spans()
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # close order
+    inner, outer = evs
+    assert inner["ph"] == outer["ph"] == "X"
+    assert inner["args"] == {"family": "conv:L1", "rows": 128}
+    # the inner span lies inside the outer one on the timeline
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert inner["pid"] == outer["pid"]
+
+
+def test_tracer_thread_safety(tracer):
+    n_threads, n_spans = 8, 50
+    # hold every thread at the line until all exist: finished threads'
+    # idents get recycled, which would collapse the tid count
+    gate = threading.Barrier(n_threads)
+
+    def work():
+        gate.wait()
+        for i in range(n_spans):
+            with obs.span("work", i=i):
+                pass
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    evs = tracer.spans("work")
+    assert len(evs) == n_threads * n_spans       # nothing lost or torn
+    assert len({e["tid"] for e in evs}) == n_threads  # own timeline rows
+
+
+def test_instant_event(tracer):
+    obs.instant("query", kind="layer", id="deadbeef")
+    evs = [e for e in tracer.events() if e["ph"] == "i"]
+    assert len(evs) == 1
+    assert evs[0]["name"] == "query"
+    assert evs[0]["args"]["id"] == "deadbeef"
+
+
+def test_trace_file_is_valid_chrome_trace_event_json(tmp_path, tracer):
+    with obs.span("compile", family="gemm:L1"):
+        pass
+    obs.instant("marker")
+    path = obs.save_trace(str(tmp_path / "sub" / "trace.json"))
+    doc = json.load(open(path))
+    # the Chrome trace_event container format
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    assert doc["displayTimeUnit"] == "ms"
+    for ev in doc["traceEvents"]:
+        assert ev["ph"] in ("X", "i")
+        assert isinstance(ev["name"], str)
+        assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+    # environment provenance rides in otherData
+    assert doc["otherData"]["backend"]
+    assert doc["otherData"]["jax"]
+
+
+# ----------------------------------------------------------------------
+# Metrics registry
+# ----------------------------------------------------------------------
+
+def test_metrics_snapshot_json_round_trip():
+    m = Metrics()                       # isolated, NOT the process one
+    m.inc("universal.compiles")
+    m.inc("universal.compiles_by_family", family="conv1:L2")
+    m.inc("gene.rows_evaluated", 4096)
+    m.inc("universal.compile_s", 0.25)
+    m.gauge("devices", 4)
+    m.observe("gene.chunk_occupancy", 1.0)
+    m.observe("gene.chunk_occupancy", 0.5)
+    snap = m.snapshot()
+    assert snap == json.loads(json.dumps(snap))      # JSON round trip
+    c = snap["counters"]
+    # integral totals serialize as ints, fractional ones as floats
+    assert c["universal.compiles"] == 1
+    assert isinstance(c["universal.compiles"], int)
+    assert c["universal.compiles_by_family[family=conv1:L2]"] == 1
+    assert c["gene.rows_evaluated"] == 4096
+    assert c["universal.compile_s"] == 0.25
+    assert snap["gauges"]["devices"] == 4
+    h = snap["histograms"]["gene.chunk_occupancy"]
+    assert h["count"] == 2 and h["min"] == 0.5 and h["max"] == 1.0
+    assert h["mean"] == pytest.approx(0.75)
+    assert snap["schema_version"] == obs.SNAPSHOT_SCHEMA_VERSION
+
+
+def test_metrics_label_keys_sorted_and_queryable():
+    m = Metrics()
+    m.inc("d.t", 2.0, b="y", a="x")
+    assert "d.t[a=x,b=y]" in m.counters()
+    assert m.value("d.t", a="x", b="y") == 2.0
+    assert m.value("d.t") == 0.0                 # unlabeled is distinct
+    assert m.counters("d.") == {"d.t[a=x,b=y]": 2.0}
+
+
+def test_metrics_inc_thread_safety():
+    m = Metrics()
+
+    def work():
+        for _ in range(200):
+            m.inc("n")
+
+    threads = [threading.Thread(target=work) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert m.value("n") == 8 * 200
+
+
+# ----------------------------------------------------------------------
+# Environment provenance + Report.bench schema v2
+# ----------------------------------------------------------------------
+
+def test_environment_block():
+    env = obs.environment()
+    for k in ("hostname", "python", "jax", "jaxlib", "backend",
+              "device_kind", "device_count"):
+        assert k in env, k
+    assert env["device_count"] >= 1
+    env["backend"] = "tampered"
+    assert obs.environment()["backend"] != "tampered"   # returns a copy
+
+
+def test_report_bench_carries_provenance():
+    doc = Report.bench("t", {"x": 1, "n_evaluated": 7}).to_json()
+    assert doc["schema_version"] == 2
+    assert doc["x"] == 1 and doc["n_evaluated"] == 7
+    assert doc["environment"]["backend"]
+    # an explicit environment key wins (payload overrides the default)
+    doc2 = Report.bench("t", {"environment": {"backend": "pinned"}})
+    assert doc2.to_json()["environment"] == {"backend": "pinned"}
+
+
+def test_profile_to_smoke(tmp_path):
+    import jax.numpy as jnp
+    with obs.profile_to(str(tmp_path / "prof")):
+        jnp.arange(8).sum().block_until_ready()
+    # best-effort: must never raise, whether or not the profiler wrote
+
+
+# ----------------------------------------------------------------------
+# The hot path: compile accounting parity + span regression
+# ----------------------------------------------------------------------
+
+def _cold_queries():
+    """Layer shapes unique to this test (and a block size used nowhere
+    else) so the family executables are guaranteed cold even when the
+    whole suite runs in one process."""
+    ops = [
+        ta.conv2d("obs-conv1", k=10, c=6, y=14, x=14, r=3, s=3),
+        ta.conv2d("obs-conv2", k=6, c=10, y=11, x=11, r=3, s=3),
+        ta.gemm("obs-gemm1", m=12, n=40, k=24),
+    ]
+    return [Query(Workload.of_layer(op),
+                  Hardware(num_pes=56, noc_bw=14.0),
+                  SearchSpec(objective="edp", budget=48,
+                             strategy="random", block=96, top_k=3))
+            for op in ops]
+
+
+def test_run_many_records_exactly_n_families_compile_spans(tracer):
+    session = Session()
+    c0 = compile_count()
+    reports = session.run_many(_cold_queries())
+    assert len(reports) == 3
+    batch = session.last_batch
+    n_fam = batch["n_families"]
+    assert n_fam >= 2                     # conv + gemm classes at least
+
+    # the regression: one compile span per family, no more, no less
+    spans = tracer.spans("compile")
+    assert len(spans) == n_fam, \
+        (len(spans), n_fam, [s.get("args") for s in spans])
+    fams = [s["args"]["family"] for s in spans]
+    assert len(set(fams)) == n_fam        # one per DISTINCT family
+
+    # and the three accountings agree: trace, batch stats, obs counter
+    assert batch["n_compiles"] == n_fam
+    assert compile_count() - c0 == n_fam
+    for fam in fams:
+        assert obs.metrics().value("universal.compiles_by_family",
+                                   family=fam) >= 1
+    # the timeline carries the whole batch story
+    assert len(tracer.spans("run_many")) == 1
+    assert tracer.spans("coalesce")
+    assert tracer.spans("device-pass")
+    assert any(e["name"] == "query" for e in tracer.events())
+
+
+def test_compile_count_parity_with_family_counters():
+    # process-lifetime invariant, checked after real work has run: the
+    # single-writer design makes the total equal the per-family sum
+    met = obs.metrics()
+    total = met.value("universal.compiles")
+    by_family = met.counters("universal.compiles_by_family[")
+    assert int(total) == compile_count()
+    assert int(total) == int(sum(by_family.values()))
+
+
+def test_session_metrics_accessor():
+    session = Session()
+    q = Query(Workload.of_layer(
+        ta.conv2d("obs-conv3", k=8, c=6, y=10, x=10, r=3, s=3)),
+        Hardware(num_pes=56, noc_bw=14.0),
+        SearchSpec(objective="edp", budget=32, strategy="random",
+                   block=96))
+    session.run(q)
+    snap = session.metrics()
+    assert snap["schema_version"] == obs.SNAPSHOT_SCHEMA_VERSION
+    assert snap["counters"]["session.queries"] >= 1
+    assert snap["session"]["n_queries"] == 1
+    assert snap == json.loads(json.dumps(snap))      # serializable
