@@ -17,16 +17,20 @@ python -m pytest -x -q \
     tests/test_genes.py \
     tests/test_netspace.py \
     tests/test_api.py \
-    tests/test_obs.py
+    tests/test_obs.py \
+    tests/test_resilience.py
 
 echo "== 4-host-device sharded smoke =="
 # The gene pipeline stripes chunks over all local devices; forcing four
 # host CPU devices exercises the pmap path and the 1-vs-N-device
 # determinism assertions inside tests/test_genes.py, tests/test_netspace.py
 # and tests/test_api.py (coalesced run_many) for real.
+# tests/test_resilience.py rides along so kill-and-resume bit-identity
+# is asserted at 4 devices too (its kill/resume test parametrizes over
+# the available device count).
 XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m pytest -x -q tests/test_genes.py tests/test_netspace.py \
-    tests/test_api.py
+    tests/test_api.py tests/test_resilience.py
 
 echo "== small-budget netsearch smoke =="
 # End-to-end network schedule search through the CLI shim: VGG16 at a
@@ -98,6 +102,65 @@ assert n_compile_spans == b["n_compiles"], \
 print(f"trace OK: {len(evs)} events, {n_compile_spans} compile spans")
 EOF
 
+echo "== fault-injection kill/resume smoke =="
+# The resilience headline, end to end through the CLI: a batch run is
+# killed mid-chunk by deterministic fault injection, the re-launch with
+# the same flags resumes from the sweep checkpoint, and the resumed
+# reports are BIT-IDENTICAL to an undisturbed reference run.  The
+# resilience.* recovery counters are asserted from the structured --out
+# payload, not grepped from logs.
+RES_OUT=benchmarks/out
+RES_CKPT="$RES_OUT/resilience_ckpt"
+rm -rf "$RES_CKPT"
+mkdir -p "$RES_OUT"
+cat > "$RES_OUT/resilience_queries.json" <<'EOF'
+[
+  {"workload": {"op": {"type": "conv2d", "name": "r-conv1",
+                       "k": 8, "c": 6, "y": 12, "x": 12, "r": 3, "s": 3}},
+   "hardware": {"num_pes": 48, "noc_bw": 12.0},
+   "search": {"budget": 96, "block": 32, "strategy": "random", "seed": 3}},
+  {"workload": {"op": {"type": "conv2d", "name": "r-conv2",
+                       "k": 16, "c": 8, "y": 10, "x": 10, "r": 3, "s": 3}},
+   "hardware": {"num_pes": 48, "noc_bw": 12.0},
+   "search": {"budget": 64, "block": 32, "strategy": "random", "seed": 1}}
+]
+EOF
+python -m repro.launch.query --file "$RES_OUT/resilience_queries.json" \
+    --out "$RES_OUT/resilience_ref.json" --cache-dir '' --jax-cache-dir ''
+if python -m repro.launch.query --file "$RES_OUT/resilience_queries.json" \
+    --checkpoint-dir "$RES_CKPT" --faults kill@chunk:1 \
+    --cache-dir '' --jax-cache-dir '' 2> "$RES_OUT/resilience_kill.log"
+then
+    echo "FAIL: injected kill@chunk:1 did not kill the sweep"
+    exit 1
+fi
+grep -q SweepKilled "$RES_OUT/resilience_kill.log"
+ls "$RES_CKPT"/sweep-batch-*.npz > /dev/null   # checkpoint survived
+python -m repro.launch.query --file "$RES_OUT/resilience_queries.json" \
+    --checkpoint-dir "$RES_CKPT" \
+    --out "$RES_OUT/resilience_resumed.json" --cache-dir '' \
+    --jax-cache-dir ''
+python - <<'EOF'
+import json
+DET = ("kind", "name", "objective", "strategy", "best", "top_k",
+       "pareto", "n_evaluated")
+ref = json.load(open("benchmarks/out/resilience_ref.json"))
+res = json.load(open("benchmarks/out/resilience_resumed.json"))
+for a, b in zip(ref["reports"], res["reports"]):
+    for k in DET:
+        assert a.get(k) == b.get(k), (k, a.get(k), b.get(k))
+c = res["metrics"]["counters"]
+assert c.get("resilience.checkpoint_resumes", 0) >= 1, c
+assert c.get("resilience.checkpoint_saves", 0) >= 1, c
+print("kill/resume bit-identical across process restarts; "
+      f"resumes={c['resilience.checkpoint_resumes']}")
+EOF
+# a completed sweep clears its checkpoint
+if ls "$RES_CKPT"/sweep-*.npz 2>/dev/null; then
+    echo "FAIL: checkpoint not cleared after completed resume"
+    exit 1
+fi
+
 echo "== benchmarks --quick =="
 python -m benchmarks.run --quick
 
@@ -122,6 +185,11 @@ assert d["universal_compiles_process"] <= d["compile_budget"], \
      "compile count must stay O(1) per (layer, level-count), not O(groups)")
 # the gene pipeline must beat the legacy tuple-point path end to end
 assert d["e2e_speedup_vs_legacy"] >= 1.0, d["e2e_speedup_vs_legacy"]
+# checkpointing the headline search must cost <= 5% of its wall time,
+# and the checkpointed run must reproduce the uncheckpointed answer
+assert d["checkpoint_overhead_frac"] <= 0.05, d["checkpoint_overhead_frac"]
+assert d["checkpoint"]["deterministic"] is True, d["checkpoint"]
+assert d["checkpoint"]["saves"] >= 1, d["checkpoint"]
 # every BENCH artifact ships the obs metrics snapshot + environment
 # provenance (schema_version 2)
 assert d["schema_version"] == 2, d["schema_version"]

@@ -43,7 +43,7 @@ class Report:
     schema.  ``raw`` keeps the engine-native result object for callers
     that need the full dataclass (never serialized)."""
     kind: str                          # layer | layer_codse | network |
-    #                                    network_codse | bench
+    #                                    network_codse | bench | error
     name: str = ""                     # workload / bench label
     objective: str = ""
     strategy: str = ""
@@ -115,6 +115,21 @@ class Report:
         payload.setdefault("environment", obs.environment())
         kw = {f: payload.pop(f) for f in _RESERVED[3:] if f in payload}
         return Report(kind="bench", name=name, **kw, extras=payload)
+
+    @staticmethod
+    def from_error(query: Query, err: BaseException) -> "Report":
+        """An isolated failure in a batch: ``run_many`` degrades a
+        poisoned coalesced pass to per-query execution and answers the
+        queries that still fail with an ``error``-kind report instead of
+        poisoning the whole batch."""
+        msg = str(err).strip().splitlines()[0] if str(err).strip() else ""
+        return Report(
+            kind="error", objective=query.search.objective,
+            query=query.describe(), tag=query.tag,
+            extras={"error": {"type": type(err).__name__,
+                              "message": msg,
+                              "details": _jsonable(
+                                  getattr(err, "details", {}))}})
 
     @staticmethod
     def from_search(r, query: Query | None = None) -> "Report":

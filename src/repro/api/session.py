@@ -22,6 +22,8 @@ different fixed designs still share one executable.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import logging
 import time
 from typing import Any, Sequence
 
@@ -30,8 +32,13 @@ import numpy as np
 from .. import obs
 from ..core import dnn_models as zoo
 from ..core.tensor_analysis import LayerOp
+from ..resilience import (DeviceError, ReproError, ResilienceConfig,
+                          SpecError, SweepCheckpoint, SweepKilled,
+                          classify)
 from .report import Report
 from .spec import Hardware, Query, SearchSpec, Workload
+
+LOG = logging.getLogger("repro.resilience")
 
 # Objective value from the composer columns (canonical minimize);
 # throughput needs the layer's MAC count.
@@ -112,13 +119,22 @@ class Session:
 
     def __init__(self, *, cache_dir: str | None = None,
                  jax_cache_dir: str | None = None,
-                 devices: int | None = None):
+                 devices: int | None = None,
+                 resilience: ResilienceConfig | None = None):
         import os
         expand = lambda p: os.path.expanduser(p) if p else p
         self.cache_dir = expand(cache_dir)
         jax_cache_dir = expand(jax_cache_dir)
         self.jax_cache_dir = jax_cache_dir
         self.devices = devices
+        self.resilience = resilience or ResilienceConfig()
+        if resilience is not None:
+            # explicit config: install its fault spec + retry policy
+            # process-wide (the chunk loops read the installed policy)
+            self.resilience.install()
+        if self.resilience.ckpt_dir:
+            self.resilience = dataclasses.replace(
+                self.resilience, ckpt_dir=expand(self.resilience.ckpt_dir))
         self.n_queries = 0
         self.last_batch: dict[str, Any] | None = None
         self._queue: list[tuple[Query, PendingReport]] = []
@@ -133,7 +149,15 @@ class Session:
 
     def run(self, query: Query) -> Report:
         """Route one query to its engine and answer in the unified
-        :class:`Report` schema."""
+        :class:`Report` schema.
+
+        This is the error boundary of the front door: any engine
+        failure surfaces as a one-line :class:`~.resilience.ReproError`
+        (``SpecError`` / ``DeviceError`` / ``CacheError``) instead of a
+        deep XLA traceback, and — with ``resilience.degrade`` (the
+        default) — a layer query whose gene pipeline keeps failing is
+        re-answered by the legacy tuple-point engine with a
+        ``degraded`` extras block rather than failing."""
         kind = query.kind
         self.n_queries += 1
         met = obs.metrics()
@@ -143,15 +167,47 @@ class Session:
         # tracer is live; span() itself is a no-op singleton otherwise)
         fp = query.fingerprint() if obs.tracing_enabled() else None
         with obs.span("query", kind=kind, id=fp):
-            if kind == "layer":
-                return self._run_layer(query)
-            if kind == "layer_codse":
-                return self._run_layer_codse(query)
-            if kind == "network":
-                return self._run_network(query)
-            if kind == "network_codse":
-                return self._run_network_codse(query)
-            raise ValueError(f"unroutable query kind {kind!r}")
+            try:
+                return self._route(kind, query)
+            except SweepKilled:
+                raise              # injected process death: must escape
+            except Exception as e:  # noqa: BLE001 — classified here
+                err = classify(e, context=f"{kind} query")
+                if (self.resilience.degrade and kind == "layer"
+                        and query.search.pipeline == "gene"
+                        and isinstance(err, DeviceError)):
+                    return self._degrade_layer(query, err)
+                if err is e:
+                    raise
+                raise err from e
+
+    def _route(self, kind: str, query: Query) -> Report:
+        if kind == "layer":
+            return self._run_layer(query)
+        if kind == "layer_codse":
+            return self._run_layer_codse(query)
+        if kind == "network":
+            return self._run_network(query)
+        if kind == "network_codse":
+            return self._run_network_codse(query)
+        raise SpecError(f"unroutable query kind {kind!r}",
+                        field="workload")
+
+    def _degrade_layer(self, query: Query, err: ReproError) -> Report:
+        """Persistent gene-pipeline failure: answer through the legacy
+        tuple-point engine instead of failing the query; the report says
+        so in ``extras['degraded']``."""
+        obs.metrics().inc("resilience.degraded_queries")
+        obs.instant("degraded", kind="layer", error=type(err).__name__)
+        LOG.warning("gene pipeline failed (%s) — degrading query to the "
+                    "legacy engine", err.one_line())
+        legacy = dataclasses.replace(
+            query,
+            search=dataclasses.replace(query.search, pipeline="legacy"))
+        rep = self._run_layer(legacy)
+        rep.extras["degraded"] = {"from": "gene", "to": "legacy",
+                                  "error": err.one_line()}
+        return rep
 
     def metrics(self) -> dict[str, Any]:
         """The process-wide obs metrics snapshot plus this session's own
@@ -200,7 +256,7 @@ class Session:
             pipeline=sp.pipeline, multicast=sp.multicast,
             spatial_reduction=sp.spatial_reduction,
             l1_budget_kb=sp.l1_prune_kb, l2_budget_kb=sp.l2_prune_kb,
-            devices=self.devices)
+            devices=self.devices, ckpt_dir=self.resilience.ckpt_dir)
 
     def _layer_space(self, query: Query, op: LayerOp):
         sp = query.search
@@ -226,7 +282,8 @@ class Session:
         hw = query.hardware
         (op,) = query.workload.resolve()
         kw = self._layer_search_kwargs(query)
-        for k in ("objective", "budget", "num_pes", "noc_bw", "seed"):
+        for k in ("objective", "budget", "num_pes", "noc_bw", "seed",
+                  "ckpt_dir"):
             kw.pop(k)
         co = co_search_impl(
             op, objective=sp.objective, mapping_budget=sp.budget,
@@ -234,6 +291,7 @@ class Session:
             num_pes=hw.num_pes, noc_bw=hw.noc_bw, seed=sp.seed,
             space=self._layer_space(query, op),
             cache_dir=self.cache_dir, joint_genes=sp.joint_genes,
+            ckpt_dir=self.resilience.ckpt_dir,
             cache_extra=query.fingerprint(), search_kwargs=kw)
         rep = Report.from_codse(co, query)
         rep.name = op.name
@@ -243,9 +301,10 @@ class Session:
         sp = query.search
         hw = query.hardware
         if sp.strategy not in ("auto", "exhaustive", "random"):
-            raise ValueError(
+            raise SpecError(
                 f"network queries need a one-pass strategy "
-                f"(auto/exhaustive/random), got {sp.strategy!r}")
+                f"(auto/exhaustive/random), got {sp.strategy!r}",
+                field="strategy")
         return dict(
             objective=sp.objective, budget=sp.budget, seed=sp.seed,
             strategy=sp.strategy, frontier_k=sp.frontier_k,
@@ -359,9 +418,17 @@ class Session:
             compile_s = eval_s = encode_s = 0.0
             n_devices = 1
             for settings, idxs in coal.items():
-                out = self._run_family_batch(
-                    [queries[i] for i in idxs], settings,
-                    coalesce=coalesce)
+                members = [queries[i] for i in idxs]
+                try:
+                    out = self._run_family_batch(members, settings,
+                                                 coalesce=coalesce)
+                except SweepKilled:
+                    raise          # injected process death: must escape
+                except Exception as e:  # noqa: BLE001 — isolated below
+                    if not self.resilience.degrade:
+                        raise classify(e, context="coalesced batch") \
+                            from e
+                    out = self._isolate_batch(members, e)
                 for i, rep in zip(idxs, out["reports"]):
                     reports[i] = rep
                 n_compiles += out["n_compiles"]
@@ -399,6 +466,52 @@ class Session:
         if rep.kind == "network":
             return 2 * n_classes
         return 4 * n_classes           # network_codse: ref + grid pass
+
+    def _isolate_batch(self, queries: list[Query],
+                       exc: BaseException) -> dict[str, Any]:
+        """A coalesced device pass failed: degrade the batch to
+        per-query sequential execution so one poisoned query cannot take
+        down its neighbours.  Queries that STILL fail answer as
+        ``error``-kind reports (the rest get normal single-query
+        answers — note those search ``build_space(op)``, not the shared
+        family space)."""
+        err = classify(exc, context="coalesced batch")
+        obs.metrics().inc("resilience.batch_degraded")
+        obs.instant("batch-degraded", queries=len(queries),
+                    error=type(err).__name__)
+        LOG.warning("coalesced batch failed (%s) — degrading to "
+                    "per-query sequential execution", err.one_line())
+        reports: list[Report] = []
+        n_compiles = 0
+        n_devices = 1
+        for q in queries:
+            try:
+                rep = self.run(q)
+                n_compiles += rep.n_compiles
+                n_devices = max(n_devices, rep.n_devices)
+            except SweepKilled:
+                raise
+            except Exception as qe:  # noqa: BLE001 — isolated per query
+                rep = Report.from_error(q, classify(qe, context="query"))
+            reports.append(rep)
+        return {"reports": reports, "n_compiles": n_compiles,
+                "n_families": 0, "compile_s": 0.0, "eval_s": 0.0,
+                "encode_s": 0.0, "n_devices": n_devices}
+
+    def _batch_ckpt(self, queries: list[Query],
+                    grp: list[int]) -> SweepCheckpoint | None:
+        """Sweep checkpoint for one coalesced family job, keyed by the
+        member queries' fingerprints (stable across a re-run of the same
+        batch, so a killed flush resumes bit-identically)."""
+        if not self.resilience.ckpt_dir:
+            return None
+        key = hashlib.sha256("|".join(
+            queries[qi].fingerprint() for qi in grp).encode()
+        ).hexdigest()[:16]
+        # save after every chunk: the state is tiny (top-k + frontier
+        # candidates), and a killed flush then loses at most one chunk
+        return SweepCheckpoint(self.resilience.ckpt_dir, f"batch-{key}",
+                               every_chunks=1)
 
     def _run_family_batch(self, queries: list[Query], settings: tuple,
                           *, coalesce: bool) -> dict[str, Any]:
@@ -473,7 +586,8 @@ class Session:
                     ns, uid, genes, objective="edp", num_pes=pes,
                     noc_bw=bw, block=block, n_devices=self.devices,
                     multicast=multicast,
-                    spatial_reduction=spatial_reduction, run=run)
+                    spatial_reduction=spatial_reduction, run=run,
+                    ckpt=self._batch_ckpt(queries, grp))
                 at = 0
                 for qi in grp:
                     m = cand[qi].shape[0]

@@ -29,6 +29,38 @@ from ..core.tensor_analysis import LayerOp
 # invalidates disk-cached results (it is baked into every
 # ``mapspace.cache.search_key`` AND every query fingerprint).
 from ..mapspace.cache import ENGINE_SCHEMA_VERSION as SCHEMA_VERSION
+from ..resilience.errors import SpecError
+
+# Valid enum fields, restated as literals so constructing a Query never
+# imports the jax-heavy engine modules (mapspace.search asserts it
+# agrees — see test_resilience).
+VALID_OBJECTIVES = ("edp", "energy", "runtime", "throughput")
+VALID_STRATEGIES = ("auto", "exhaustive", "random", "greedy", "genetic")
+VALID_PIPELINES = ("gene", "legacy")
+VALID_BUDGET_POLICIES = ("adaptive", "uniform")
+
+
+def _check_enum(value: str, valid: Sequence[str], field: str) -> None:
+    if value not in valid:
+        raise SpecError(f"{field} must be one of {sorted(valid)}, "
+                        f"got {value!r}", field=field)
+
+
+def _check_min(value, lo, field: str) -> None:
+    if value is not None and not value >= lo:
+        raise SpecError(f"{field} must be >= {lo}, got {value!r}",
+                        field=field)
+
+
+def _check_range(rng: Sequence | None, lo, field: str) -> None:
+    if rng is None:
+        return
+    if len(rng) == 0:
+        raise SpecError(f"{field} must be non-empty", field=field)
+    bad = [v for v in rng if not v >= lo]
+    if bad:
+        raise SpecError(f"{field} entries must be >= {lo}, got {bad}",
+                        field=field)
 
 # LayerOp constructors reachable from query JSON ({"type": ..., ...}).
 OP_BUILDERS = {
@@ -48,13 +80,16 @@ def op_from_json(d: dict[str, Any]) -> LayerOp:
     """Build a :class:`LayerOp` from a query-JSON op dict:
     ``{"type": "conv2d", "name": ..., "k": ..., ...}``."""
     d = dict(d)
-    kind = d.pop("type")
+    kind = d.pop("type", None)
     if kind not in OP_BUILDERS:
-        raise ValueError(f"unknown op type {kind!r}; "
-                         f"one of {sorted(OP_BUILDERS)}")
+        raise SpecError(f"unknown op type {kind!r}; "
+                        f"one of {sorted(OP_BUILDERS)}", field="type")
     d.setdefault("name", kind)
     name = d.pop("name")
-    return OP_BUILDERS[kind](name, **d)
+    try:
+        return OP_BUILDERS[kind](name, **d)
+    except TypeError as e:
+        raise SpecError(f"bad {kind!r} op fields: {e}", field=kind) from e
 
 
 def _op_descriptor(op: LayerOp) -> dict[str, Any]:
@@ -117,18 +152,21 @@ class Workload:
 
     @staticmethod
     def of_network(model: str) -> "Workload":
-        if model not in zoo.MODELS:
-            raise ValueError(f"unknown model {model!r}; "
-                             f"one of {sorted(zoo.MODELS)}")
         return Workload(model=model)
 
     def __post_init__(self) -> None:
         if self.ops and self.model:
-            raise ValueError("Workload: give ops OR model, not both")
+            raise SpecError("Workload: give ops OR model, not both",
+                            field="model")
         if not self.ops and not self.model:
-            raise ValueError("Workload: needs ops or a model name")
+            raise SpecError("Workload: needs ops or a model name",
+                            field="ops")
         if self.layer is not None and not self.model:
-            raise ValueError("Workload: layer selector needs a model")
+            raise SpecError("Workload: layer selector needs a model",
+                            field="layer")
+        if self.model is not None and self.model not in zoo.MODELS:
+            raise SpecError(f"unknown model {self.model!r}; "
+                            f"one of {sorted(zoo.MODELS)}", field="model")
 
     def resolve(self) -> list[LayerOp]:
         if self.ops:
@@ -189,6 +227,19 @@ class Hardware:
     area_budget_mm2: float | None = None
     power_budget_mw: float | None = None
 
+    def __post_init__(self) -> None:
+        _check_min(self.num_pes, 1, "num_pes")
+        for f in ("noc_bw", "dram_bw"):
+            if not getattr(self, f) > 0:
+                raise SpecError(f"{f} must be > 0, "
+                                f"got {getattr(self, f)!r}", field=f)
+        for f in ("noc_latency", "dram_energy_pj", "reconfig_latency"):
+            _check_min(getattr(self, f), 0, f)
+        _check_range(self.pe_range, 1, "pe_range")
+        _check_range(self.bw_range, 1e-9, "bw_range")
+        _check_min(self.area_budget_mm2, 1e-9, "area_budget_mm2")
+        _check_min(self.power_budget_mw, 1e-9, "power_budget_mw")
+
     @property
     def is_grid(self) -> bool:
         return self.pe_range is not None or self.bw_range is not None
@@ -226,7 +277,8 @@ class Hardware:
         known = {f.name for f in dataclasses.fields(Hardware)}
         bad = set(d) - known
         if bad:
-            raise ValueError(f"unknown Hardware fields: {sorted(bad)}")
+            raise SpecError(f"unknown Hardware fields: {sorted(bad)}",
+                            field=sorted(bad)[0])
         return Hardware(**d)
 
 
@@ -268,6 +320,21 @@ class SearchSpec:
     codse_top_k: int = 4
     joint_genes: int = 0
 
+    def __post_init__(self) -> None:
+        _check_enum(self.objective, VALID_OBJECTIVES, "objective")
+        _check_enum(self.strategy, VALID_STRATEGIES, "strategy")
+        _check_enum(self.pipeline, VALID_PIPELINES, "pipeline")
+        _check_enum(self.budget_policy, VALID_BUDGET_POLICIES,
+                    "budget_policy")
+        for f in ("budget", "top_k", "frontier_k", "block",
+                  "codse_top_k"):
+            _check_min(getattr(self, f), 1, f)
+        _check_min(self.population, 1, "population")
+        _check_min(self.joint_genes, 0, "joint_genes")
+        _check_min(self.l1_prune_kb, 1e-9, "l1_prune_kb")
+        _check_min(self.l2_prune_kb, 1e-9, "l2_prune_kb")
+        _check_min(self.l2_budget_kb, 1e-9, "l2_budget_kb")
+
     def describe(self) -> dict[str, Any]:
         return {k: v for k, v in dataclasses.asdict(self).items()
                 if v is not None}
@@ -280,7 +347,8 @@ class SearchSpec:
         known = {f.name for f in dataclasses.fields(SearchSpec)}
         bad = set(d) - known
         if bad:
-            raise ValueError(f"unknown SearchSpec fields: {sorted(bad)}")
+            raise SpecError(f"unknown SearchSpec fields: {sorted(bad)}",
+                            field=sorted(bad)[0])
         return SearchSpec(**d)
 
 

@@ -21,6 +21,7 @@ single-host container).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
@@ -30,6 +31,8 @@ from typing import Any, Callable
 import jax
 import ml_dtypes
 import numpy as np
+
+LOG = logging.getLogger("repro.resilience")
 
 # numpy can't serialize extension dtypes (bfloat16 etc.) natively; store
 # them as raw uint16/uint8 views and record the logical dtype in the
@@ -137,10 +140,26 @@ class Checkpointer:
 
     # ------------------------------------------------------------------
     def all_steps(self) -> list[int]:
+        """Committed steps with a READABLE manifest.  A step directory
+        whose manifest is missing or unparsable (e.g. the filesystem ate
+        it after the atomic rename) is skipped with a warning, so
+        ``latest_step``/``restore`` land on the newest intact
+        checkpoint instead of failing."""
         out = []
         for d in os.listdir(self.directory):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                out.append(int(d.split("_")[1]))
+            if not d.startswith("step_") or d.endswith(".tmp"):
+                continue
+            try:
+                step = int(d.split("_")[1])
+                with open(os.path.join(self.directory, d,
+                                       "manifest.json")) as f:
+                    json.load(f)
+            except (OSError, ValueError):
+                LOG.warning("checkpoint %s has no readable manifest — "
+                            "skipping it",
+                            os.path.join(self.directory, d))
+                continue
+            out.append(step)
         return sorted(out)
 
     def latest_step(self) -> int | None:

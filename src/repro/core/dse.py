@@ -40,6 +40,21 @@ class DSEConfig:
     area_power: AreaPowerModel = DEFAULT_AREA_POWER
     batch: int = 65536
 
+    def __post_init__(self) -> None:
+        from ..resilience.errors import SpecError
+        for f, lo in (("pe_range", 1), ("bw_range", 1e-9)):
+            rng = getattr(self, f)
+            if len(rng) == 0 or any(not v >= lo for v in rng):
+                raise SpecError(f"{f} must be non-empty with entries "
+                                f">= {lo}", field=f)
+        for f in ("area_budget_mm2", "power_budget_mw"):
+            if not getattr(self, f) > 0:
+                raise SpecError(f"{f} must be > 0, "
+                                f"got {getattr(self, f)!r}", field=f)
+        if self.batch < 1:
+            raise SpecError(f"batch must be >= 1, got {self.batch!r}",
+                            field="batch")
+
 
 @dataclasses.dataclass
 class DSEResult:

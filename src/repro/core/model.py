@@ -421,9 +421,13 @@ def blend_level_results(xp: Backend, sel: Sequence[Any],
         return out
 
     def dicts(ds):
-        keys = set()
+        # first-appearance key order, NOT a set: set iteration is
+        # PYTHONHASHSEED-ordered, which would reorder the traced blend
+        # sums and make cross-process results differ at the ulp level
+        keys: dict[Any, None] = {}
         for d in ds:
-            keys |= set(d)
+            for k in d:
+                keys.setdefault(k)
         return {k: scalar([d.get(k, 0) for d in ds]) for k in keys}
 
     return LevelResult(

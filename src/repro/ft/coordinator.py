@@ -8,12 +8,14 @@ mitigation for the training loop.
     injected fault in tests) triggers restore-from-last-good and replay —
     the data pipeline is stateless in the step index, so replayed batches
     are bit-identical;
-  * a straggler watchdog: per-step wall times feed an EWMA; steps slower
-    than ``threshold ×`` the EWMA are flagged.  On a real pod the hook
-    would drain and re-slice the mesh around the slow host (elastic
-    restore onto the surviving device set — checkpoint/checkpointer.py
-    already reshards); here the hook records the event and, if an
-    ``on_straggler`` callback is provided, defers the policy to it.
+  * a straggler watchdog: per-step wall times feed
+    :class:`repro.resilience.StragglerWatchdog` (the EWMA detector that
+    also watches sweep device chunks); steps slower than ``threshold ×``
+    the EWMA are flagged.  On a real pod the hook would drain and
+    re-slice the mesh around the slow host (elastic restore onto the
+    surviving device set — checkpoint/checkpointer.py already reshards);
+    here the hook records the event and, if an ``on_straggler`` callback
+    is provided, defers the policy to it.
 
 MAESTRO connection: restart cost is an availability-vs-throughput design
 point exactly like the paper's DSE trade-offs — the knobs (checkpoint
@@ -27,6 +29,7 @@ import time
 from typing import Any, Callable
 
 from ..checkpoint.checkpointer import Checkpointer
+from ..resilience import StragglerWatchdog
 
 
 @dataclasses.dataclass
@@ -59,7 +62,11 @@ class FaultTolerantLoop:
         self.fault_injector = fault_injector
         self.events: list[StepEvent] = []
         self.restarts = 0
-        self._ewma: float | None = None
+        # own detector instance: training-step walls must not share a
+        # baseline with the sweep chunk loops' CHUNK_WATCHDOG
+        self._watchdog = StragglerWatchdog(
+            threshold=self.cfg.straggler_threshold,
+            alpha=self.cfg.ewma_alpha)
 
     # ------------------------------------------------------------------
     def run(self, state: Any, batch_fn: Callable[[int], Any],
@@ -101,12 +108,7 @@ class FaultTolerantLoop:
         return state, manifest["step"]
 
     def _observe(self, step: int, wall: float) -> None:
-        if self._ewma is None:
-            self._ewma = wall
-        slow = wall > self.cfg.straggler_threshold * self._ewma
-        a = self.cfg.ewma_alpha
-        if not slow:   # stragglers don't poison the baseline
-            self._ewma = (1 - a) * self._ewma + a * wall
+        slow = self._watchdog.observe(wall, step=step)
         ev = StepEvent(step, wall, slow)
         self.events.append(ev)
         if slow and self.on_straggler is not None:

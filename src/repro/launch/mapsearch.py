@@ -25,8 +25,9 @@ from repro.core.dataflows import TABLE3, table3_for_layer
 from repro.core.model import analyze
 from repro.core.performance import HWConfig
 from repro.launch.query import (DEFAULT_CACHE, DEFAULT_JAX_CACHE, LOG,
-                                _fmt, add_obs_args, obs_scope,
-                                print_batch_summary, print_layer_report,
+                                _fmt, add_obs_args, cli_errors,
+                                obs_scope, print_batch_summary,
+                                print_layer_report,
                                 print_layer_codse_report,
                                 session_from_args)
 
@@ -146,7 +147,7 @@ def main(argv=None) -> None:
     add_obs_args(ap)
     args = ap.parse_args(argv)
 
-    with obs_scope(args):
+    with cli_errors(), obs_scope(args):
         session = session_from_args(args)
         layers = zoo.MODELS[args.model]()
         if args.list_layers:

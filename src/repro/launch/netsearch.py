@@ -23,7 +23,8 @@ import argparse
 from repro.api import Hardware, Query, SearchSpec, Workload
 from repro.core import dnn_models as zoo
 from repro.launch.query import (DEFAULT_JAX_CACHE, _fmt, add_obs_args,
-                                obs_scope, print_network_codse_report,
+                                cli_errors, obs_scope,
+                                print_network_codse_report,
                                 print_network_report, session_from_args)
 from repro.netspace import best_uniform, uniform_baseline
 
@@ -76,7 +77,7 @@ def main(argv=None) -> None:
     add_obs_args(ap)
     args = ap.parse_args(argv)
 
-    with obs_scope(args):
+    with cli_errors(), obs_scope(args):
         session = session_from_args(args)
         budget = min(args.budget, 128) if args.quick else args.budget
         frontier_k = min(args.frontier_k, 4) if args.quick \

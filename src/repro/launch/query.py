@@ -38,6 +38,7 @@ from repro import obs
 from repro.api import (Hardware, Query, Report, SearchSpec, Session,
                        Workload, queries_from_file)
 from repro.core import dnn_models as zoo
+from repro.resilience import ReproError, ResilienceConfig
 
 DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache",
                              "repro-mapspace")
@@ -74,6 +75,18 @@ def configure_logging(args) -> None:
     logging.basicConfig(level=level, stream=sys.stderr,
                         format="# %(message)s")
     logging.getLogger("repro").setLevel(level)
+
+
+@contextlib.contextmanager
+def cli_errors():
+    """CLI-facing slice of the resilience error taxonomy: a
+    :class:`ReproError` escaping a launch entry point prints as ONE line
+    on stderr and exits 2 — never a multi-screen XLA traceback."""
+    try:
+        yield
+    except ReproError as e:
+        print(f"error: {e.one_line()}", file=sys.stderr)
+        raise SystemExit(2) from e
 
 
 @contextlib.contextmanager
@@ -191,11 +204,18 @@ def print_network_codse_report(rep: Report) -> None:
     _print_pareto(rep)
 
 
+def print_error_report(rep: Report) -> None:
+    e = rep.extras["error"]
+    print(f"# {rep.name or '(query)'}: FAILED — "
+          f"{e['type']}: {e['message']}")
+
+
 PRINTERS = {
     "layer": print_layer_report,
     "layer_codse": print_layer_codse_report,
     "network": print_network_report,
     "network_codse": print_network_codse_report,
+    "error": print_error_report,
 }
 
 
@@ -229,9 +249,15 @@ def print_batch_summary(session: Session) -> None:
 # ----------------------------------------------------------------------
 
 def session_from_args(args) -> Session:
+    res = None
+    ckpt_dir = getattr(args, "checkpoint_dir", None)
+    faults = getattr(args, "faults", None)
+    if ckpt_dir or faults:
+        res = ResilienceConfig(ckpt_dir=ckpt_dir or None,
+                               faults=faults or None)
     return Session(cache_dir=(args.cache_dir or None),
                    jax_cache_dir=(args.jax_cache_dir or None),
-                   devices=args.devices)
+                   devices=args.devices, resilience=res)
 
 
 def hardware_from_args(args) -> Hardware:
@@ -295,6 +321,14 @@ def add_common_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE,
                     help="persistent XLA compilation cache "
                          "('' disables)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="sweep checkpoint directory: a killed run "
+                         "re-launched with the same flags resumes "
+                         "bit-identically from the last chunk")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'kill@chunk:3' (see repro.resilience."
+                         "faultinject; also via REPRO_FAULTS)")
     add_obs_args(ap)
 
 
@@ -351,7 +385,7 @@ def main(argv=None) -> None:
     add_common_args(ap)
     args = ap.parse_args(argv)
 
-    with obs_scope(args):
+    with cli_errors(), obs_scope(args):
         session = session_from_args(args)
 
         if args.file:

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from .. import obs
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES, batched_tile_evaluator
+from ..resilience import default_policy, fault_point, run_attempts
 from .space import GroupKey, MapSpace, Point, group_template, point_operands
 from .universal import evaluate_points_universal
 
@@ -144,11 +145,20 @@ def evaluate_points(op: LayerOp, space: MapSpace, points: Sequence[Point],
                 _WARMED.add(warm_key)
                 obs.metrics().inc("grouped.compiles")
                 obs.metrics().inc("grouped.compile_s", dt)
-            with obs.span("device-pass", engine="grouped", op=op.name,
-                          rows=hi - lo):
-                t0 = time.perf_counter()
-                out = np.asarray(f(sj, oj))
-                stats.eval_s += time.perf_counter() - t0
+            # the grouped engine is the degradation target of the gene
+            # pipeline, so its retry site is distinct from "chunk"
+            def once():
+                fault_point("legacy-batch")
+                with obs.span("device-pass", engine="grouped",
+                              op=op.name, rows=hi - lo):
+                    t0 = time.perf_counter()
+                    o_ = np.asarray(f(sj, oj))
+                return o_, time.perf_counter() - t0
+
+            out, dt = run_attempts(
+                once, policy=default_policy(),
+                label=f"{op.name} legacy batch")
+            stats.eval_s += dt
             stats.n_steady += hi - lo
             feats[idxs[lo:hi]] = out[:hi - lo]
     obs.metrics().inc("mappings.evaluated", len(points))

@@ -19,12 +19,16 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 from typing import Any
 
 from .. import obs
 from ..core.tensor_analysis import LayerOp
+from ..resilience.errors import CacheError
 from .space import MapSpace
+
+LOG = logging.getLogger("repro.resilience")
 
 # Result-cache payload version.  Bumped to 3 for the PR-5 declarative
 # api surface: the key now carries the engine schema version and (via
@@ -95,13 +99,34 @@ def _path(cache_dir: str, key: str) -> str:
 
 
 def load(cache_dir: str | None, key: str) -> dict[str, Any] | None:
+    """Result-cache lookup.  A corrupt entry (truncated write, bad JSON,
+    non-dict payload) is NEVER fatal: it counts as a miss, the file is
+    quarantined to ``<entry>.corrupt`` so the recompute can re-store,
+    and the event is logged as a one-line :class:`CacheError` warning +
+    ``result_cache.corrupt`` counter."""
     if not cache_dir:
         return None
+    path = _path(cache_dir, key)
     try:
-        with open(_path(cache_dir, key)) as f:
+        with open(path) as f:
             payload = json.load(f)
-    except (OSError, ValueError):
+        if not isinstance(payload, dict):
+            raise ValueError(f"expected a JSON object, "
+                             f"got {type(payload).__name__}")
+    except FileNotFoundError:
         obs.metrics().inc("result_cache.misses")
+        return None
+    except (OSError, ValueError) as e:
+        obs.metrics().inc("result_cache.misses")
+        obs.metrics().inc("result_cache.corrupt")
+        err = CacheError(f"corrupt result-cache entry {path}: "
+                         f"{type(e).__name__}: {e}", key=key)
+        LOG.warning("%s — quarantined, treating as a miss",
+                    err.one_line())
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass               # e.g. unreadable due to permissions
         return None
     if payload.get("version") != CACHE_VERSION:
         obs.metrics().inc("result_cache.misses")

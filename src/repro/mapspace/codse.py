@@ -24,6 +24,8 @@ from ..core.dataflows import table3_for_layer
 from ..core.dse import DSEConfig, DSEResult, run_dse
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES, BatchStats, HWTail
+from ..resilience import (SweepCheckpoint, array_hash, fault_point,
+                          pack_top, unpack_top)
 from .search import OBJECTIVES, SearchResult, search
 from .space import (MapSpace, genes_from_points, point_dataflow,
                     sample_genes)
@@ -135,7 +137,8 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
                 k: int = 16, block: int = 8192,
                 n_devices: int | None = None,
                 chunk_designs: int = 1 << 18,
-                multicast: bool = True, spatial_reduction: bool = True
+                multicast: bool = True, spatial_reduction: bool = True,
+                ckpt: SweepCheckpoint | None = None
                 ) -> JointSweepResult:
     """Paper-scale joint DSE: every row of ``genes`` crossed with the full
     (PEs x NoC bandwidth) grid of ``cfg`` — ``len(genes) * |grid|``
@@ -147,7 +150,13 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
 
     This is the reproduction of the paper's 480M-design search shape:
     mapping and hardware axes in ONE operand space, at most two XLA
-    compiles, any local device count."""
+    compiles, any local device count.
+
+    With ``ckpt`` the sweep persists its accumulators (design-chunk
+    cursor, top entries, frontier candidates) after every completed
+    design chunk, so a killed 10M+-design sweep resumes from the last
+    chunk boundary bit-identically; the in-flight inner chunk restarts
+    from scratch (design chunks are the durable unit)."""
     t0 = time.perf_counter()
     cfg = cfg or DSEConfig()
     genes = np.asarray(genes, np.int64)
@@ -165,7 +174,26 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
     n_compiles = 0
     compile_s = 0.0
     n_dev = 1
-    for lo in range(0, n, chunk_designs):
+
+    start_lo = 0
+    ckpt_meta: dict | None = None
+    if ckpt is not None:
+        ckpt_meta = {"key": ckpt.key, "n": int(n), "m": int(m),
+                     "h": int(h), "chunk_designs": int(chunk_designs),
+                     "block": int(block), "objective": objective,
+                     "k": int(k), "content": array_hash(genes, pes, bws)}
+        st = ckpt.load(ckpt_meta)
+        if st is not None:
+            start_lo = int(st["cursor"])
+            n_valid = int(st["n_valid"])
+            top_entries.extend(unpack_top(st))
+            for r, e, t in zip(st["front_rows"], st["front_e"],
+                               st["front_t"]):
+                front_cands.append({"row": int(r), "energy_pj": float(e),
+                                    "throughput": float(t)})
+
+    for lo in range(start_lo, n, chunk_designs):
+        fault_point("design-chunk")
         hi = min(lo + chunk_designs, n)
         flat = np.arange(lo, hi, dtype=np.int64)
         gi, hwi = flat // h, flat % h
@@ -185,6 +213,21 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
                                     t["feats"]))
         for p in res.pareto:
             front_cands.append({**p, "row": lo + p["row"]})
+        if ckpt is not None:
+            # a design chunk is minutes of device work at paper scale —
+            # checkpoint unconditionally at every chunk boundary
+            ckpt.save(
+                {"cursor": hi, "n_valid": n_valid,
+                 **pack_top(top_entries),
+                 "front_rows": np.array(
+                     [c["row"] for c in front_cands], np.int64),
+                 "front_e": np.array(
+                     [c["energy_pj"] for c in front_cands], np.float64),
+                 "front_t": np.array(
+                     [c["throughput"] for c in front_cands], np.float64)},
+                ckpt_meta)
+    if ckpt is not None:
+        ckpt.clear()               # completed: the checkpoint is spent
 
     def design(row: int, feats: np.ndarray | None) -> dict[str, Any]:
         gi, hwi = row // h, row % h
@@ -238,6 +281,7 @@ def co_search_impl(op: LayerOp, objective: str = "edp",
                    cache_dir: str | None = None,
                    joint_genes: int = 0, joint_block: int = 8192,
                    cache_extra: str = "",
+                   ckpt_dir: str | None = None,
                    search_kwargs: dict[str, Any] | None = None
                    ) -> CoDSEResult:
     """Joint DSE in one frontier: mapping search at ``(num_pes, noc_bw)``,
@@ -260,7 +304,7 @@ def co_search_impl(op: LayerOp, objective: str = "edp",
     sr = search(op, objective=objective, budget=mapping_budget,
                 space=space, num_pes=num_pes, noc_bw=noc_bw, seed=seed,
                 cache_dir=cache_dir, cache_extra=cache_extra,
-                **search_kwargs)
+                ckpt_dir=ckpt_dir, **search_kwargs)
 
     picked: list[tuple[str, tuple]] = []
     seen: set[tuple] = set()
@@ -295,9 +339,13 @@ def co_search_impl(op: LayerOp, objective: str = "edp",
         gm = sample_genes(sr.space, rng, joint_genes)
         winners = genes_from_points([p for _, p in picked])
         gm = np.concatenate([winners, gm]) if len(winners) else gm
+        jc = SweepCheckpoint(
+            ckpt_dir, f"joint-{op.name}-{objective}-{joint_genes}-"
+            f"{seed}-{cache_extra or 'local'}") if ckpt_dir else None
         joint = joint_sweep(op, sr.space, gm, cfg, objective=objective,
                             block=joint_block, multicast=multicast,
-                            spatial_reduction=spatial_reduction)
+                            spatial_reduction=spatial_reduction,
+                            ckpt=jc)
         n_compiles += joint.n_compiles
 
     best: dict[str, dict[str, Any] | None] = {}

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from ..core.directives import Dataflow
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES
+from ..resilience import SpecError, SweepCheckpoint
 from . import cache as _cache
 from .batched import FEATURE_INDEX, EvalStats, evaluate_points
 from .space import (MapSpace, Point, build_space, dedupe_equivalent_genes,
@@ -335,12 +336,19 @@ class _GeneSearch:
     materialized beyond the final top-k rows."""
 
     def __init__(self, op, space, objective, *, l1_kb, l2_kb, ev, stats,
-                 budget):
+                 budget, ckpt_factory=None):
         self.op, self.space = op, space
         self.col, self.maximize = OBJECTIVES[objective]
         self.l1_kb, self.l2_kb = l1_kb, l2_kb
         self.ev, self.stats = ev, stats
         self.budget = budget
+        # checkpointing: every evaluate_genes call this search issues is
+        # numbered; the search path is deterministic under (seed, space),
+        # so a resumed process replays the same call sequence and call i
+        # finds call i's checkpoint (earlier completed calls re-execute
+        # warm — bounded loss, bit-identical results)
+        self.ckpt_factory = ckpt_factory
+        self.call_seq = 0
         self.seen = np.empty(0, np.int64)      # sorted flat indices
         self.genes: list[np.ndarray] = []
         self.vals: list[np.ndarray] = []
@@ -373,9 +381,13 @@ class _GeneSearch:
         if not g.shape[0]:
             return 0
         reps, back = dedupe_equivalent_genes(self.op, self.space, g)
+        ckpt = (self.ckpt_factory(self.call_seq)
+                if self.ckpt_factory else None)
+        self.call_seq += 1
         res = evaluate_genes(self.op, self.space, g[reps],
                              objective=self.col, maximize=self.maximize,
-                             return_vals=True, pareto=False, **self.ev)
+                             return_vals=True, pareto=False, ckpt=ckpt,
+                             **self.ev)
         v = res.vals[back]
         self.seen = np.union1d(self.seen, flat)
         self.genes.append(g)
@@ -479,7 +491,8 @@ def search_impl(op: LayerOp, objective: str = "edp", budget: int = 2000,
                 cache_dir: str | None = None, engine: str = "universal",
                 pipeline: str = "gene", devices: int | None = None,
                 multicast: bool = True, spatial_reduction: bool = True,
-                cache_extra: str = "") -> SearchResult:
+                cache_extra: str = "",
+                ckpt_dir: str | None = None) -> SearchResult:
     """The per-layer mapping-search engine behind :func:`search` and
     ``repro.api.Session``.  ``budget`` caps evaluated mappings;
     ``strategy`` is ``auto`` or one of ``exhaustive`` / ``random`` /
@@ -499,11 +512,18 @@ def search_impl(op: LayerOp, objective: str = "edp", budget: int = 2000,
     still participates in the result-cache key for reproducibility).
     ``l1_budget_kb``/``l2_budget_kb`` drop over-budget tile sets before
     evaluation.  ``cache_extra`` is an opaque component of the disk-cache
-    key (the session path passes the full ``Query`` fingerprint)."""
+    key (the session path passes the full ``Query`` fingerprint).
+
+    With ``ckpt_dir``, every gene-pipeline evaluation pass checkpoints
+    under a key derived from the result-cache key, so a killed search
+    resumes from the last chunk boundary bit-identically (rerun the same
+    call after the kill)."""
     if objective not in OBJECTIVES:
-        raise ValueError(f"objective must be one of {sorted(OBJECTIVES)}")
+        raise SpecError(f"objective must be one of {sorted(OBJECTIVES)}",
+                        field="objective")
     if pipeline not in PIPELINES:
-        raise ValueError(f"pipeline must be one of {PIPELINES}")
+        raise SpecError(f"pipeline must be one of {PIPELINES}",
+                        field="pipeline")
     space = space or build_space(op)
     rng = np.random.default_rng(seed)
     t_start = time.perf_counter()
@@ -511,7 +531,7 @@ def search_impl(op: LayerOp, objective: str = "edp", budget: int = 2000,
     if strategy == "auto":
         strategy = "exhaustive" if space.size <= budget else "greedy"
     if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}")
+        raise SpecError(f"unknown strategy {strategy!r}", field="strategy")
 
     key = _cache.search_key(
         op, space, num_pes, noc_bw, objective, budget, strategy, seed,
@@ -563,9 +583,13 @@ def search_impl(op: LayerOp, objective: str = "edp", budget: int = 2000,
                   multicast=multicast,
                   spatial_reduction=spatial_reduction,
                   n_devices=devices, k=top_k)
+        ckpt_factory = None
+        if ckpt_dir:
+            ckpt_factory = lambda seq: SweepCheckpoint(  # noqa: E731
+                ckpt_dir, f"{key[:20]}-c{seq}", every_chunks=1)
         st = _GeneSearch(op, space, objective, l1_kb=l1_budget_kb,
                          l2_kb=l2_budget_kb, ev=ev, stats=stats,
-                         budget=budget)
+                         budget=budget, ckpt_factory=ckpt_factory)
         strategy = _search_genes(op, space, rng, objective, budget,
                                  strategy, seed=seed,
                                  refine_frac=refine_frac,

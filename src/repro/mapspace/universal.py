@@ -31,6 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
+from ..resilience import (CHUNK_WATCHDOG, RetryPolicy, SweepCheckpoint,
+                          SweepKilled, array_hash, default_policy,
+                          fault_point, is_oom, pack_top, run_attempts,
+                          unpack_top)
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import (FEATURES, HWTail, ReduceSpec, UniversalSpec,
                                universal_evaluator,
@@ -390,7 +394,10 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
                    n_devices: int | None = None, depth: int = 2,
                    multicast: bool = True, spatial_reduction: bool = True,
                    return_vals: bool = True, pareto: bool = True,
-                   hw_tail: HWTail | None = None) -> GeneEval:
+                   hw_tail: HWTail | None = None,
+                   ckpt: SweepCheckpoint | None = None,
+                   retry: RetryPolicy | None = None,
+                   _splits_left: int | None = None) -> GeneEval:
     """Device-resident evaluation of a gene matrix: vectorized encode,
     async double-buffered dispatch (chunk i+1 encodes on the host while
     chunk i evaluates), chunks striped over ``n_devices`` local devices
@@ -401,12 +408,28 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
     ``objective`` is a FEATURES column name; ``num_pes``/``noc_bw`` may be
     scalars or per-row arrays (joint mapping x hardware rows); ``hw_tail``
     folds run_dse-style area/power/leakage accounting into the jit.
-    Results are deterministic and identical for any device count."""
+    Results are deterministic and identical for any device count.
+
+    Resilience: every chunk runs under ``retry`` (default: the
+    installed ``resilience.default_policy()``) — a failed device pass
+    re-encodes and
+    re-dispatches with backoff; device OOM recursively re-evaluates just
+    the failed chunk at half the block size on one device
+    (``resilience.chunk_splits``); budget exhaustion surfaces a
+    ``DeviceError``.  With ``ckpt`` (a ``resilience.SweepCheckpoint``)
+    the running accumulators are persisted every few chunks, and a
+    killed sweep resumes from the last saved chunk boundary with
+    bit-identical final results: merges are order-insensitive (top-k
+    sorts on (value, row); the Pareto refinement argsorts candidates by
+    row) and the chunk layout is pinned by the checkpoint's meta guard
+    (row count, block, device count, content hash)."""
     t_start = time.perf_counter()
     genes = np.asarray(genes, np.int64)
     n = genes.shape[0]
     nd = n_devices if n_devices is not None else jax.local_device_count()
     nd = max(1, min(nd, jax.local_device_count()))
+    retry = retry or default_policy()
+    splits_left = retry.max_splits if _splits_left is None else _splits_left
     spec1, spec2 = universal_specs(op, space)
     pes = np.broadcast_to(np.asarray(num_pes, np.float32), (n,))
     bw = np.broadcast_to(np.asarray(noc_bw, np.float32), (n,))
@@ -457,10 +480,95 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
                 cand_t.append(
                     host["pareto_thr"].reshape(chunk_rows)[:m][w])
 
+    def safe_collect(sub: np.ndarray, m: int, out: dict) -> None:
+        # transactional merge: roll back partial accumulator appends on
+        # failure so a retried collect never duplicates top/Pareto rows
+        marks = (len(top_entries), len(cand_rows), run.n_valid)
+        try:
+            collect(sub, m, out)
+        except Exception:
+            del top_entries[marks[0]:]
+            del cand_rows[marks[1]:]
+            del cand_e[marks[1]:]
+            del cand_t[marks[1]:]
+            run.n_valid = marks[2]
+            raise
+
     met = obs.metrics()
     met.inc("gene.rows_evaluated", n)
     n_compiles_at_entry = run.n_compiles
     c0 = compile_count()
+
+    # -- resilience state: resume cursor + periodic checkpoint ----------
+    start_cursor = 0           # chunks already merged by a prior run
+    chunks_done = 0            # chunks merged so far, in dispatch order
+    gidx = 0                   # global dispatch index across families
+    ckpt_meta: dict | None = None
+    if ckpt is not None:
+        ckpt_meta = {"key": ckpt.key, "n": int(n), "block": int(block),
+                     "nd": int(nd), "objective": objective,
+                     "maximize": bool(maximize), "k": int(k),
+                     "pareto": bool(pareto),
+                     "return_vals": bool(return_vals),
+                     "content": array_hash(genes, pes, bw)}
+        st = ckpt.load(ckpt_meta)
+        if st is not None:
+            start_cursor = chunks_done = int(st["cursor"])
+            run.n_valid = int(st["n_valid"])
+            top_entries.extend(unpack_top(st))
+            if return_vals and "vals" in st:
+                vals[:] = st["vals"]
+            if pareto and st["cand_rows"].size:
+                cand_rows.append(st["cand_rows"].astype(np.int64))
+                cand_e.append(st["cand_e"])
+                cand_t.append(st["cand_t"])
+
+    def ckpt_state() -> dict:
+        state = {"cursor": chunks_done, "n_valid": run.n_valid,
+                 **pack_top(top_entries)}
+        if return_vals:
+            state["vals"] = vals
+        if pareto:
+            state["cand_rows"] = (np.concatenate(cand_rows)
+                                  if cand_rows else np.zeros(0, np.int64))
+            state["cand_e"] = (np.concatenate(cand_e)
+                              if cand_e else np.zeros(0, np.float32))
+            state["cand_t"] = (np.concatenate(cand_t)
+                              if cand_t else np.zeros(0, np.float32))
+        return state
+
+    def split_eval(sub: np.ndarray) -> None:
+        # OOM recovery: the same rows at half the block on one device —
+        # an independent exact evaluation whose merge is bit-transparent
+        # (a row dominated within any sub-chunk can never reach the
+        # global frontier, and the top-k merge sorts on (value, row))
+        rec = evaluate_genes(
+            op, space, genes[sub], objective=objective, maximize=maximize,
+            k=k, num_pes=pes[sub], noc_bw=bw[sub],
+            block=max(retry.min_rows, block // 2), n_devices=1,
+            depth=depth, multicast=multicast,
+            spatial_reduction=spatial_reduction, return_vals=return_vals,
+            pareto=pareto, hw_tail=hw_tail, retry=retry,
+            _splits_left=splits_left - 1)
+        if return_vals:
+            vals[sub] = rec.vals
+        for t in rec.top:
+            top_entries.append((float(t["value"]), int(sub[t["row"]]),
+                                t["feats"]))
+        if pareto and rec.pareto:
+            rws = np.array([p["row"] for p in rec.pareto], np.int64)
+            cand_rows.append(sub[rws])
+            cand_e.append(np.array([p["energy_pj"] for p in rec.pareto],
+                                   np.float64))
+            cand_t.append(np.array([p["throughput"] for p in rec.pareto],
+                                   np.float64))
+        run.n_valid += rec.run.n_valid
+        run.n_steady += rec.run.n_steady
+        run.n_compiles += rec.run.n_compiles
+        run.compile_s += rec.run.compile_s
+        run.eval_s += rec.run.eval_s
+        run.encode_s += rec.run.encode_s
+
     for spec, fam in ((spec1, np.where(~is2)[0]),
                       (spec2, np.where(is2)[0])):
         if fam.size == 0:
@@ -477,9 +585,8 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
         wk = (_warm_key(op, spec, multicast, spatial_reduction,
                         chunk_rows), reduce, nd)
         pending: collections.deque = collections.deque()
-        for lo in range(0, fam.size, chunk_rows):
-            sub = fam[lo:lo + chunk_rows]
-            m = sub.size
+
+        def make_chunk(sub, m, in_flight):
             with obs.span("encode", family=fam_label, rows=m):
                 t0 = time.perf_counter()
                 batch = encode_genes(op, space, genes[sub], spec,
@@ -495,11 +602,15 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
                 jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
                 t_enc = time.perf_counter() - t0
                 run.encode_s += t_enc
-            if pending:
+            if in_flight:
                 # double-buffer overlap, measured not guessed: host
                 # encode time spent while >= 1 chunk was in flight
                 met.inc("gene.overlap_encode_s", t_enc)
             met.observe("gene.chunk_occupancy", m / chunk_rows)
+            return jbatch
+
+        def dispatch(jbatch, m):
+            fault_point("chunk")
             if not is_warm(wk):
                 with obs.span("compile", family=fam_label,
                               rows=chunk_rows, devices=nd):
@@ -519,14 +630,69 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
                     met.observe("gene.dispatch_s",
                                 time.perf_counter() - t0)
                 run.n_steady += m
-            pending.append((sub, m, out))
+            return out
+
+        def recover(sub, m, exc):
+            if isinstance(exc, SweepKilled):
+                raise exc            # simulated process death: no retry
+            if is_oom(exc) and splits_left > 0 and block > retry.min_rows:
+                met.inc("resilience.chunk_splits")
+                obs.instant("chunk-split", family=fam_label, rows=int(m),
+                            block=block,
+                            to=max(retry.min_rows, block // 2))
+                split_eval(sub)
+                return
+
+            def once():
+                safe_collect(sub, m, dispatch(make_chunk(sub, m, False),
+                                              m))
+            run_attempts(once, policy=retry,
+                         label=f"{fam_label} chunk", first_exc=exc)
+
+        def finish(sub, m, out, t_disp):
+            nonlocal chunks_done
+            try:
+                safe_collect(sub, m, out)
+            except Exception as exc:  # noqa: BLE001 — recover classifies
+                recover(sub, m, exc)
+            wall = time.perf_counter() - t_disp
+            CHUNK_WATCHDOG.observe(wall, family=fam_label, rows=int(m))
+            retry.check_deadline(wall, family=fam_label, rows=int(m))
+            chunks_done += 1
+            if ckpt is not None:
+                ckpt.maybe_save(ckpt_state, ckpt_meta,
+                                chunks_done=chunks_done)
+
+        for lo in range(0, fam.size, chunk_rows):
+            if gidx < start_cursor:
+                gidx += 1        # merged by the resumed checkpoint
+                continue
+            gidx += 1
+            sub = fam[lo:lo + chunk_rows]
+            m = sub.size
+            try:
+                out = dispatch(make_chunk(sub, m, bool(pending)), m)
+            except Exception as exc:  # noqa: BLE001 — recover classifies
+                # drain in dispatch order first so the chunk cursor stays
+                # contiguous, then recover this chunk synchronously
+                while pending:
+                    finish(*pending.popleft())
+                recover(sub, m, exc)
+                chunks_done += 1
+                if ckpt is not None:
+                    ckpt.maybe_save(ckpt_state, ckpt_meta,
+                                    chunks_done=chunks_done)
+                continue
+            pending.append((sub, m, out, time.perf_counter()))
             while len(pending) > depth:
-                collect(*pending.popleft())
+                finish(*pending.popleft())
         while pending:
-            collect(*pending.popleft())
+            finish(*pending.popleft())
     # run-local vs process compile accounting cannot drift: both increment
-    # on the same warm_once() event
+    # on the same warm_once() event (recursive split merges move both)
     assert compile_count() - c0 == run.n_compiles - n_compiles_at_entry
+    if ckpt is not None:
+        ckpt.clear()               # completed: the checkpoint is spent
 
     top_entries.sort(key=lambda e: (e[0], e[1]))
     top = [{"row": r, "value": v, "feats": fr}

@@ -38,6 +38,9 @@ from ..mapspace.search import OBJECTIVES
 from ..mapspace.space import dedupe_equivalent_genes, gene_tables
 from ..mapspace.universal import (GeneRun, _pad_rows, compile_count,
                                   encode_genes_base, is_warm, warm_once)
+from ..resilience import (CHUNK_WATCHDOG, RetryPolicy, SweepCheckpoint,
+                          SweepKilled, array_hash, default_policy,
+                          fault_point, is_oom, run_attempts)
 from .space import NetSpace
 
 # The per-row feature columns the composer consumes.
@@ -113,13 +116,23 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
                   block: int = 1024, n_devices: int | None = None,
                   depth: int = 2, multicast: bool = True,
                   spatial_reduction: bool = True,
-                  hw_tail: HWTail | None = None, run: GeneRun | None = None
+                  hw_tail: HWTail | None = None, run: GeneRun | None = None,
+                  ckpt: SweepCheckpoint | None = None,
+                  retry: RetryPolicy | None = None,
+                  _splits_left: int | None = None
                   ) -> tuple[np.ndarray, np.ndarray]:
     """Evaluate (layer, candidate) rows of ONE op-class through the
     shape-as-operand executable: ≤ 2 compiles (1-level + 2-level family)
     no matter how many layers/structure groups the rows span.  Returns
     ``(vals, cols)`` aligned with the input rows; ``num_pes``/``noc_bw``
-    may be scalars or per-row arrays (network co-DSE)."""
+    may be scalars or per-row arrays (network co-DSE).
+
+    Resilience mirrors ``universal.evaluate_genes``: chunks run under
+    ``retry`` (transient failures re-dispatch with backoff, OOM halves
+    the block recursively, exhaustion raises ``DeviceError``), and with
+    ``ckpt`` the (vals, cols, cursor) accumulators persist every few
+    chunks so a killed pass resumes bit-identically — the outputs are
+    direct-indexed by row, so resume order cannot change them."""
     col, maximize = OBJECTIVES[objective]
     uid = np.asarray(uid, np.int64)
     genes = np.asarray(genes, np.int64)
@@ -146,7 +159,50 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
     met = obs.metrics()
     met.inc("netspace.rows_evaluated", n)
     n_compiles_at_entry = run.n_compiles
-    c0 = compile_count()
+    nv_entry = run.n_valid      # ``run`` may be shared across calls —
+    c0 = compile_count()        # checkpoint state is entry-relative
+    retry = retry or default_policy()
+    splits_left = retry.max_splits if _splits_left is None else _splits_left
+
+    # -- resilience state: resume cursor + periodic checkpoint ----------
+    start_cursor = 0
+    chunks_done = 0
+    gidx = 0
+    ckpt_meta: dict | None = None
+    if ckpt is not None:
+        ckpt_meta = {"key": ckpt.key, "n": int(n), "block": int(block),
+                     "nd": int(nd), "objective": objective,
+                     "content": array_hash(uid, genes, pes, bw)}
+        st = ckpt.load(ckpt_meta)
+        if st is not None:
+            start_cursor = chunks_done = int(st["cursor"])
+            run.n_valid = nv_entry + int(st["n_valid"])
+            vals[:] = st["vals"]
+            cols[:] = st["cols"]
+
+    def ckpt_state() -> dict:
+        return {"cursor": chunks_done, "n_valid": run.n_valid - nv_entry,
+                "vals": vals, "cols": cols}
+
+    def split_eval(sub: np.ndarray) -> None:
+        # OOM recovery: same rows, half the block, one device; outputs
+        # are direct-indexed by row so the merge is bit-transparent
+        rrun = GeneRun()
+        v, c = evaluate_rows(
+            ns, uid[sub], genes[sub], objective=objective,
+            num_pes=pes[sub], noc_bw=bw[sub],
+            block=max(retry.min_rows, block // 2), n_devices=1,
+            depth=depth, multicast=multicast,
+            spatial_reduction=spatial_reduction, hw_tail=hw_tail,
+            run=rrun, retry=retry, _splits_left=splits_left - 1)
+        vals[sub] = v
+        cols[sub] = c
+        run.n_valid += rrun.n_valid
+        run.n_steady += rrun.n_steady
+        run.n_compiles += rrun.n_compiles
+        run.compile_s += rrun.compile_s
+        run.eval_s += rrun.eval_s
+        run.encode_s += rrun.encode_s
 
     def collect(sub: np.ndarray, m: int, out: dict) -> None:
         # the blocked wait for (and host copy of) this chunk's reduced
@@ -180,9 +236,8 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
         wk = ("netspace", _rep_key(cls), spec, reduce, multicast,
               spatial_reduction, nd, chunk_rows)
         pending: collections.deque = collections.deque()
-        for lo in range(0, fam.size, chunk_rows):
-            sub = fam[lo:lo + chunk_rows]
-            m = sub.size
+
+        def make_chunk(sub, m, in_flight):
             with obs.span("encode", family=fam_label, rows=m):
                 t0 = time.perf_counter()
                 batch = _encode_rows(ns, cls, uid[sub], genes[sub], spec,
@@ -198,11 +253,15 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
                 jbatch = {kk: jnp.asarray(v) for kk, v in batch.items()}
                 t_enc = time.perf_counter() - t0
                 run.encode_s += t_enc
-            if pending:
+            if in_flight:
                 # double-buffer overlap, measured not guessed: host
                 # encode time spent while >= 1 chunk was in flight
                 met.inc("netspace.overlap_encode_s", t_enc)
             met.observe("netspace.chunk_occupancy", m / chunk_rows)
+            return jbatch
+
+        def dispatch(jbatch, m):
+            fault_point("chunk")
             if not is_warm(wk):
                 with obs.span("compile", family=fam_label,
                               rows=chunk_rows, devices=nd):
@@ -222,15 +281,69 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
                     met.observe("netspace.dispatch_s",
                                 time.perf_counter() - t0)
                 run.n_steady += m
-            pending.append((sub, m, out))
+            return out
+
+        def recover(sub, m, exc):
+            if isinstance(exc, SweepKilled):
+                raise exc            # simulated process death: no retry
+            if is_oom(exc) and splits_left > 0 and block > retry.min_rows:
+                met.inc("resilience.chunk_splits")
+                obs.instant("chunk-split", family=fam_label, rows=int(m),
+                            block=block,
+                            to=max(retry.min_rows, block // 2))
+                split_eval(sub)
+                return
+
+            def once():
+                collect(sub, m, dispatch(make_chunk(sub, m, False), m))
+            run_attempts(once, policy=retry,
+                         label=f"{fam_label} chunk", first_exc=exc)
+
+        def finish(sub, m, out, t_disp):
+            nonlocal chunks_done
+            try:
+                collect(sub, m, out)
+            except Exception as exc:  # noqa: BLE001 — recover classifies
+                recover(sub, m, exc)
+            wall = time.perf_counter() - t_disp
+            CHUNK_WATCHDOG.observe(wall, family=fam_label, rows=int(m))
+            retry.check_deadline(wall, family=fam_label, rows=int(m))
+            chunks_done += 1
+            if ckpt is not None:
+                ckpt.maybe_save(ckpt_state, ckpt_meta,
+                                chunks_done=chunks_done)
+
+        for lo in range(0, fam.size, chunk_rows):
+            if gidx < start_cursor:
+                gidx += 1        # merged by the resumed checkpoint
+                continue
+            gidx += 1
+            sub = fam[lo:lo + chunk_rows]
+            m = sub.size
+            try:
+                out = dispatch(make_chunk(sub, m, bool(pending)), m)
+            except Exception as exc:  # noqa: BLE001 — recover classifies
+                # drain in dispatch order first so the chunk cursor stays
+                # contiguous, then recover this chunk synchronously
+                while pending:
+                    finish(*pending.popleft())
+                recover(sub, m, exc)
+                chunks_done += 1
+                if ckpt is not None:
+                    ckpt.maybe_save(ckpt_state, ckpt_meta,
+                                    chunks_done=chunks_done)
+                continue
+            pending.append((sub, m, out, time.perf_counter()))
             while len(pending) > depth:
-                collect(*pending.popleft())
+                finish(*pending.popleft())
         while pending:
-            collect(*pending.popleft())
+            finish(*pending.popleft())
 
     # run-local vs process compile accounting cannot drift: both increment
-    # on the same warm_once() event
+    # on the same warm_once() event (recursive split merges move both)
     assert compile_count() - c0 == run.n_compiles - n_compiles_at_entry
+    if ckpt is not None:
+        ckpt.clear()               # completed: the checkpoint is spent
     run.e2e_s += time.perf_counter() - t_start
     return vals, cols
 
