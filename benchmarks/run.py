@@ -644,6 +644,78 @@ def bench_api(quick: bool) -> None:
           f"seq_compiles={seq_compiles};deterministic={deterministic}")
 
 
+def bench_serve(quick: bool) -> None:
+    """The serving tier under concurrent load: an in-process
+    ``DSEServer`` (ephemeral port, coalescing on) driven by the stdlib
+    load generator at 10 and — full mode — 100 concurrent clients, all
+    posting the coalescible ``examples/queries.json`` layer queries
+    round-robin.
+
+    Headline numbers per client count: request p50/p99 latency and
+    sustained queries/s, plus the terminal-status accounting (every
+    request must end in a report or an explicit shed — zero transport
+    errors, zero hangs) and the server-side counter invariant
+    ``serve.shed + serve.completed == serve.admitted``.
+
+    Writes ``BENCH_serve.json`` (repo root + benchmarks/out) through
+    ``Report.bench``; ci.sh asserts terminal accounting and the
+    invariant."""
+    import asyncio
+    import json as _json
+
+    from repro.api import Session
+    from repro.serve import DSEServer, ServeConfig, run_loadgen
+
+    t0 = time.perf_counter()
+    qpath = os.path.join(os.path.dirname(__file__), os.pardir,
+                         "examples", "queries.json")
+    with open(qpath) as f:
+        wire = [q for q in _json.load(f)["queries"]
+                if "op" in q.get("workload", {})]   # coalescible layers
+    client_counts = [10] if quick else [10, 100]
+
+    async def drive() -> dict:
+        session = Session()
+        server = DSEServer(session, ServeConfig(
+            port=0, exit_on_kill=False, max_queue=256, max_batch=16,
+            flush_interval_s=0.05, default_deadline_s=120.0))
+        await server.start()
+        out: dict = {}
+        try:
+            for clients in client_counts:
+                res = await run_loadgen(
+                    "127.0.0.1", server.port, wire, clients=clients,
+                    requests_per_client=4, timeout=300.0)
+                s = res.summary()
+                s["all_terminal"] = (res.transport_errors == 0
+                                     and res.n_terminal
+                                     == res.n_requests)
+                out[f"clients_{clients}"] = s
+            c = server.metrics()["counters"]
+            out["counters"] = {
+                k: c[k] for k in sorted(c)
+                if k.startswith("serve.") and "[" not in k}
+            out["invariant_holds"] = (
+                c.get("serve.shed", 0.0) + c.get("serve.completed", 0.0)
+                == c.get("serve.admitted", 0.0))
+        finally:
+            await server.stop()
+        return out
+
+    payload = asyncio.run(drive())
+    payload["quick"] = quick
+    payload["n_query_kinds"] = len(wire)
+    payload["elapsed_s"] = round(time.perf_counter() - t0, 3)
+    _write_bench("serve", payload)
+    head = payload[f"clients_{client_counts[-1]}"]
+    us = head["p50_s"] * 1e6
+    _emit("serve", us,
+          f"clients={client_counts[-1]};p99_s={head['p99_s']};"
+          f"qps={head['queries_per_s']};"
+          f"all_terminal={head['all_terminal']};"
+          f"invariant={payload['invariant_holds']}")
+
+
 def bench_kernels(quick: bool) -> None:
     """Interpret-mode kernel validation timings (correctness gate)."""
     import jax
@@ -664,7 +736,7 @@ def bench_kernels(quick: bool) -> None:
 BENCHES = [bench_fig9_validation, bench_fig10_tradeoffs,
            bench_fig11_reuse_bw, bench_fig12_energy_breakdown,
            bench_fig13_dse, bench_dse_rate, bench_mapspace,
-           bench_netspace, bench_api, bench_kernels]
+           bench_netspace, bench_api, bench_serve, bench_kernels]
 
 
 def main(argv=None) -> None:

@@ -18,7 +18,8 @@ python -m pytest -x -q \
     tests/test_netspace.py \
     tests/test_api.py \
     tests/test_obs.py \
-    tests/test_resilience.py
+    tests/test_resilience.py \
+    tests/test_serve.py
 
 echo "== 4-host-device sharded smoke =="
 # The gene pipeline stripes chunks over all local devices; forcing four
@@ -161,6 +162,171 @@ if ls "$RES_CKPT"/sweep-*.npz 2>/dev/null; then
     exit 1
 fi
 
+echo "== DSE serving smoke: loadgen + counter invariant =="
+# The serving headline, end to end through the CLIs: a real
+# repro.launch.serve process on a free port absorbs a 10-client load
+# burst; EVERY request must reach a terminal status, request p99 must
+# stay under the server deadline, and the admission ledger must balance
+# (serve.shed + serve.completed == serve.admitted) — all asserted from
+# the STRUCTURED /metricsz snapshot the loadgen appends, not from logs.
+SERVE_OUT=benchmarks/out
+SERVE_CKPT="$SERVE_OUT/serve_ckpt"
+rm -rf "$SERVE_CKPT"
+mkdir -p "$SERVE_OUT"
+cat > "$SERVE_OUT/serve_queries.json" <<'EOF'
+[
+  {"tag": "s-a",
+   "workload": {"op": {"type": "conv2d", "name": "s-conv1",
+                       "k": 8, "c": 6, "y": 10, "x": 10, "r": 3, "s": 3}},
+   "hardware": {"num_pes": 48, "noc_bw": 12.0},
+   "search": {"objective": "edp", "budget": 32, "block": 64}},
+  {"tag": "s-b",
+   "workload": {"op": {"type": "conv2d", "name": "s-conv2",
+                       "k": 12, "c": 6, "y": 10, "x": 10, "r": 3, "s": 3}},
+   "hardware": {"num_pes": 48, "noc_bw": 12.0},
+   "search": {"objective": "runtime", "budget": 32, "block": 64}}
+]
+EOF
+SERVE_PORT=$(python - <<'EOF'
+import socket
+s = socket.socket()
+s.bind(("127.0.0.1", 0))
+print(s.getsockname()[1])
+s.close()
+EOF
+)
+SERVE_DEADLINE=120
+python -m repro.launch.serve --port "$SERVE_PORT" \
+    --deadline "$SERVE_DEADLINE" --checkpoint-dir "$SERVE_CKPT" \
+    --cache-dir '' --jax-cache-dir '' 2> "$SERVE_OUT/serve.log" &
+SERVE_PID=$!
+python - "$SERVE_PORT" <<'EOF'
+import asyncio, sys, time
+from repro.serve import http_json
+async def wait_ready(port):
+    for _ in range(120):
+        try:
+            st, body = await http_json("127.0.0.1", port, "GET", "/readyz")
+            if st == 200:
+                return
+        except OSError:
+            pass
+        await asyncio.sleep(0.5)
+    raise SystemExit("server never became ready")
+asyncio.run(wait_ready(int(sys.argv[1])))
+EOF
+python -m repro.launch.loadgen --port "$SERVE_PORT" \
+    --file "$SERVE_OUT/serve_queries.json" --clients 10 --requests 2 \
+    --metricsz --out "$SERVE_OUT/serve_load.json"
+SERVE_DEADLINE="$SERVE_DEADLINE" python - <<'EOF'
+import json, os
+d = json.load(open("benchmarks/out/serve_load.json"))
+assert d["transport_errors"] == 0, d
+assert d["n_terminal"] == d["n_requests"] == 20, d
+assert set(d["statuses"]) <= {"200", "429", "503"}, d["statuses"]
+assert d["p99_s"] < float(os.environ["SERVE_DEADLINE"]), d["p99_s"]
+c = d["server_metrics"]["counters"]
+shed = c.get("serve.shed", 0)
+assert shed + c["serve.completed"] == c["serve.admitted"], c
+print(f"serve loadgen OK: p50={d['p50_s']}s p99={d['p99_s']}s "
+      f"qps={d['queries_per_s']} shed={shed}")
+EOF
+# graceful SIGTERM: nothing pending -> clean drain, exit 0
+kill -TERM "$SERVE_PID"
+SERVE_RC=0; wait "$SERVE_PID" || SERVE_RC=$?
+test "$SERVE_RC" -eq 0
+if [ -f "$SERVE_CKPT/serve-pending.json" ]; then
+    echo "FAIL: clean drain left a pending file"
+    exit 1
+fi
+
+echo "== DSE serving kill@serve-drain restart drill =="
+# Chaos drill: the server dies mid-drain (deterministic fault between
+# persisting the unanswered queue and the final flush), a restart with
+# the same checkpoint dir recovers the debt, and the recovered answers
+# are BIT-IDENTICAL to the offline --file oracle on the same queries —
+# the server and the oracle share one execution path.
+python -m repro.launch.serve --port "$SERVE_PORT" \
+    --checkpoint-dir "$SERVE_CKPT" --faults kill@serve-drain:0 \
+    --flush-interval 30 --max-batch 64 --deadline 5 \
+    --cache-dir '' --jax-cache-dir '' 2>> "$SERVE_OUT/serve.log" &
+SERVE_PID=$!
+python - "$SERVE_PORT" "$SERVE_OUT/serve_queries.json" <<'EOF'
+import asyncio, json, sys
+from repro.serve import http_json
+async def main(port, qfile):
+    for _ in range(120):
+        try:
+            st, _ = await http_json("127.0.0.1", port, "GET", "/readyz")
+            if st == 200:
+                break
+        except OSError:
+            pass
+        await asyncio.sleep(0.5)
+    else:
+        raise SystemExit("server never became ready")
+    # park two requests in the (slow-flush) buffer; fire-and-forget —
+    # the drill kills the server before they would be answered
+    for q in json.load(open(qfile)):
+        r, w = await asyncio.open_connection("127.0.0.1", port)
+        body = json.dumps(q).encode()
+        w.write(b"POST /query HTTP/1.1\r\nHost: x\r\n"
+                b"Content-Length: %d\r\nConnection: close\r\n\r\n"
+                % len(body) + body)
+        await w.drain()
+        await asyncio.sleep(0.3)       # let the server admit it
+        w.close()
+asyncio.run(main(int(sys.argv[1]), sys.argv[2]))
+EOF
+kill -TERM "$SERVE_PID"
+SERVE_RC=0; wait "$SERVE_PID" || SERVE_RC=$?
+test "$SERVE_RC" -eq 17   # os._exit(17): death mid-drain IS the drill
+test -f "$SERVE_CKPT/serve-pending.json"
+# restart (no faults): recovery replays the persisted queue at start
+python -m repro.launch.serve --port "$SERVE_PORT" \
+    --checkpoint-dir "$SERVE_CKPT" \
+    --cache-dir '' --jax-cache-dir '' 2>> "$SERVE_OUT/serve.log" &
+SERVE_PID=$!
+python - "$SERVE_PORT" <<'EOF'
+import asyncio, sys
+from repro.serve import http_json
+async def wait_ready(port):
+    for _ in range(240):
+        try:
+            st, _ = await http_json("127.0.0.1", port, "GET", "/readyz")
+            if st == 200:
+                return
+        except OSError:
+            pass
+        await asyncio.sleep(0.5)
+    raise SystemExit("restarted server never became ready")
+asyncio.run(wait_ready(int(sys.argv[1])))
+EOF
+kill -TERM "$SERVE_PID"
+SERVE_RC=0; wait "$SERVE_PID" || SERVE_RC=$?
+test "$SERVE_RC" -eq 0
+test -f "$SERVE_CKPT/serve-recovered.json"
+if [ -f "$SERVE_CKPT/serve-pending.json" ]; then
+    echo "FAIL: recovery did not clear the pending file"
+    exit 1
+fi
+python -m repro.launch.query --file "$SERVE_OUT/serve_queries.json" \
+    --out "$SERVE_OUT/serve_oracle.json" --cache-dir '' --jax-cache-dir ''
+python - <<'EOF'
+import json
+DET = ("kind", "name", "objective", "strategy", "best", "top_k",
+       "pareto", "n_evaluated")
+rec = json.load(open("benchmarks/out/serve_ckpt/serve-recovered.json"))
+oracle = json.load(open("benchmarks/out/serve_oracle.json"))
+by_name = {r["name"]: r for r in rec["reports"]}
+assert len(by_name) == 2, by_name.keys()
+for ref in oracle["reports"]:
+    got = by_name[ref["name"]]
+    for k in DET:
+        assert got.get(k) == ref.get(k), (k, got.get(k), ref.get(k))
+print("killed drain recovered bit-identical to the offline oracle")
+EOF
+
 echo "== benchmarks --quick =="
 python -m benchmarks.run --quick
 
@@ -240,6 +406,24 @@ assert d["run_many_speedup_vs_sequential_search"] >= 2.0, \
     d["run_many_speedup_vs_sequential_search"]
 assert d["schema_version"] == 2 and d["environment"]["backend"], d
 assert "universal.compiles" in d["metrics"]["counters"], d["metrics"]
+EOF
+
+echo "== BENCH_serve smoke artifact =="
+test -f benchmarks/out/BENCH_serve.json
+test -f BENCH_serve.json
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_serve.json"))
+print(json.dumps(d, indent=2))
+# every load-burst request must reach a terminal status, and the
+# admission ledger must balance: shed + completed == admitted
+for key in (k for k in d if k.startswith("clients_")):
+    s = d[key]
+    assert s["all_terminal"] is True, (key, s)
+    assert s["p50_s"] > 0 and s["p99_s"] >= s["p50_s"], (key, s)
+    assert s["queries_per_s"] > 0, (key, s)
+assert d["invariant_holds"] is True, d["counters"]
+assert d["schema_version"] == 2 and d["environment"]["backend"], d
 EOF
 
 echo "CI smoke gate passed."

@@ -84,8 +84,18 @@ class Report:
 
     @staticmethod
     def from_json(d: dict[str, Any]) -> "Report":
+        """Inverse of :meth:`to_json`, tolerant of *newer* payloads:
+        unknown top-level fields ride along in ``extras`` (a v(N) client
+        can read a v(N+x) server's report during a rolling upgrade), but
+        a ``schema_version`` mismatch — result semantics may differ — is
+        a one-line :class:`SpecError` naming both versions."""
+        from ..resilience.errors import SpecError
         d = dict(d)
-        d.pop("schema_version", None)
+        ver = d.pop("schema_version", SCHEMA_VERSION)
+        if ver != SCHEMA_VERSION:
+            raise SpecError(
+                f"report schema_version {ver} != supported "
+                f"{SCHEMA_VERSION}", field="schema_version")
         kw = {f: d.pop(f) for f in _RESERVED[1:] if f in d}
         return Report(**kw, extras=d)
 
@@ -130,6 +140,21 @@ class Report:
                               "message": msg,
                               "details": _jsonable(
                                   getattr(err, "details", {}))}})
+
+    @staticmethod
+    def timeout(query: Query, *, deadline_s: float | None,
+                waited_s: float, where: str = "queued") -> "Report":
+        """A deadline-expired request's terminal answer.  The serving
+        tier returns this instead of hanging: ``extras["timeout"]``
+        marks the report as partial (no best/top_k), with the budget
+        that expired and where the request was when it did."""
+        return Report(
+            kind="timeout", objective=query.search.objective,
+            query=query.describe(), tag=query.tag,
+            elapsed_s=float(waited_s),
+            extras={"timeout": {"deadline_s": deadline_s,
+                                "waited_s": round(float(waited_s), 4),
+                                "where": where}})
 
     @staticmethod
     def from_search(r, query: Query | None = None) -> "Report":

@@ -32,9 +32,9 @@ import numpy as np
 from .. import obs
 from ..core import dnn_models as zoo
 from ..core.tensor_analysis import LayerOp
-from ..resilience import (DeviceError, ReproError, ResilienceConfig,
-                          SpecError, SweepCheckpoint, SweepKilled,
-                          classify)
+from ..resilience import (BudgetExceeded, DeviceError, ReproError,
+                          ResilienceConfig, SpecError, SweepCheckpoint,
+                          SweepKilled, cancel_scope, classify)
 from .report import Report
 from .spec import Hardware, Query, SearchSpec, Workload
 
@@ -65,6 +65,25 @@ def _stats_from_col(col: np.ndarray, macs: float) -> dict[str, float]:
     return {"runtime": r, "energy_pj": e, "l1_kb": float(col[2]),
             "l2_kb": float(col[3]), "edp": e * r,
             "throughput": macs / max(r, 1e-12)}
+
+
+def _deadline_t(query: Query) -> float | None:
+    """The query's ``deadline_s`` budget as an absolute monotonic
+    deadline for :func:`~repro.resilience.cancel_scope` (None = no
+    budget)."""
+    dl = query.search.deadline_s
+    return None if dl is None else time.monotonic() + dl
+
+
+def _batch_deadline_t(queries: Sequence[Query]) -> float | None:
+    """A coalesced flush shares ONE device pass, so its cancel scope is
+    bounded by the most patient member: the max of the members' budgets
+    (members with no budget don't cap the flush — their work continues
+    past their neighbours' deadlines)."""
+    dls = [q.search.deadline_s for q in queries]
+    if any(d is None for d in dls) or not dls:
+        return None
+    return time.monotonic() + max(dls)
 
 
 class FamilyBest:
@@ -166,7 +185,8 @@ class Session:
         # query fingerprint = the span's trace id (only computed when a
         # tracer is live; span() itself is a no-op singleton otherwise)
         fp = query.fingerprint() if obs.tracing_enabled() else None
-        with obs.span("query", kind=kind, id=fp):
+        with obs.span("query", kind=kind, id=fp), \
+                cancel_scope(_deadline_t(query)):
             try:
                 return self._route(kind, query)
             except SweepKilled:
@@ -410,7 +430,18 @@ class Session:
                 if self.coalescible(q):
                     coal.setdefault(self._batch_settings(q), []).append(i)
                 else:
-                    reports[i] = self.run(q)
+                    t_q = time.monotonic()
+                    try:
+                        reports[i] = self.run(q)
+                    except BudgetExceeded:
+                        # deadline expiry is a per-request terminal
+                        # answer, never a batch poison
+                        obs.metrics().inc("session.timeouts")
+                        reports[i] = Report.timeout(
+                            q, deadline_s=q.search.deadline_s,
+                            waited_s=time.monotonic() - t_q,
+                            where="run")
+                        continue
                     budget_rest += self._compile_budget_of(reports[i])
                     n_compiles += reports[i].n_compiles
             n_coal = sum(len(v) for v in coal.values())
@@ -419,11 +450,20 @@ class Session:
             n_devices = 1
             for settings, idxs in coal.items():
                 members = [queries[i] for i in idxs]
+                t_fam = time.monotonic()
                 try:
-                    out = self._run_family_batch(members, settings,
-                                                 coalesce=coalesce)
+                    with cancel_scope(_batch_deadline_t(members)):
+                        out = self._run_family_batch(members, settings,
+                                                     coalesce=coalesce)
                 except SweepKilled:
                     raise          # injected process death: must escape
+                except BudgetExceeded:
+                    # the flush outlived its most patient member's
+                    # budget: every unanswered member gets a terminal
+                    # timeout report (re-running them per-query would
+                    # only burn MORE wall past the deadline)
+                    out = self._timeout_batch(
+                        members, waited_s=time.monotonic() - t_fam)
                 except Exception as e:  # noqa: BLE001 — isolated below
                     if not self.resilience.degrade:
                         raise classify(e, context="coalesced batch") \
@@ -467,6 +507,25 @@ class Session:
             return 2 * n_classes
         return 4 * n_classes           # network_codse: ref + grid pass
 
+    def _timeout_batch(self, queries: list[Query], *,
+                       waited_s: float) -> dict[str, Any]:
+        """A coalesced flush hit its deadline: answer every member with
+        a terminal timeout report (partial marker in extras)."""
+        met = obs.metrics()
+        met.inc("session.batch_timeouts")
+        met.inc("session.timeouts", len(queries))
+        obs.instant("batch-timeout", queries=len(queries),
+                    waited_s=round(waited_s, 3))
+        LOG.warning("coalesced flush exceeded its deadline after %.3fs "
+                    "— answering %d member(s) with timeout reports",
+                    waited_s, len(queries))
+        reports = [Report.timeout(q, deadline_s=q.search.deadline_s,
+                                  waited_s=waited_s, where="flush")
+                   for q in queries]
+        return {"reports": reports, "n_compiles": 0, "n_families": 0,
+                "compile_s": 0.0, "eval_s": 0.0, "encode_s": 0.0,
+                "n_devices": 1}
+
     def _isolate_batch(self, queries: list[Query],
                        exc: BaseException) -> dict[str, Any]:
         """A coalesced device pass failed: degrade the batch to
@@ -485,12 +544,20 @@ class Session:
         n_compiles = 0
         n_devices = 1
         for q in queries:
+            t_q = time.monotonic()
             try:
                 rep = self.run(q)
                 n_compiles += rep.n_compiles
                 n_devices = max(n_devices, rep.n_devices)
             except SweepKilled:
                 raise
+            except BudgetExceeded:
+                obs.metrics().inc("session.timeouts")
+                rep = Report.timeout(q, deadline_s=q.search.deadline_s,
+                                     waited_s=time.monotonic() - t_q,
+                                     where="isolate")
+                reports.append(rep)
+                continue
             except Exception as qe:  # noqa: BLE001 — isolated per query
                 rep = Report.from_error(q, classify(qe, context="query"))
             reports.append(rep)

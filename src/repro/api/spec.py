@@ -319,6 +319,13 @@ class SearchSpec:
     # co-DSE knobs
     codse_top_k: int = 4
     joint_genes: int = 0
+    # serving knobs: wall-clock budget for the whole query.  Enforced
+    # cooperatively at chunk boundaries (an XLA dispatch cannot be
+    # preempted); an expired query surfaces a timeout Report, never a
+    # hang.  None (the default) keeps offline queries unbounded and —
+    # because describe() drops None fields — existing fingerprints
+    # unchanged.
+    deadline_s: float | None = None
 
     def __post_init__(self) -> None:
         _check_enum(self.objective, VALID_OBJECTIVES, "objective")
@@ -334,6 +341,7 @@ class SearchSpec:
         _check_min(self.l1_prune_kb, 1e-9, "l1_prune_kb")
         _check_min(self.l2_prune_kb, 1e-9, "l2_prune_kb")
         _check_min(self.l2_budget_kb, 1e-9, "l2_budget_kb")
+        _check_min(self.deadline_s, 1e-9, "deadline_s")
 
     def describe(self) -> dict[str, Any]:
         return {k: v for k, v in dataclasses.asdict(self).items()
@@ -376,6 +384,27 @@ class Query:
         if self.tag is not None:
             d["tag"] = self.tag
         return d
+
+    def estimated_cost(self) -> float:
+        """Admission-control cost estimate: roughly the number of
+        candidate evaluations the query can trigger.  A fixed hardware
+        point scores ``budget x n_layers``; a co-DSE grid multiplies by
+        the hardware-grid size (plus the joint-gene sweep) — exactly the
+        "grid bomb" shape overload shedding needs to price *before* any
+        engine work runs.  Never raises: an unresolvable workload prices
+        as a single layer."""
+        try:
+            n_layers = len(self.workload.resolve())
+        except Exception:  # noqa: BLE001 — sizing only, run() will raise
+            n_layers = 1
+        n_hw = 1
+        if self.hardware.is_grid:
+            cfg = self.hardware.dse_config()
+            n_hw = len(cfg.pe_range) * len(cfg.bw_range)
+        cost = float(self.search.budget) * n_layers * n_hw
+        if self.hardware.is_grid and self.search.joint_genes:
+            cost += float(self.search.joint_genes) * n_hw
+        return cost
 
     def fingerprint(self) -> str:
         """Stable content hash of the FULL query plus the engine/schema

@@ -210,12 +210,22 @@ def print_error_report(rep: Report) -> None:
           f"{e['type']}: {e['message']}")
 
 
+def print_timeout_report(rep: Report) -> None:
+    t = rep.extras["timeout"]
+    budget = "server default" if t["deadline_s"] is None else \
+        f"{t['deadline_s']}s"
+    print(f"# {rep.name or '(query)'}: TIMEOUT — deadline {budget} "
+          f"expired after {t['waited_s']}s ({t['where']}); "
+          f"partial answer only")
+
+
 PRINTERS = {
     "layer": print_layer_report,
     "layer_codse": print_layer_codse_report,
     "network": print_network_report,
     "network_codse": print_network_codse_report,
     "error": print_error_report,
+    "timeout": print_timeout_report,
 }
 
 
@@ -389,9 +399,14 @@ def main(argv=None) -> None:
         session = session_from_args(args)
 
         if args.file:
+            # the SAME execution path the server's flush worker uses
+            # (serve.coalescer.execute_batch): --file batches are the
+            # offline oracle the coalesced server must answer bit-equal
+            # to
+            from repro.serve import execute_batch
             queries = queries_from_file(args.file)
-            reports = session.run_many(queries,
-                                       coalesce=not args.no_coalesce)
+            reports = execute_batch(session, queries,
+                                    coalesce=not args.no_coalesce)
             for i, rep in enumerate(reports):
                 tag = f" [{rep.tag}]" if rep.tag else ""
                 print(f"\n=== query {i}{tag}: {rep.kind} {rep.name} ===")

@@ -1,68 +1,94 @@
-"""Serving launcher: prefill a batch of requests, then batched decode.
+"""The DSE-as-a-service server CLI — ``Session`` behind HTTP/JSON.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
-        --requests 4 --prompt-len 64 --gen 32 --reduced
+Wire format: ``POST /query`` takes ONE query dict in the
+``examples/queries.json`` schema and answers ``Report.to_json()``;
+``GET /healthz`` / ``/readyz`` / ``/metricsz`` serve liveness,
+readiness, and the structured metrics snapshot.  SIGTERM drains
+gracefully: admission stops, the unanswered queue is persisted, and
+in-flight families flush over sweep checkpoints so a killed drain
+resumes bit-identically on restart.
+
+Examples::
+
+    # serve on an ephemeral port with checkpointed drains
+    PYTHONPATH=src python -m repro.launch.serve --port 8732 \
+        --checkpoint-dir /tmp/serve-ckpt
+
+    # chaos drill: die mid-drain, then restart to recover
+    PYTHONPATH=src python -m repro.launch.serve --port 8732 \
+        --checkpoint-dir /tmp/serve-ckpt --faults kill@serve-drain
 """
 from __future__ import annotations
 
 import argparse
-import time
+import asyncio
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.serve import DSEServer, ServeConfig
 
-from ..configs import REGISTRY, get_config
-from ..models import registry
-from ..models.param import init_params
+from .query import (DEFAULT_CACHE, DEFAULT_JAX_CACHE, LOG, add_obs_args,
+                    cli_errors, obs_scope, session_from_args)
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(REGISTRY), default="olmo-1b")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--reduced", action="store_true", default=True)
+def add_serve_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = ephemeral (printed at startup)")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admitted-but-unanswered bound; beyond it "
+                         "requests shed with 429 + Retry-After")
+    ap.add_argument("--max-cost", type=float, default=1e6,
+                    help="estimated-cost shed gate (0 disables)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="flush when this many requests are buffered")
+    ap.add_argument("--flush-interval", type=float, default=0.05,
+                    metavar="S",
+                    help="... or when the oldest waited this long")
+    ap.add_argument("--deadline", type=float, default=30.0, metavar="S",
+                    help="default per-request budget for queries that "
+                         "carry no search.deadline_s (0 = unbounded)")
+    ap.add_argument("--no-coalesce", action="store_true",
+                    help="flush each request separately (oracle mode)")
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--cache-dir", default=DEFAULT_CACHE)
+    ap.add_argument("--jax-cache-dir", default=DEFAULT_JAX_CACHE)
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="drain persistence + sweep checkpoints: a "
+                         "killed drain resumes bit-identically here")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deterministic fault injection (serve sites: "
+                         "slow@serve-flush, crash@serve-worker, "
+                         "kill@serve-drain)")
+    add_obs_args(ap)
+
+
+def config_from_args(args) -> ServeConfig:
+    return ServeConfig(
+        host=args.host, port=args.port,
+        max_queue=args.max_queue,
+        max_cost=args.max_cost if args.max_cost > 0 else None,
+        max_batch=args.max_batch,
+        flush_interval_s=args.flush_interval,
+        default_deadline_s=args.deadline if args.deadline > 0 else None,
+        coalesce=not args.no_coalesce)
+
+
+async def _serve(args) -> None:
+    session = session_from_args(args)
+    server = DSEServer(session, config_from_args(args))
+    await server.start()
+    server.install_signal_handlers()
+    LOG.warning("ready on http://%s:%d (POST /query; SIGTERM drains)",
+                args.host, server.port)
+    await server.wait_stopped()
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    add_serve_args(ap)
     args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    params = init_params(registry.specs(cfg), jax.random.PRNGKey(0))
-    B, P = args.requests, args.prompt_len
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab, (B, P)), jnp.int32)}
-    if cfg.frontend == "vision":
-        batch["frontend"] = jnp.zeros((B, cfg.frontend_len,
-                                       cfg.frontend_dim), jnp.float32)
-    if cfg.is_encdec:
-        batch["frontend"] = jnp.asarray(
-            rng.normal(size=(B, P, cfg.frontend_dim)), jnp.float32)
-
-    max_len = P + args.gen
-    t0 = time.time()
-    logits, cache = registry.prefill(params, batch, cfg, max_len)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    t_prefill = time.time() - t0
-
-    decode = jax.jit(lambda p, b, c: registry.decode_step(p, b, c, cfg))
-    out = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, {"tokens": tok}, cache)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"prefill {B}x{P} in {t_prefill:.2f}s; "
-          f"decoded {args.gen - 1} steps in {t_dec:.2f}s "
-          f"({B * (args.gen - 1) / max(t_dec, 1e-9):.1f} tok/s)")
-    print("sample:", np.asarray(toks[0, :16]))
-    return 0
+    with cli_errors(), obs_scope(args):
+        asyncio.run(_serve(args))
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    main()

@@ -21,6 +21,7 @@ import hashlib
 import json
 import logging
 import os
+import threading
 from typing import Any
 
 from .. import obs
@@ -141,7 +142,12 @@ def store(cache_dir: str | None, key: str, payload: dict[str, Any]) -> None:
     obs.metrics().inc("result_cache.stores")
     os.makedirs(cache_dir, exist_ok=True)
     payload = dict(payload, version=CACHE_VERSION)
-    tmp = _path(cache_dir, key) + ".tmp"
+    # unique temp name per writer (matches sweepckpt's commit protocol):
+    # concurrent server workers sharing a cache dir each write their own
+    # temp file, so no interleaved writes can produce a torn entry — the
+    # last os.replace wins whole
+    tmp = (_path(cache_dir, key)
+           + f".tmp-{os.getpid()}-{threading.get_ident()}")
     with open(tmp, "w") as f:
         json.dump(payload, f)
     os.replace(tmp, _path(cache_dir, key))

@@ -24,8 +24,8 @@ from ..core.dataflows import table3_for_layer
 from ..core.dse import DSEConfig, DSEResult, run_dse
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import FEATURES, BatchStats, HWTail
-from ..resilience import (SweepCheckpoint, array_hash, fault_point,
-                          pack_top, unpack_top)
+from ..resilience import (SweepCheckpoint, array_hash, check_cancel,
+                          fault_point, pack_top, unpack_top)
 from .search import OBJECTIVES, SearchResult, search
 from .space import (MapSpace, genes_from_points, point_dataflow,
                     sample_genes)
@@ -193,6 +193,7 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
                                     "throughput": float(t)})
 
     for lo in range(start_lo, n, chunk_designs):
+        check_cancel("design-chunk")
         fault_point("design-chunk")
         hi = min(lo + chunk_designs, n)
         flat = np.arange(lo, hi, dtype=np.int64)

@@ -32,9 +32,9 @@ import jax.numpy as jnp
 
 from .. import obs
 from ..resilience import (CHUNK_WATCHDOG, RetryPolicy, SweepCheckpoint,
-                          SweepKilled, array_hash, default_policy,
-                          fault_point, is_oom, pack_top, run_attempts,
-                          unpack_top)
+                          SweepKilled, array_hash, check_cancel,
+                          default_policy, fault_point, is_oom, pack_top,
+                          run_attempts, unpack_top)
 from ..core.tensor_analysis import LayerOp
 from ..core.vectorized import (FEATURES, HWTail, ReduceSpec, UniversalSpec,
                                universal_evaluator,
@@ -610,6 +610,7 @@ def evaluate_genes(op: LayerOp, space: MapSpace, genes: np.ndarray, *,
             return jbatch
 
         def dispatch(jbatch, m):
+            check_cancel("chunk")
             fault_point("chunk")
             if not is_warm(wk):
                 with obs.span("compile", family=fam_label,

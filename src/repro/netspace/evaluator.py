@@ -39,8 +39,9 @@ from ..mapspace.space import dedupe_equivalent_genes, gene_tables
 from ..mapspace.universal import (GeneRun, _pad_rows, compile_count,
                                   encode_genes_base, is_warm, warm_once)
 from ..resilience import (CHUNK_WATCHDOG, RetryPolicy, SweepCheckpoint,
-                          SweepKilled, array_hash, default_policy,
-                          fault_point, is_oom, run_attempts)
+                          SweepKilled, array_hash, check_cancel,
+                          default_policy, fault_point, is_oom,
+                          run_attempts)
 from .space import NetSpace
 
 # The per-row feature columns the composer consumes.
@@ -261,6 +262,7 @@ def evaluate_rows(ns: NetSpace, uid: np.ndarray, genes: np.ndarray, *,
             return jbatch
 
         def dispatch(jbatch, m):
+            check_cancel("chunk")
             fault_point("chunk")
             if not is_warm(wk):
                 with obs.span("compile", family=fam_label,

@@ -18,8 +18,9 @@ from .errors import (BudgetExceeded, CacheError, DeviceError, ReproError,
 from .faultinject import (FaultInjector, InjectedFault, InjectedOOM,
                           SweepKilled, fault_point)
 from . import faultinject
-from .policy import (DEFAULT_POLICY, RetryPolicy, default_policy,
-                     run_attempts, set_default_policy)
+from .policy import (DEFAULT_POLICY, RetryPolicy, cancel_scope,
+                     check_cancel, default_policy, run_attempts,
+                     set_default_policy)
 from .sweepckpt import SweepCheckpoint, array_hash, pack_top, unpack_top
 from .watchdog import CHUNK_WATCHDOG, StragglerWatchdog
 
@@ -58,8 +59,8 @@ __all__ = [
     "SpecError", "classify", "is_oom",
     "FaultInjector", "InjectedFault", "InjectedOOM", "SweepKilled",
     "fault_point", "faultinject",
-    "DEFAULT_POLICY", "RetryPolicy", "default_policy",
-    "run_attempts", "set_default_policy",
+    "DEFAULT_POLICY", "RetryPolicy", "cancel_scope", "check_cancel",
+    "default_policy", "run_attempts", "set_default_policy",
     "SweepCheckpoint", "array_hash", "pack_top", "unpack_top",
     "CHUNK_WATCHDOG", "StragglerWatchdog", "ResilienceConfig",
 ]

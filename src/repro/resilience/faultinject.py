@@ -23,8 +23,16 @@ Spec grammar (comma-separated directives)::
 
 Sites in the tree: ``chunk`` (universal.evaluate_genes and
 netspace.evaluate_rows device chunks), ``design-chunk``
-(codse.joint_sweep outer chunks), ``checkpoint`` (SweepCheckpoint.save).
-Every firing increments ``resilience.faults_injected``.
+(codse.joint_sweep outer chunks), ``checkpoint`` (SweepCheckpoint.save),
+``legacy-batch`` (the grouped fallback engine), and the serving tier's
+``serve-flush`` (head of every batch execution — ``slow@serve-flush``
+stretches a flush past its members' deadlines), ``serve-worker`` (the
+flush worker loop — ``crash@serve-worker`` exercises the
+answer-with-error-reports isolation path), and ``serve-drain``
+(between pending-queue persist and the final drain flush —
+``kill@serve-drain`` is the mid-drain process death the restart
+recovery drill replays).  Every firing increments
+``resilience.faults_injected``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,355 @@
+"""The asyncio HTTP/JSON front of the DSE-as-a-service tier.
+
+Stdlib-only (``asyncio.start_server`` + hand-rolled HTTP/1.1): one
+long-lived :class:`repro.api.Session` behind four routes —
+
+  ``POST /query``     one query in the ``examples/queries.json`` wire
+                      format; answers ``Report.to_json()`` (HTTP 200 —
+                      including terminal ``timeout``/``error`` kinds),
+                      429 + ``Retry-After`` when shed, 400 on a
+                      malformed spec.
+  ``GET /healthz``    process liveness (always 200 while running).
+  ``GET /readyz``     200 only when admitting (503 while recovering or
+                      draining) — the load-balancer signal.
+  ``GET /metricsz``   the full ``Session.metrics()`` snapshot plus a
+                      ``serve`` block (queue depth, EWMA flush seconds,
+                      draining flag).
+
+Counter contract (CI-asserted):
+``serve.shed + serve.completed == serve.admitted`` — every well-formed
+query request either sheds with an explicit 429/503 or completes with a
+terminal report; ``serve.timeouts``/``serve.errors`` are subsets of
+completed.  Malformed requests count ``serve.bad_requests`` and are
+outside the invariant.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+import logging
+import os
+import signal
+from typing import Any
+
+from .. import obs
+from ..api import Query, Report, Session
+from ..resilience import SweepKilled, fault_point
+from .admission import AdmissionController
+from .coalescer import Coalescer, _Pending
+from .deadline import Deadline
+from . import drain as drainmod
+
+LOG = logging.getLogger("repro.serve")
+
+_MAX_HEADER = 64 * 1024
+_MAX_BODY = 8 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of one server instance (defaults sized for the tiny-op CI
+    smoke; production raises the queue/cost bounds)."""
+    host: str = "127.0.0.1"
+    port: int = 0                      # 0 = ephemeral (read server.port)
+    max_queue: int = 64                # admitted-but-unanswered bound
+    max_cost: float | None = 1e6       # estimated-cost shed gate
+    max_batch: int = 16                # flush when this many buffered
+    flush_interval_s: float = 0.05     # ... or when the oldest waited this
+    default_deadline_s: float | None = 30.0
+    grace_s: float = 2.0               # handler backstop past deadline
+    coalesce: bool = True
+    # kill@serve-drain semantics: a real server dies (os._exit — the
+    # chaos drill wants actual process death mid-drain); in-process
+    # tests flip this off so the "dead" server just stops, leaving its
+    # pending file and sweep checkpoints for the restart to recover.
+    exit_on_kill: bool = True
+
+
+def _json_bytes(payload: Any) -> bytes:
+    return json.dumps(payload).encode()
+
+
+class DSEServer:
+    """One serving instance: admission -> coalescer -> session."""
+
+    def __init__(self, session: Session, config: ServeConfig | None = None):
+        self.session = session
+        self.config = config or ServeConfig()
+        self.admission = AdmissionController(
+            max_queue=self.config.max_queue,
+            max_cost=self.config.max_cost)
+        self.coalescer = Coalescer(
+            session, max_batch=self.config.max_batch,
+            flush_interval_s=self.config.flush_interval_s,
+            coalesce=self.config.coalesce,
+            on_kill=self._on_kill,
+            on_flush_done=self.admission.note_flush)
+        self.port: int | None = None
+        self._server: asyncio.AbstractServer | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._ready = False
+        self._draining = False
+        self._killed = False
+        self._stopped = asyncio.Event()
+
+    # -- lifecycle -----------------------------------------------------
+
+    async def start(self) -> None:
+        """Recover the previous process's debt (if any), start the
+        flush worker, bind the socket, flip ready."""
+        self._loop = asyncio.get_running_loop()
+        ckpt = self.session.resilience.ckpt_dir
+        if ckpt:
+            await self._loop.run_in_executor(
+                None, lambda: drainmod.recover(
+                    self.session, ckpt, coalesce=self.config.coalesce))
+        self.coalescer.start()
+        self._server = await asyncio.start_server(
+            self._handle, self.config.host, self.config.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._ready = True
+        obs.instant("serve-start", port=self.port)
+        LOG.info("serving on %s:%d", self.config.host, self.port)
+
+    def install_signal_handlers(self) -> None:
+        """SIGTERM/SIGINT -> graceful drain (CLI entry point)."""
+        assert self._loop is not None
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._loop.add_signal_handler(
+                sig, lambda: asyncio.ensure_future(self.drain()))
+
+    async def wait_stopped(self) -> None:
+        await self._stopped.wait()
+
+    async def drain(self) -> None:
+        """The SIGTERM path: stop admitting, persist the unanswered
+        queue, flush in-flight families, exit.  ``kill@serve-drain``
+        fires between persist and flush — the mid-drain death the
+        restart recovery drill exercises."""
+        if self._draining:
+            return
+        self._draining = True
+        self._ready = False
+        met = obs.metrics()
+        met.inc("serve.drains")
+        ckpt = self.session.resilience.ckpt_dir
+        raw = [p.raw for p in self.coalescer.unanswered()]
+        if ckpt and raw:
+            drainmod.persist_pending(ckpt, raw)
+        try:
+            fault_point("serve-drain")
+        except SweepKilled:
+            LOG.warning("killed mid-drain (injected) — pending queue "
+                        "and sweep checkpoints left for recovery")
+            self._on_kill()
+            await self._shutdown()
+            return
+        assert self._loop is not None
+        ok = await self._loop.run_in_executor(None, self.coalescer.drain)
+        if ok and ckpt:
+            drainmod.clear_pending(ckpt)
+        obs.instant("serve-drain-done", flushed=len(raw), clean=ok)
+        await self._shutdown()
+
+    async def stop(self) -> None:
+        """Immediate stop (tests); does NOT drain."""
+        await self._shutdown()
+
+    async def _shutdown(self) -> None:
+        self._ready = False
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        self.coalescer.stop()
+        self._stopped.set()
+
+    def _on_kill(self) -> None:
+        """SweepKilled escaped a serve fault site: simulated process
+        death."""
+        self._killed = True
+        self._ready = False
+        if self.config.exit_on_kill:
+            os._exit(17)            # noqa: SLF001 — death IS the drill
+        # in-process drill: the worker must answer nothing further
+        self.coalescer.mark_killed()
+
+    # -- introspection -------------------------------------------------
+
+    def metrics(self) -> dict[str, Any]:
+        snap = self.session.metrics()
+        snap["serve"] = {
+            "port": self.port,
+            "ready": self._ready,
+            "draining": self._draining,
+            "queue_depth": self.coalescer.depth(),
+            "ewma_flush_s": round(self.admission.ewma_flush_s, 4),
+            "max_queue": self.config.max_queue,
+            "max_batch": self.config.max_batch,
+        }
+        return snap
+
+    # -- HTTP ----------------------------------------------------------
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            req = await asyncio.wait_for(_read_request(reader),
+                                         timeout=30.0)
+            if req is None:
+                return
+            method, path, body = req
+            status, headers, payload = await self._route(method, path,
+                                                         body)
+            await _respond(writer, status, headers, payload)
+        except (asyncio.TimeoutError, ConnectionError,
+                asyncio.IncompleteReadError):
+            pass
+        except Exception:  # noqa: BLE001 — a handler must never leak
+            LOG.exception("request handler failed")
+            try:
+                await _respond(writer, 500, {},
+                               {"error": {"type": "internal"}})
+            except Exception:  # noqa: BLE001
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:  # noqa: BLE001
+                pass
+
+    async def _route(self, method: str, path: str, body: bytes
+                     ) -> tuple[int, dict[str, str], Any]:
+        if method == "GET" and path == "/healthz":
+            return 200, {}, {"ok": True, "killed": self._killed}
+        if method == "GET" and path == "/readyz":
+            if self._ready and not self._draining:
+                return 200, {}, {"ready": True}
+            return 503, {}, {"ready": False,
+                             "draining": self._draining}
+        if method == "GET" and path == "/metricsz":
+            return 200, {}, self.metrics()
+        if method == "POST" and path == "/query":
+            return await self._handle_query(body)
+        return 404, {}, {"error": {"type": "not_found", "path": path}}
+
+    async def _handle_query(self, body: bytes
+                            ) -> tuple[int, dict[str, str], Any]:
+        met = obs.metrics()
+        met.inc("serve.requests")
+        try:
+            raw = json.loads(body.decode())
+            query = Query.from_json(raw)
+        except Exception as e:  # noqa: BLE001 — spec boundary
+            met.inc("serve.bad_requests")
+            msg = str(e).strip().splitlines()[0] if str(e).strip() else ""
+            return 400, {}, {"error": {"type": type(e).__name__,
+                                       "message": msg}}
+        met.inc("serve.admitted")
+
+        retry = {"Retry-After":
+                 str(self.admission.retry_after_s(
+                     self.coalescer.depth(), self.config.max_batch))}
+        if self._draining or not self._ready:
+            met.inc("serve.shed")
+            met.inc("serve.shed_detail", reason="draining")
+            return 503, retry, {"error": {"type": "draining"}}
+        reason = self.admission.decide(query, self.coalescer.depth())
+        if reason is not None:
+            met.inc("serve.shed")
+            met.inc("serve.shed_detail", reason=reason)
+            obs.instant("serve-shed", reason=reason, tag=query.tag)
+            payload = {"error": {"type": "overloaded", "reason": reason,
+                                 "retry_after_s":
+                                     int(retry["Retry-After"])}}
+            if reason == "cost":
+                payload["error"]["estimated_cost"] = \
+                    query.estimated_cost()
+                payload["error"]["max_cost"] = self.admission.max_cost
+            return 429, retry, payload
+
+        deadline = Deadline.stamp(query, self.config.default_deadline_s)
+        assert self._loop is not None
+        fut: asyncio.Future = self._loop.create_future()
+        self.coalescer.put(_Pending(query, raw, deadline,
+                                    _resolver(self._loop, fut)))
+        remaining = deadline.remaining()
+        timeout = None if remaining is None \
+            else max(remaining, 0.0) + self.config.grace_s
+        try:
+            rep: Report = await asyncio.wait_for(fut, timeout)
+        except asyncio.TimeoutError:
+            # backstop: the engine is still holding the batch (or died)
+            # past budget + grace; the client gets a terminal timeout
+            # report NOW, whatever the worker is doing
+            rep = deadline.timeout_report(query, where="in-flight")
+        met.inc("serve.completed")
+        if rep.kind == "timeout":
+            met.inc("serve.timeouts")
+        elif rep.kind == "error":
+            met.inc("serve.errors")
+        return 200, {}, rep.to_json()
+
+
+def _resolver(loop: asyncio.AbstractEventLoop, fut: asyncio.Future):
+    """Thread-safe, idempotent future resolution from the flush
+    worker."""
+    def resolve(result) -> None:
+        def _set() -> None:
+            if fut.done():
+                return             # handler already answered (timeout)
+            if isinstance(result, BaseException):
+                fut.set_exception(result)
+            else:
+                fut.set_result(result)
+        try:
+            loop.call_soon_threadsafe(_set)
+        except RuntimeError:
+            pass               # loop closed — the handler is long gone
+    return resolve
+
+
+async def _read_request(reader: asyncio.StreamReader
+                        ) -> tuple[str, str, bytes] | None:
+    """Minimal HTTP/1.1 request parser: request line, headers,
+    Content-Length body.  Returns None on an empty connection."""
+    line = await reader.readline()
+    if not line.strip():
+        return None
+    parts = line.decode("latin1").split()
+    if len(parts) < 2:
+        raise ValueError(f"bad request line: {line!r}")
+    method, target = parts[0].upper(), parts[1]
+    length = 0
+    total = len(line)
+    while True:
+        h = await reader.readline()
+        total += len(h)
+        if total > _MAX_HEADER:
+            raise ValueError("headers too large")
+        if h in (b"\r\n", b"\n", b""):
+            break
+        name, _, value = h.decode("latin1").partition(":")
+        if name.strip().lower() == "content-length":
+            length = int(value.strip())
+    if length > _MAX_BODY:
+        raise ValueError("body too large")
+    body = await reader.readexactly(length) if length else b""
+    return method, target.split("?")[0], body
+
+
+async def _respond(writer: asyncio.StreamWriter, status: int,
+                   headers: dict[str, str], payload: Any) -> None:
+    reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+              429: "Too Many Requests", 500: "Internal Server Error",
+              503: "Service Unavailable"}.get(status, "OK")
+    body = _json_bytes(payload)
+    head = [f"HTTP/1.1 {status} {reason}",
+            "Content-Type: application/json",
+            f"Content-Length: {len(body)}",
+            "Connection: close"]
+    head += [f"{k}: {v}" for k, v in headers.items()]
+    writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + body)
+    await writer.drain()

@@ -284,6 +284,38 @@ def test_report_roundtrip(session, conv, batch_reports):
         Report(kind="bench", extras={"best": {}}).to_json()
 
 
+def test_report_from_json_forward_compat(session, conv):
+    """A NEWER writer's payload loads on this reader: unknown top-level
+    fields land in ``extras`` (and survive re-serialization); only a
+    schema_version mismatch is a hard, one-line SpecError."""
+    q = Query(Workload.of_layer(conv), Hardware(num_pes=PES, noc_bw=BW),
+              SearchSpec(budget=40, block=BLOCK), tag="fwd")
+    d = session.run(q).to_json()
+    d["a_future_field"] = {"nested": [1, 2]}
+    d["another_one"] = "hello"
+    rep = Report.from_json(d)
+    assert rep.extras["a_future_field"] == {"nested": [1, 2]}
+    assert rep.extras["another_one"] == "hello"
+    assert rep.to_json()["a_future_field"] == {"nested": [1, 2]}
+
+    from repro.resilience import SpecError
+    bad = dict(d, schema_version=d["schema_version"] + 99)
+    with pytest.raises(SpecError, match="schema_version") as ei:
+        Report.from_json(bad)
+    assert ei.value.field == "schema_version"
+
+
+def test_report_timeout_constructor(conv):
+    q = Query(Workload.of_layer(conv), Hardware(num_pes=PES, noc_bw=BW),
+              SearchSpec(budget=40, block=BLOCK), tag="to")
+    rep = Report.timeout(q, deadline_s=1.5, waited_s=1.7, where="flush")
+    assert rep.kind == "timeout" and rep.tag == "to"
+    d = rep.to_json()
+    assert d["timeout"] == {"deadline_s": 1.5, "waited_s": 1.7,
+                            "where": "flush"}
+    assert Report.from_json(d).extras["timeout"]["where"] == "flush"
+
+
 # ----------------------------------------------------------------------
 # Disk-cache keying: schema version + query hash
 # ----------------------------------------------------------------------

@@ -376,6 +376,44 @@ def test_cache_corruption_is_quarantined_miss(tmp_path):
     assert mcache.load(cdir, "deadbeef")["x"] == 2
 
 
+def test_cache_concurrent_writers_never_tear(tmp_path):
+    """Server workers share a cache dir: many threads storing the same
+    key concurrently must never produce a torn entry — every load
+    observes some writer's complete payload."""
+    import threading
+
+    cdir = str(tmp_path)
+    n_writers, n_rounds = 8, 20
+    start = threading.Barrier(n_writers)
+    errors = []
+
+    def writer(wid):
+        try:
+            start.wait()
+            for r in range(n_rounds):
+                mcache.store(cdir, "shared",
+                             {"writer": wid, "round": r,
+                              "pad": "x" * 4096})
+                got = mcache.load(cdir, "shared")
+                assert got is not None, "store then load missed"
+                assert len(got["pad"]) == 4096
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    final = mcache.load(cdir, "shared")
+    assert final["round"] == n_rounds - 1
+    # no leftover temp files: every writer's commit completed
+    leftovers = [f for f in os.listdir(cdir) if ".tmp-" in f]
+    assert not leftovers, leftovers
+
+
 def test_checkpointer_skips_unreadable_manifest(tmp_path):
     ck = Checkpointer(str(tmp_path), keep=3)
     ck.save(1, {"w": np.arange(4)})

@@ -1,0 +1,370 @@
+"""Tests for repro.serve: the hardened DSE-as-a-service tier.
+
+Load-bearing properties:
+
+  * every well-formed request reaches a terminal status — a report
+    (including ``timeout``/``error`` kinds), an explicit 429/503 shed,
+    or a 400 reject — and the counter invariant
+    ``serve.shed + serve.completed == serve.admitted`` holds;
+  * admission backpressure: a full queue sheds with 429 + Retry-After
+    derived from the EWMA flush time; an over-cost query sheds with the
+    estimated cost in the body;
+  * deadlines are enforced cooperatively in the engine chunk loops AND
+    backstopped in the handler — an expired request answers a terminal
+    timeout report, never a hang, even when the flush worker is stuck;
+  * chaos drills: ``crash@serve-worker`` answers error reports and the
+    server keeps serving; ``kill@serve-drain`` leaves the persisted
+    pending queue behind and a restart recovers it bit-identically to
+    the offline oracle;
+  * the coalescing server and the offline ``--file`` batch path share
+    one execution function, so a single-flush batch answers bit-equal
+    to the offline run of the same query set.
+"""
+import asyncio
+import json
+import time
+
+import pytest
+
+from repro import obs
+from repro.api import Query, Report, Session
+from repro.resilience import ResilienceConfig, faultinject
+from repro.serve import (DSEServer, ServeConfig, execute_batch, http_json,
+                         run_loadgen)
+from repro.serve.drain import pending_path, recovered_path
+
+
+@pytest.fixture(autouse=True)
+def _clean_process_state():
+    yield
+    faultinject.clear()
+
+
+def counter(name):
+    return obs.metrics().value(name)
+
+
+def wire_conv(tag, name, *, k=8, c=6, y=10, x=10, objective="edp",
+              budget=32, deadline_s=None):
+    """A small coalescible conv query in the wire (queries.json)
+    format."""
+    search = {"objective": objective, "budget": budget, "block": 64,
+              "top_k": 4}
+    if deadline_s is not None:
+        search["deadline_s"] = deadline_s
+    return {"tag": tag,
+            "workload": {"op": {"type": "conv2d", "name": name,
+                                "k": k, "c": c, "y": y, "x": x,
+                                "r": 3, "s": 3}},
+            "hardware": {"num_pes": 48, "noc_bw": 12.0},
+            "search": search}
+
+
+QUERIES = [wire_conv("a", "sv-a"),
+           wire_conv("b", "sv-b", k=12, objective="runtime"),
+           wire_conv("c", "sv-c", c=8, objective="energy")]
+
+_SLICE = ("kind", "name", "objective", "strategy", "best", "top_k",
+          "pareto", "n_evaluated")
+
+
+def results_slice(body):
+    """The deterministic Report slice out of a wire response body."""
+    return {k: body.get(k) for k in _SLICE}
+
+
+def serve_test(coro_fn, *, config=None, session=None, faults=None,
+               stop=True):
+    """Run ``coro_fn(server)`` against a fresh in-process server on an
+    ephemeral port."""
+    async def main():
+        if faults:
+            faultinject.install(faults)
+        sess = session or Session()
+        srv = DSEServer(sess, config
+                        or ServeConfig(port=0, exit_on_kill=False))
+        await srv.start()
+        try:
+            return await srv_coro(srv)
+        finally:
+            if stop:
+                await srv.stop()
+    srv_coro = coro_fn
+    return asyncio.run(main())
+
+
+async def post(srv, query, timeout=60.0):
+    return await http_json("127.0.0.1", srv.port, "POST", "/query",
+                           query, timeout=timeout)
+
+
+# ----------------------------------------------------------------------
+# Basic serving + endpoints + counter invariant
+# ----------------------------------------------------------------------
+
+def test_query_roundtrip_and_endpoints():
+    async def drill(srv):
+        st, body = await post(srv, QUERIES[0])
+        assert st == 200
+        assert body["kind"] == "layer"
+        # the wire body IS Report.to_json — it must round-trip
+        rep = Report.from_json(body)
+        assert rep.kind == "layer" and rep.best is not None
+
+        st, health = await http_json("127.0.0.1", srv.port, "GET",
+                                     "/healthz")
+        assert (st, health["ok"]) == (200, True)
+        st, ready = await http_json("127.0.0.1", srv.port, "GET",
+                                    "/readyz")
+        assert (st, ready["ready"]) == (200, True)
+        # the worker clears its in-flight list just AFTER resolving the
+        # answer, so poll the snapshot until the queue reads empty
+        for _ in range(100):
+            st, snap = await http_json("127.0.0.1", srv.port, "GET",
+                                       "/metricsz")
+            assert st == 200
+            if snap["serve"]["queue_depth"] == 0:
+                break
+            await asyncio.sleep(0.05)
+        c = snap["counters"]
+        for name in ("serve.requests", "serve.admitted",
+                     "serve.completed", "serve.flushes"):
+            assert c.get(name, 0) >= 1, name
+        assert snap["serve"]["ready"] is True
+        assert snap["serve"]["queue_depth"] == 0
+        assert (c.get("serve.shed", 0) + c["serve.completed"]
+                == c["serve.admitted"])
+    serve_test(drill)
+
+
+def test_malformed_query_is_400_outside_invariant():
+    async def drill(srv):
+        admitted0 = counter("serve.admitted")
+        st, body = await post(srv, {"workload": {"op": {"type": "nope"}}})
+        assert st == 400
+        assert "error" in body
+        assert counter("serve.bad_requests") >= 1
+        assert counter("serve.admitted") == admitted0
+    serve_test(drill)
+
+
+# ----------------------------------------------------------------------
+# Admission control: queue bound and cost bound
+# ----------------------------------------------------------------------
+
+def test_full_queue_sheds_429_with_retry_after():
+    cfg = ServeConfig(port=0, exit_on_kill=False, max_queue=1,
+                      max_batch=64, flush_interval_s=30.0,
+                      default_deadline_s=1.0, grace_s=0.2)
+
+    async def drill(srv):
+        shed0 = counter("serve.shed")
+        # park one request (the flush trigger is far away), then every
+        # further arrival sees a full queue and sheds deterministically
+        parked = asyncio.create_task(post(srv, QUERIES[0]))
+        await asyncio.sleep(0.2)
+        for q in (QUERIES[1], QUERIES[2]):
+            st, body = await post(srv, q)
+            assert st == 429
+            assert body["error"]["type"] == "overloaded"
+            assert body["error"]["reason"] == "queue"
+            assert body["error"]["retry_after_s"] >= 1
+        # the Retry-After header itself, via one raw exchange
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       srv.port)
+        payload = json.dumps(QUERIES[1]).encode()
+        writer.write(b"POST /query HTTP/1.1\r\nHost: x\r\n"
+                     b"Content-Length: %d\r\n"
+                     b"Connection: close\r\n\r\n" % len(payload)
+                     + payload)
+        await writer.drain()
+        raw = await reader.read()
+        writer.close()
+        assert b"429" in raw.split(b"\r\n", 1)[0]
+        assert b"Retry-After:" in raw
+        # the parked request still terminates (deadline backstop)
+        st, body = await parked
+        assert st == 200 and body["kind"] == "timeout"
+        assert counter("serve.shed") - shed0 == 3
+    serve_test(drill, config=cfg)
+
+
+def test_over_cost_query_sheds_with_estimate():
+    cfg = ServeConfig(port=0, exit_on_kill=False, max_cost=10.0)
+
+    async def drill(srv):
+        st, body = await post(srv, QUERIES[0])   # cost = budget × 1 = 32
+        assert st == 429
+        err = body["error"]
+        assert err["reason"] == "cost"
+        assert err["estimated_cost"] > err["max_cost"] == 10.0
+    serve_test(drill, config=cfg)
+
+
+# ----------------------------------------------------------------------
+# Deadlines: cooperative cancellation + handler backstop, never a hang
+# ----------------------------------------------------------------------
+
+def test_deadline_expiry_returns_timeout_report_not_hang():
+    cfg = ServeConfig(port=0, exit_on_kill=False,
+                      default_deadline_s=0.5, grace_s=0.3)
+
+    async def drill(srv):
+        t0 = time.monotonic()
+        st, body = await post(srv, QUERIES[0], timeout=10.0)
+        waited = time.monotonic() - t0
+        assert st == 200
+        assert body["kind"] == "timeout"
+        assert body["timeout"]["deadline_s"] == 0.5
+        assert body["timeout"]["where"] in ("queued", "flush", "run",
+                                            "in-flight")
+        # bounded by deadline + grace + scheduling slack — NOT by the
+        # injected 5 s flush stall
+        assert waited < 4.0
+        assert counter("serve.timeouts") >= 1
+    # the stall sits in the flush path, past the deadline
+    serve_test(drill, config=cfg, faults="slow@serve-flush:0:5.0")
+
+
+def test_query_carried_deadline_beats_server_default():
+    async def drill(srv):
+        st, body = await post(srv, wire_conv("tiny", "sv-tiny",
+                                             deadline_s=1e-6))
+        assert st == 200 and body["kind"] == "timeout"
+        assert body["timeout"]["deadline_s"] == 1e-6
+    serve_test(drill)
+
+
+# ----------------------------------------------------------------------
+# Chaos drills
+# ----------------------------------------------------------------------
+
+def test_crash_at_worker_answers_errors_and_survives():
+    async def drill(srv):
+        st, body = await post(srv, QUERIES[0])
+        assert st == 200 and body["kind"] == "error"
+        assert body["error"]["type"] == "InjectedFault"
+        # the worker thread survived: the next request serves normally
+        st, body = await post(srv, QUERIES[1])
+        assert st == 200 and body["kind"] == "layer"
+        assert counter("serve.flush_errors") >= 1
+    serve_test(drill, faults="crash@serve-worker:0")
+
+
+def test_clean_drain_flushes_and_clears_pending(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    sess = Session(resilience=ResilienceConfig(ckpt_dir=ck))
+    cfg = ServeConfig(port=0, exit_on_kill=False, max_batch=64,
+                      flush_interval_s=30.0)
+
+    async def drill(srv):
+        posts = [asyncio.create_task(post(srv, q))
+                 for q in QUERIES[:2]]
+        await asyncio.sleep(0.3)          # park them in the buffer
+        assert srv.coalescer.depth() == 2
+        await srv.drain()
+        for t in posts:                   # the final flush answered them
+            st, body = await t
+            assert st == 200 and body["kind"] == "layer"
+        import os
+        assert not os.path.exists(pending_path(ck))
+        assert counter("serve.drains") >= 1
+    serve_test(drill, config=cfg, session=sess, stop=False)
+
+
+def test_kill_mid_drain_then_recovery_matches_oracle(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    import os
+    sess = Session(resilience=ResilienceConfig(
+        ckpt_dir=ck, faults="kill@serve-drain:0"))
+    cfg = ServeConfig(port=0, exit_on_kill=False, max_batch=64,
+                      flush_interval_s=30.0, default_deadline_s=3.0,
+                      grace_s=0.2)
+
+    async def killed_drill(srv):
+        posts = [asyncio.create_task(post(srv, q, timeout=30.0))
+                 for q in QUERIES[:2]]
+        await asyncio.sleep(0.3)
+        await srv.drain()
+        # simulated process death: the pending queue is persisted, the
+        # parked requests are NOT answered with real reports — the
+        # handler backstop gives them terminal timeouts
+        assert os.path.exists(pending_path(ck))
+        for t in posts:
+            st, body = await t
+            assert st == 200 and body["kind"] == "timeout"
+    serve_test(killed_drill, config=cfg, session=sess, stop=False)
+    faultinject.clear()
+
+    recovered0 = counter("serve.recovered")
+    sess2 = Session(resilience=ResilienceConfig(ckpt_dir=ck))
+
+    async def restarted_drill(srv):
+        # recovery ran synchronously inside start()
+        assert not os.path.exists(pending_path(ck))
+        assert counter("serve.recovered") - recovered0 == 2
+        st, ready = await http_json("127.0.0.1", srv.port, "GET",
+                                    "/readyz")
+        assert (st, ready["ready"]) == (200, True)
+    serve_test(restarted_drill, session=sess2)
+
+    rec = json.load(open(recovered_path(ck)))["reports"]
+    oracle = [r.results_json() for r in
+              execute_batch(Session(),
+                            [Query.from_json(q) for q in QUERIES[:2]])]
+    assert json.loads(json.dumps(oracle)) == rec
+
+
+# ----------------------------------------------------------------------
+# Coalesced server == offline --file oracle (single-flush batch)
+# ----------------------------------------------------------------------
+
+def test_single_flush_batch_bit_equal_to_offline_oracle():
+    # family spaces pad over the distinct shapes of a batch, so the
+    # unit of bit-equality is the FLUSH: hold the trigger open long
+    # enough that all three concurrent posts land in one flush
+    cfg = ServeConfig(port=0, exit_on_kill=False, max_batch=8,
+                      flush_interval_s=0.5)
+
+    async def drill(srv):
+        results = await asyncio.gather(*(post(srv, q) for q in QUERIES))
+        assert {body["kind"] for _, body in results} == {"layer"}
+        assert counter("serve.flushes") >= 1
+        return {body["name"]: results_slice(body)
+                for _, body in results}
+    flushes0 = counter("serve.flushes")
+    served = serve_test(drill, config=cfg)
+    assert counter("serve.flushes") - flushes0 == 1, \
+        "batch split across flushes — widen the flush window"
+
+    oracle = execute_batch(Session(),
+                           [Query.from_json(q) for q in QUERIES])
+    for rep in oracle:
+        assert json.loads(json.dumps(rep.results_json())) \
+            == served[rep.name]
+
+
+# ----------------------------------------------------------------------
+# Load: N concurrent clients, every request terminal
+# ----------------------------------------------------------------------
+
+def test_loadgen_all_requests_terminal():
+    cfg = ServeConfig(port=0, exit_on_kill=False, max_batch=8,
+                      flush_interval_s=0.1, default_deadline_s=60.0)
+
+    async def drill(srv):
+        res = await run_loadgen("127.0.0.1", srv.port, QUERIES,
+                                clients=10, requests_per_client=2,
+                                timeout=120.0)
+        snap = srv.metrics()
+        return res, snap
+    res, snap = serve_test(drill, config=cfg)
+    assert res.n_requests == 20
+    assert res.transport_errors == 0
+    assert res.n_terminal == 20               # zero unexplained drops
+    assert set(res.statuses) <= {200, 429, 503}
+    s = res.summary()
+    assert s["p99_s"] > 0 and s["queries_per_s"] > 0
+    c = snap["counters"]
+    assert (c.get("serve.shed", 0) + c["serve.completed"]
+            == c["serve.admitted"])
