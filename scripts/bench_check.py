@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Bench regression gate: fresh BENCH_* artifacts vs committed baselines.
+
+Compares the artifacts a just-finished ``benchmarks.run`` wrote to
+``benchmarks/out/BENCH_<name>.json`` against the baselines committed at
+the repo root — read via ``git show HEAD:BENCH_<name>.json``, because
+the bench run overwrites the working-tree root copies in place.
+
+Direction-aware checks with a relative tolerance (default 20%,
+``BENCH_CHECK_TOL`` overrides): latency-like metrics fail when they grow
+past ``baseline * (1 + tol)``, throughput-like metrics fail when they
+shrink below ``baseline * (1 - tol)``.  A fresh/baseline ``quick`` flag
+mismatch skips that artifact with a note — quick-mode and full-mode
+numbers are not comparable — as does a missing file on either side.
+Exits 1 when any comparable metric regressed.
+
+Usage::
+
+    python scripts/bench_check.py [--out-dir benchmarks/out] [--ref HEAD]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Any
+
+# (artifact, dotted key path, direction) — direction "low" = lower is
+# worse (throughput/speedup), "high" = higher is worse (latency/wall)
+CHECKS: list[tuple[str, str, str]] = [
+    ("mapspace", "end_to_end_mappings_per_s", "low"),
+    ("mapspace", "steady_rate_mappings_per_s", "low"),
+    ("mapspace", "e2e_speedup_vs_legacy", "low"),
+    ("api", "run_many_speedup_vs_sequential_search", "low"),
+    ("netspace", "edp_win_vs_best_uniform", "low"),
+    ("serve", "clients_10.p99_s", "high"),
+    ("serve", "clients_10.queries_per_s", "low"),
+    ("serve", "clients_100.p99_s", "high"),
+    ("serve", "clients_100.queries_per_s", "low"),
+    ("serve", "clients_1000.p99_s", "high"),
+    ("serve", "clients_1000.queries_per_s", "low"),
+]
+
+DEFAULT_TOL = 0.20
+
+
+def _dig(payload: dict, dotted: str) -> Any:
+    cur: Any = payload
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _baseline(name: str, ref: str) -> dict | None:
+    """The committed artifact at ``ref`` (None when it does not exist —
+    e.g. a brand-new benchmark with no baseline yet)."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:BENCH_{name}.json"],
+            capture_output=True, check=True, text=True)
+    except (subprocess.CalledProcessError, OSError):
+        return None
+    try:
+        return json.loads(out.stdout)
+    except ValueError:
+        return None
+
+
+def _fresh(out_dir: str, name: str) -> dict | None:
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check(out_dir: str, ref: str, tol: float) -> int:
+    failures = 0
+    skipped: dict[str, str] = {}
+    fresh_cache: dict[str, dict | None] = {}
+    base_cache: dict[str, dict | None] = {}
+    for name, key, direction in CHECKS:
+        if name in skipped:
+            continue
+        if name not in fresh_cache:
+            fresh_cache[name] = _fresh(out_dir, name)
+            base_cache[name] = _baseline(name, ref)
+        fresh, base = fresh_cache[name], base_cache[name]
+        if fresh is None:
+            skipped[name] = "no fresh artifact (bench not run)"
+            continue
+        if base is None:
+            skipped[name] = f"no committed BENCH_{name}.json baseline"
+            continue
+        if bool(fresh.get("quick")) != bool(base.get("quick")):
+            skipped[name] = (
+                f"quick-mode mismatch (fresh={fresh.get('quick')}, "
+                f"baseline={base.get('quick')}) — not comparable")
+            continue
+        got, want = _dig(fresh, key), _dig(base, key)
+        if got is None or want is None or not isinstance(got, (int, float)) \
+                or not isinstance(want, (int, float)) or want == 0:
+            print(f"  skip  {name}.{key}: missing on one side "
+                  f"(fresh={got}, baseline={want})")
+            continue
+        if direction == "high":
+            bad = got > want * (1.0 + tol)
+            rel = (got - want) / want
+        else:
+            bad = got < want * (1.0 - tol)
+            rel = (want - got) / want
+        verdict = "FAIL" if bad else "ok"
+        print(f"  {verdict:4s}  {name}.{key}: fresh={got:g} "
+              f"baseline={want:g} ({'+' if rel >= 0 else ''}"
+              f"{rel * 100:.1f}% {'worse' if rel > 0 else 'better'}, "
+              f"tol {tol * 100:.0f}%)")
+        failures += int(bad)
+    for name, why in sorted(skipped.items()):
+        print(f"  skip  {name}: {why}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out-dir", default="benchmarks/out",
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref the committed baselines are read from")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_CHECK_TOL",
+                                                 DEFAULT_TOL)),
+                    help="relative regression tolerance (default 0.20 "
+                         "or $BENCH_CHECK_TOL)")
+    args = ap.parse_args(argv)
+    print(f"bench_check: fresh={args.out_dir} vs {args.ref} "
+          f"(tol {args.tol * 100:.0f}%)")
+    failures = check(args.out_dir, args.ref, args.tol)
+    if failures:
+        print(f"bench_check: {failures} regression(s) beyond tolerance")
+        return 1
+    print("bench_check: no regressions beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -327,6 +327,158 @@ for ref in oracle["reports"]:
 print("killed drain recovered bit-identical to the offline oracle")
 EOF
 
+echo "== observability smoke: request tracing + SLO histograms =="
+# The obs v2 headline, end to end through the CLIs: a traced server
+# absorbs a 100-client burst; then (a) ONE client-minted request id must
+# thread server -> coalescer -> engine spans in the saved Perfetto
+# trace, and (b) every report's extras.timing phases must sum to its
+# measured wall latency, and the per-phase Prometheus histogram sums
+# must reconcile with the per-report breakdowns — all from structured
+# artifacts (the loadgen --out payload + the trace file), not logs.
+OBS_OUT=benchmarks/out
+OBS_CKPT="$OBS_OUT/obs_serve_ckpt"
+rm -rf "$OBS_CKPT"
+python -m repro.launch.serve --port "$SERVE_PORT" \
+    --checkpoint-dir "$OBS_CKPT" --max-queue 512 --deadline 120 \
+    --trace "$OBS_OUT/obs_serve_trace.json" \
+    --cache-dir '' --jax-cache-dir '' 2> "$OBS_OUT/obs_serve.log" &
+SERVE_PID=$!
+python - "$SERVE_PORT" <<'EOF'
+import asyncio, sys
+from repro.serve import http_json
+async def wait_ready(port):
+    for _ in range(120):
+        try:
+            st, _ = await http_json("127.0.0.1", port, "GET", "/readyz")
+            if st == 200:
+                return
+        except OSError:
+            pass
+        await asyncio.sleep(0.5)
+    raise SystemExit("server never became ready")
+asyncio.run(wait_ready(int(sys.argv[1])))
+EOF
+python -m repro.launch.loadgen --port "$SERVE_PORT" \
+    --file "$SERVE_OUT/serve_queries.json" --clients 100 --requests 1 \
+    --metricsz --prometheus --save-reports \
+    --out "$OBS_OUT/obs_load.json"
+kill -TERM "$SERVE_PID"
+SERVE_RC=0; wait "$SERVE_PID" || SERVE_RC=$?
+test "$SERVE_RC" -eq 0
+# SIGTERM drain must save the trace + metrics snapshot (the fix this
+# PR ships): both files land in the checkpoint dir
+test -f "$OBS_CKPT/serve-trace.json"
+test -f "$OBS_CKPT/serve-metrics.json"
+python - <<'EOF'
+import json, re
+d = json.load(open("benchmarks/out/obs_load.json"))
+assert d["transport_errors"] == 0, d
+assert d["n_terminal"] == d["n_requests"] == 100, d
+c = d["server_metrics"]["counters"]
+assert c.get("serve.shed", 0) + c["serve.completed"] \
+    == c["serve.admitted"], c
+reports = [e["report"] for e in d["reports"]]
+assert len(reports) == d["statuses"].get("200", 0) and reports, \
+    d["statuses"]
+
+# --- (b) per-report timing: phases sum to measured wall (<=10%) ----
+# (Report.to_json flattens extras to the top level on the wire)
+phase_sums: dict[str, float] = {}
+for rep in reports:
+    tim = rep["timing"]
+    assert tim["request_id"].startswith("lg-"), tim
+    wall, s = tim["wall_s"], sum(tim["phases"].values())
+    assert abs(s - wall) <= max(0.10 * wall, 1e-3), (rep["name"], s, wall)
+    for p, v in tim["phases"].items():
+        phase_sums[p] = phase_sums.get(p, 0.0) + v
+assert "queue_wait" in phase_sums, phase_sums
+
+# --- the Prometheus histograms reconcile with the reports ----------
+text = d["server_prometheus"]
+assert "# TYPE serve_latency_s histogram" in text, "no latency histogram"
+assert 'le="+Inf"' in text
+assert re.search(r'# \{request_id="lg-\d{4}-\d{3}"\}', text), \
+    "no client request-id exemplars in the exposition"
+prom_sums = {m.group(1): float(m.group(2)) for m in re.finditer(
+    r'serve_phase_s_sum\{phase="(\w+)"\} ([0-9.eE+-]+)', text)}
+for p, want in phase_sums.items():
+    got = prom_sums.get(p, 0.0)
+    assert abs(got - want) <= max(0.10 * want, 0.05), (p, got, want)
+n_count = sum(int(float(m.group(1))) for m in re.finditer(
+    r'serve_latency_s_count\{[^}]*\} ([0-9.eE+-]+)', text))
+assert n_count == len(reports), (n_count, len(reports))
+
+# --- (a) one request id threads server -> coalescer -> engine ------
+t = json.load(open("benchmarks/out/obs_serve_trace.json"))
+rid = reports[0]["timing"]["request_id"]
+def has_rid(e):
+    r = e.get("args", {}).get("rid")
+    return r == rid or (isinstance(r, list) and rid in r)
+names = {e["name"] for e in t["traceEvents"] if has_rid(e)}
+for want in ("request", "queue-wait", "flush"):
+    assert want in names, (rid, want, sorted(names))
+assert names & {"query", "run_many", "encode", "compile", "dispatch",
+                "device-pass", "topk-merge"}, \
+    (rid, "no engine spans carry the request id", sorted(names))
+print(f"observability smoke OK: {len(reports)} reports reconciled; "
+      f"rid {rid} threads {len(names)} span names")
+EOF
+
+echo "== crash@serve-worker flight-recorder drill =="
+# Chaos drill for the always-on flight recorder: a deterministic crash
+# in the flush worker must (1) still answer the in-flight request with
+# an error report (no hang), and (2) dump the recorder ring to
+# flight-<ts>.json naming the failing request id, with the error entry
+# and the request's spans inside.
+OBS_FLIGHT="$OBS_OUT/obs_flight"
+rm -rf "$OBS_FLIGHT"
+mkdir -p "$OBS_FLIGHT"
+python -m repro.launch.serve --port "$SERVE_PORT" \
+    --faults crash@serve-worker:0 --flight-dir "$OBS_FLIGHT" \
+    --deadline 60 --cache-dir '' --jax-cache-dir '' \
+    2>> "$OBS_OUT/obs_serve.log" &
+SERVE_PID=$!
+python - "$SERVE_PORT" "$SERVE_OUT/serve_queries.json" <<'EOF'
+import asyncio, json, sys
+from repro.serve import http_json
+async def main(port, qfile):
+    for _ in range(120):
+        try:
+            st, _ = await http_json("127.0.0.1", port, "GET", "/readyz")
+            if st == 200:
+                break
+        except OSError:
+            pass
+        await asyncio.sleep(0.5)
+    else:
+        raise SystemExit("server never became ready")
+    q = json.load(open(qfile))[0]
+    st, body = await http_json("127.0.0.1", port, "POST", "/query", q,
+                               headers={"X-Request-Id": "ci-crash-1"})
+    assert st == 200 and body["kind"] == "error", (st, body)
+asyncio.run(main(int(sys.argv[1]), sys.argv[2]))
+EOF
+kill -TERM "$SERVE_PID"
+SERVE_RC=0; wait "$SERVE_PID" || SERVE_RC=$?
+test "$SERVE_RC" -eq 0
+python - <<'EOF'
+import glob, json
+paths = sorted(glob.glob("benchmarks/out/obs_flight/flight-*.json"))
+assert paths, "crash drill produced no flight-recorder dump"
+doc = json.load(open(paths[0]))
+assert doc["reason"] == "flush-error", doc["reason"]
+assert "ci-crash-1" in doc.get("request_ids", ()), doc.get("request_ids")
+ents = doc["entries"]
+assert any(e["name"] == "serve-flush-error" for e in ents), \
+    [e["name"] for e in ents]
+def rid_has(e):
+    r = e.get("rid")
+    return r == "ci-crash-1" or (isinstance(r, list) and "ci-crash-1" in r)
+assert any(rid_has(e) for e in ents), \
+    "no flight entries attributed to the failing request"
+print(f"flight drill OK: {paths[0]} ({len(ents)} entries)")
+EOF
+
 echo "== benchmarks --quick =="
 python -m benchmarks.run --quick
 
@@ -356,6 +508,11 @@ assert d["e2e_speedup_vs_legacy"] >= 1.0, d["e2e_speedup_vs_legacy"]
 assert d["checkpoint_overhead_frac"] <= 0.05, d["checkpoint_overhead_frac"]
 assert d["checkpoint"]["deterministic"] is True, d["checkpoint"]
 assert d["checkpoint"]["saves"] >= 1, d["checkpoint"]
+# tracing the headline search must cost <= 1% of its wall time, and the
+# traced run must reproduce the untraced answer bit-identically
+assert d["obs_overhead_frac"] <= 0.01, (d["obs_overhead_frac"], d["obs"])
+assert d["obs"]["deterministic"] is True, d["obs"]
+assert d["obs"]["trace_events"] > 0, d["obs"]
 # every BENCH artifact ships the obs metrics snapshot + environment
 # provenance (schema_version 2)
 assert d["schema_version"] == 2, d["schema_version"]
@@ -425,5 +582,11 @@ for key in (k for k in d if k.startswith("clients_")):
 assert d["invariant_holds"] is True, d["counters"]
 assert d["schema_version"] == 2 and d["environment"]["backend"], d
 EOF
+
+echo "== bench regression gate =="
+# Fresh quick-mode artifacts vs the committed baselines (read from git,
+# since the bench run overwrites the root copies).  Full-mode-only
+# baselines (BENCH_serve) are skipped automatically on quick runs.
+python scripts/bench_check.py --out-dir benchmarks/out
 
 echo "CI smoke gate passed."

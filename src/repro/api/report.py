@@ -148,6 +148,10 @@ class Report:
         tier returns this instead of hanging: ``extras["timeout"]``
         marks the report as partial (no best/top_k), with the budget
         that expired and where the request was when it did."""
+        from .. import obs
+        obs.flight_record("event", "timeout-report", where=where,
+                          deadline_s=deadline_s,
+                          waited_s=round(float(waited_s), 4))
         return Report(
             kind="timeout", objective=query.search.objective,
             query=query.describe(), tag=query.tag,

@@ -185,10 +185,13 @@ class Session:
         # query fingerprint = the span's trace id (only computed when a
         # tracer is live; span() itself is a no-op singleton otherwise)
         fp = query.fingerprint() if obs.tracing_enabled() else None
+        acc = obs.PhaseBreakdown()
+        t_q = time.perf_counter()
         with obs.span("query", kind=kind, id=fp), \
                 cancel_scope(_deadline_t(query)):
             try:
-                return self._route(kind, query)
+                with obs.phase_scope(acc):
+                    rep = self._route(kind, query)
             except SweepKilled:
                 raise              # injected process death: must escape
             except Exception as e:  # noqa: BLE001 — classified here
@@ -196,10 +199,14 @@ class Session:
                 if (self.resilience.degrade and kind == "layer"
                         and query.search.pipeline == "gene"
                         and isinstance(err, DeviceError)):
-                    return self._degrade_layer(query, err)
+                    rep = self._degrade_layer(query, err)
+                    self._stamp_timing(rep, t_q, acc)
+                    return rep
                 if err is e:
                     raise
                 raise err from e
+            self._stamp_timing(rep, t_q, acc)
+            return rep
 
     def _route(self, kind: str, query: Query) -> Report:
         if kind == "layer":
@@ -229,13 +236,58 @@ class Session:
                                   "error": err.one_line()}
         return rep
 
+    @staticmethod
+    def _stamp_timing(rep: Report, t0_pc: float,
+                      acc: "obs.PhaseBreakdown") -> None:
+        """Attach the measured phase breakdown to a report: engine span
+        durations accumulated in ``acc`` plus an ``other`` residual, so
+        the phases sum to the measured wall by construction.  First
+        stamp wins — an isolated re-run's inner stamp survives the
+        family-level one (and the serving tier re-finalizes with
+        ``queue_wait`` on top)."""
+        if "timing" not in rep.extras:
+            rep.extras["timing"] = obs.timing_breakdown(
+                time.perf_counter() - t0_pc, acc.snapshot())
+
+    def _result_cache_stats(self) -> dict[str, Any]:
+        """On-disk result-cache occupancy + this process's hit ratio.
+        Occupancy is measured from the directory (shared across
+        processes); hits/misses are this process's counters."""
+        import os
+        entries = size = 0
+        if self.cache_dir:
+            try:
+                with os.scandir(self.cache_dir) as it:
+                    for de in it:
+                        if de.name.startswith("mapsearch-") \
+                                and de.name.endswith(".json"):
+                            entries += 1
+                            try:
+                                size += de.stat().st_size
+                            except OSError:
+                                pass
+            except OSError:
+                pass
+        met = obs.metrics()
+        snap = met.snapshot()["counters"]
+        hits = int(snap.get("result_cache.hits", 0))
+        misses = int(snap.get("result_cache.misses", 0))
+        met.gauge("result_cache.entries", entries)
+        met.gauge("result_cache.bytes", size)
+        return {"entries": entries, "bytes": size,
+                "hits": hits, "misses": misses,
+                "hit_ratio": round(hits / (hits + misses), 4)
+                if hits + misses else None}
+
     def metrics(self) -> dict[str, Any]:
         """The process-wide obs metrics snapshot plus this session's own
         counters — THE structured payload CI budget asserts read (also
         embedded in ``--out`` files and BENCH_* artifacts)."""
+        cache = self._result_cache_stats()   # sets gauges pre-snapshot
         snap = obs.metrics().snapshot()
         snap["session"] = {"n_queries": self.n_queries,
-                           "last_batch": self.last_batch}
+                           "last_batch": self.last_batch,
+                           "result_cache": cache}
         return snap
 
     def run_search(self, op: LayerOp, **kwargs) -> "Any":
@@ -437,10 +489,13 @@ class Session:
                         # deadline expiry is a per-request terminal
                         # answer, never a batch poison
                         obs.metrics().inc("session.timeouts")
-                        reports[i] = Report.timeout(
+                        rep = Report.timeout(
                             q, deadline_s=q.search.deadline_s,
                             waited_s=time.monotonic() - t_q,
                             where="run")
+                        rep.extras["timing"] = obs.timing_breakdown(
+                            time.monotonic() - t_q, {})
+                        reports[i] = rep
                         continue
                     budget_rest += self._compile_budget_of(reports[i])
                     n_compiles += reports[i].n_compiles
@@ -451,8 +506,14 @@ class Session:
             for settings, idxs in coal.items():
                 members = [queries[i] for i in idxs]
                 t_fam = time.monotonic()
+                # family-level phase breakdown: the device pass is
+                # shared, so every member carries the SAME wall/phases
+                # (the serving tier re-finalizes with queue_wait)
+                acc = obs.PhaseBreakdown()
+                t_fam_pc = time.perf_counter()
                 try:
-                    with cancel_scope(_batch_deadline_t(members)):
+                    with cancel_scope(_batch_deadline_t(members)), \
+                            obs.phase_scope(acc):
                         out = self._run_family_batch(members, settings,
                                                      coalesce=coalesce)
                 except SweepKilled:
@@ -470,6 +531,7 @@ class Session:
                             from e
                     out = self._isolate_batch(members, e)
                 for i, rep in zip(idxs, out["reports"]):
+                    self._stamp_timing(rep, t_fam_pc, acc)
                     reports[i] = rep
                 n_compiles += out["n_compiles"]
                 n_families += out["n_families"]

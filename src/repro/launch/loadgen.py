@@ -19,7 +19,7 @@ import argparse
 import asyncio
 import json
 
-from repro.serve import http_json, run_loadgen
+from repro.serve import http_json, http_text, run_loadgen
 
 from .query import _write_json, cli_errors, configure_logging
 
@@ -42,6 +42,15 @@ async def _run(args) -> dict:
         _, snap = await http_json(args.host, args.port, "GET",
                                   "/metricsz")
         summary["server_metrics"] = snap
+    if args.prometheus:
+        _, text = await http_text(args.host, args.port, "GET",
+                                  "/metricsz?format=prometheus")
+        summary["server_prometheus"] = text
+    if args.save_reports:
+        # full report bodies (with extras.timing + request ids) — what
+        # the CI observability smoke reconciles against the histograms
+        summary["reports"] = [{"query_index": qi, "report": body}
+                              for qi, body in result.reports]
     return summary
 
 
@@ -58,6 +67,12 @@ def main(argv=None) -> None:
     ap.add_argument("--timeout", type=float, default=120.0)
     ap.add_argument("--metricsz", action="store_true",
                     help="append the server's /metricsz snapshot")
+    ap.add_argument("--prometheus", action="store_true",
+                    help="append the server's Prometheus text "
+                         "exposition (/metricsz?format=prometheus)")
+    ap.add_argument("--save-reports", action="store_true",
+                    help="embed every 200 report body in the summary "
+                         "(per-request timing breakdowns)")
     ap.add_argument("--out", default=None,
                     help="write the summary JSON here")
     ap.add_argument("-v", "--verbose", action="count", default=0)
@@ -66,7 +81,10 @@ def main(argv=None) -> None:
     configure_logging(args)
     with cli_errors():
         summary = asyncio.run(_run(args))
-        print(json.dumps(summary, indent=2))
+        # keep stdout readable: the bulky payloads only go to --out
+        printed = {k: v for k, v in summary.items()
+                   if k not in ("reports", "server_prometheus")}
+        print(json.dumps(printed, indent=2))
         if args.out:
             _write_json(args.out, summary)
 

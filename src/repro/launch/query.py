@@ -105,6 +105,19 @@ def obs_scope(args):
                 yield
         else:
             yield
+    except (ReproError, SystemExit, KeyboardInterrupt):
+        raise                          # expected exits: no postmortem
+    except BaseException:
+        # unhandled crash: dump the flight-recorder ring next to the
+        # user before the traceback (best effort, never masks it)
+        flight_dir = getattr(args, "flight_dir", None)
+        if flight_dir:
+            try:
+                path = obs.dump_flight(flight_dir, "cli-crash")
+                LOG.warning("wrote flight recorder dump %s", path)
+            except Exception:  # noqa: BLE001 — crash path
+                pass
+        raise
     finally:
         if getattr(args, "trace", None):
             obs.save_trace(args.trace)
@@ -358,6 +371,10 @@ def add_obs_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="wrap the run in jax.profiler (TensorBoard/"
                          "Perfetto device-level dump)")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="flight-recorder dump directory: an unhandled "
+                         "crash writes flight-<ts>.json (recent spans/"
+                         "events/errors) there before the traceback")
 
 
 def main(argv=None) -> None:

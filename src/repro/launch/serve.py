@@ -59,6 +59,8 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                          "slow@serve-flush, crash@serve-worker, "
                          "kill@serve-drain)")
     add_obs_args(ap)
+    # --flight-dir comes from add_obs_args; the server also falls back
+    # to --checkpoint-dir, then $REPRO_FLIGHT_DIR / tmp
 
 
 def config_from_args(args) -> ServeConfig:
@@ -69,7 +71,8 @@ def config_from_args(args) -> ServeConfig:
         max_batch=args.max_batch,
         flush_interval_s=args.flush_interval,
         default_deadline_s=args.deadline if args.deadline > 0 else None,
-        coalesce=not args.no_coalesce)
+        coalesce=not args.no_coalesce,
+        flight_dir=getattr(args, "flight_dir", None))
 
 
 async def _serve(args) -> None:

@@ -20,6 +20,7 @@ from typing import Any, Sequence
 
 import numpy as np
 
+from .. import obs
 from ..core.dataflows import table3_for_layer
 from ..core.dse import DSEConfig, DSEResult, run_dse
 from ..core.tensor_analysis import LayerOp
@@ -198,12 +199,16 @@ def joint_sweep(op: LayerOp, space: MapSpace, genes: np.ndarray,
         hi = min(lo + chunk_designs, n)
         flat = np.arange(lo, hi, dtype=np.int64)
         gi, hwi = flat // h, flat % h
-        res = evaluate_genes(
-            op, space, genes[gi], objective=col, maximize=maximize,
-            k=k, num_pes=pes[hwi], noc_bw=bws[hwi], block=block,
-            n_devices=n_devices, multicast=multicast,
-            spatial_reduction=spatial_reduction, return_vals=False,
-            pareto=True, hw_tail=tail)
+        # container span only (inner compile/device-pass spans carry the
+        # phase attribution) — names one (design x mapping) tile in a
+        # request's trace
+        with obs.span("design-chunk", lo=int(lo), rows=int(hi - lo)):
+            res = evaluate_genes(
+                op, space, genes[gi], objective=col, maximize=maximize,
+                k=k, num_pes=pes[hwi], noc_bw=bws[hwi], block=block,
+                n_devices=n_devices, multicast=multicast,
+                spatial_reduction=spatial_reduction, return_vals=False,
+                pareto=True, hw_tail=tail)
         n_valid += res.run.n_valid
         n_compiles += res.run.n_compiles
         compile_s += res.run.compile_s

@@ -1,0 +1,151 @@
+"""Always-on crash flight recorder: a bounded lock-free ring of recent
+spans/events/errors that dumps to ``flight-<ts>.json`` on unhandled
+handler errors, serve fault drills, SIGQUIT, and timeout reports.
+
+Lock-free by construction: ``itertools.count().__next__`` hands out
+monotonically increasing sequence numbers (a single C-level call —
+atomic under the GIL), and each writer stores its finished entry dict at
+``seq % capacity`` with one list item assignment (also atomic).  Readers
+snapshot the ring without coordination; a concurrently overwritten slot
+yields either the old or the new complete entry, never a torn one.
+
+Recording is cheap enough to stay on unconditionally for events and
+errors.  *Span* capture (every ``obs.span`` exit feeding the ring) is
+opt-in via :func:`enable_flight_spans` — the server turns it on at
+start so postmortem dumps carry the failing request's engine spans,
+while offline CLI hot paths keep the zero-allocation ``NULL_SPAN``
+fast path.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import threading
+import time
+from typing import Any
+
+from . import context as _context
+
+__all__ = [
+    "DEFAULT_CAPACITY",
+    "FlightRecorder",
+    "default_flight_dir",
+    "dump_flight",
+    "enable_flight_spans",
+    "flight_record",
+    "flight_recorder",
+    "flight_spans_enabled",
+]
+
+DEFAULT_CAPACITY = 2048
+
+# Span capture into the ring: module global read on the span fast path.
+_SPANS_ON = False
+
+
+class FlightRecorder:
+    """Bounded ring of recent observability entries + crash dumper."""
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY) -> None:
+        self.capacity = max(int(capacity), 8)
+        self._slots: list[dict | None] = [None] * self.capacity
+        self._next = itertools.count().__next__   # atomic in CPython
+        self._dump_count = itertools.count(1).__next__
+        self._last_dump_t = 0.0
+
+    # -- recording (hot path, lock-free) -------------------------------
+
+    def record(self, kind: str, name: str, /, **fields: Any) -> None:
+        """Append one entry.  ``kind`` is ``span``/``event``/``error``/
+        ``cancel``; the current request ids attach automatically.
+        Positional-only so span args may themselves carry ``kind``/
+        ``name`` keys (the structural keys win on collision)."""
+        entry: dict[str, Any] = {
+            "seq": 0,                      # patched below, keep key first
+            "t": time.time(),
+            "kind": kind,
+            "name": name,
+            "thread": threading.current_thread().name,
+        }
+        rids = _context.current_request_ids()
+        if rids:
+            entry["rid"] = list(rids) if len(rids) > 1 else rids[0]
+        for k, v in fields.items():
+            entry.setdefault(k, v)
+        seq = self._next()
+        entry["seq"] = seq
+        self._slots[seq % self.capacity] = entry
+
+    # -- reading / dumping ---------------------------------------------
+
+    def entries(self) -> list[dict]:
+        """Snapshot of surviving entries, oldest first."""
+        out = [e for e in list(self._slots) if e is not None]
+        out.sort(key=lambda e: e["seq"])
+        return out
+
+    def dump(self, out_dir: str, reason: str, **info: Any) -> str:
+        """Write the ring to ``flight-<ts>-<pid>-<n>.json``; returns the
+        path.  Never raises into the caller's crash path by design —
+        callers wrap it — but the write itself is straightforward."""
+        from .env import environment
+        from .metrics import metrics
+        os.makedirs(out_dir, exist_ok=True)
+        stamp = time.strftime("%Y%m%dT%H%M%S", time.gmtime())
+        path = os.path.join(
+            out_dir,
+            f"flight-{stamp}-{os.getpid()}-{self._dump_count()}.json")
+        payload = {
+            "reason": reason,
+            "dumped_at": time.time(),
+            **info,
+            "environment": environment(),
+            "entries": self.entries(),
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        self._last_dump_t = time.monotonic()
+        metrics().inc("flight.dumps", reason=reason)
+        return path
+
+    def maybe_dump(self, out_dir: str, reason: str,
+                   min_interval_s: float = 5.0, **info: Any) -> str | None:
+        """Rate-limited dump for recurring triggers (timeout storms)."""
+        if time.monotonic() - self._last_dump_t < min_interval_s:
+            return None
+        return self.dump(out_dir, reason, **info)
+
+
+_RECORDER = FlightRecorder()
+
+
+def flight_recorder() -> FlightRecorder:
+    """The process-wide flight recorder (always on)."""
+    return _RECORDER
+
+
+def flight_record(kind: str, name: str, /, **fields: Any) -> None:
+    _RECORDER.record(kind, name, **fields)
+
+
+def dump_flight(out_dir: str, reason: str, **info: Any) -> str:
+    return _RECORDER.dump(out_dir, reason, **info)
+
+
+def enable_flight_spans(on: bool = True) -> None:
+    """Feed every ``obs.span`` exit (and instant) into the ring.  The
+    server enables this at start; offline CLIs keep the null fast path."""
+    global _SPANS_ON
+    _SPANS_ON = bool(on)
+
+
+def flight_spans_enabled() -> bool:
+    return _SPANS_ON
+
+
+def default_flight_dir() -> str:
+    """Dump directory when none is configured: ``$REPRO_FLIGHT_DIR`` or
+    the system temp dir."""
+    import tempfile
+    return os.environ.get("REPRO_FLIGHT_DIR") or tempfile.gettempdir()

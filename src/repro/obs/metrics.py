@@ -17,13 +17,23 @@ labels sorted, e.g. ``universal.compiles_by_family[family=conv1:L2]``.
 """
 from __future__ import annotations
 
+import bisect
 import threading
 from typing import Any
 
-__all__ = ["Metrics", "SNAPSHOT_SCHEMA_VERSION", "metrics"]
+__all__ = ["LATENCY_BUCKETS_S", "Metrics", "SNAPSHOT_SCHEMA_VERSION",
+           "metrics"]
 
-# Version of the dict layout returned by ``Metrics.snapshot``.
+# Version of the dict layout returned by ``Metrics.snapshot``.  Still 1:
+# the bucketed-histogram block is additive (new top-level key), every
+# existing reader keeps working.
 SNAPSHOT_SCHEMA_VERSION = 1
+
+# Default fixed buckets (seconds) for SLO latency histograms: log-spaced
+# from sub-ms warm phases to multi-minute cold compiles.  Fixed across
+# the fleet so histograms aggregate by simple vector addition.
+LATENCY_BUCKETS_S = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+                     0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0)
 
 
 def _key(name: str, labels: dict[str, Any]) -> str:
@@ -58,15 +68,51 @@ class _Hist:
                 "mean": (self.total / self.count) if self.count else 0.0}
 
 
+class _BucketHist:
+    """Fixed-bucket cumulative histogram (Prometheus ``le`` semantics:
+    a value lands in the first bucket whose upper bound is >= it) with
+    one exemplar — the last ``(request_id, value)`` — per bucket."""
+    __slots__ = ("buckets", "counts", "count", "total", "exemplars")
+
+    def __init__(self, buckets: tuple[float, ...]) -> None:
+        self.buckets = tuple(float(b) for b in buckets)
+        self.counts = [0] * (len(self.buckets) + 1)   # last = +Inf
+        self.count = 0
+        self.total = 0.0
+        self.exemplars: dict[int, dict[str, Any]] = {}
+
+    def observe(self, v: float, exemplar: str | None = None) -> None:
+        i = bisect.bisect_left(self.buckets, v)
+        self.counts[i] += 1
+        self.count += 1
+        self.total += v
+        if exemplar is not None:
+            self.exemplars[i] = {"request_id": str(exemplar),
+                                 "value": v}
+
+    def summary(self) -> dict[str, Any]:
+        bounds = [*self.buckets, "+Inf"]
+        cum, rows = 0, []
+        for le, n in zip(bounds, self.counts):
+            cum += n
+            rows.append([le, cum])
+        ex = {str(bounds[i]): e
+              for i, e in sorted(self.exemplars.items())}
+        return {"count": self.count, "total": self.total,
+                "buckets": rows, "exemplars": ex}
+
+
 class Metrics:
     """Thread-safe registry of counters (monotonic), gauges (last value),
-    and histograms (streaming count/total/min/max/mean)."""
+    streaming histograms (count/total/min/max/mean), and fixed-bucket
+    SLO histograms with per-bucket exemplars."""
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._counters: dict[str, float] = {}
         self._gauges: dict[str, float] = {}
         self._hists: dict[str, _Hist] = {}
+        self._bucket_hists: dict[str, _BucketHist] = {}
 
     # -- counters ------------------------------------------------------
 
@@ -105,6 +151,20 @@ class Metrics:
                 h = self._hists[k] = _Hist()
             h.observe(float(value))
 
+    def observe_bucketed(self, name: str, value: float, *,
+                         buckets: tuple[float, ...] = LATENCY_BUCKETS_S,
+                         exemplar: str | None = None,
+                         **labels: Any) -> None:
+        """Record into a fixed-bucket SLO histogram.  ``exemplar`` (a
+        request id) is kept as the bucket's last exemplar and rides into
+        the Prometheus exposition."""
+        k = _key(name, labels)
+        with self._lock:
+            h = self._bucket_hists.get(k)
+            if h is None:
+                h = self._bucket_hists[k] = _BucketHist(buckets)
+            h.observe(float(value), exemplar)
+
     # -- snapshot ------------------------------------------------------
 
     def snapshot(self) -> dict[str, Any]:
@@ -117,9 +177,11 @@ class Metrics:
             gauges = dict(sorted(self._gauges.items()))
             hists = {k: h.summary()
                      for k, h in sorted(self._hists.items())}
+            bucket_hists = {k: h.summary()
+                            for k, h in sorted(self._bucket_hists.items())}
         return {"schema_version": SNAPSHOT_SCHEMA_VERSION,
                 "counters": counters, "gauges": gauges,
-                "histograms": hists}
+                "histograms": hists, "bucket_histograms": bucket_hists}
 
     def reset(self) -> None:
         """Drop every metric.  Test-only: the process registry backs
@@ -130,6 +192,7 @@ class Metrics:
             self._counters.clear()
             self._gauges.clear()
             self._hists.clear()
+            self._bucket_hists.clear()
 
 
 # Process-wide registry.  Always on: recording a counter is a dict update

@@ -26,6 +26,9 @@ import threading
 import time
 from typing import Any
 
+from . import context as _context
+from . import flightrec as _flightrec
+
 __all__ = ["NULL_SPAN", "Tracer", "current_tracer", "disable_tracing",
            "enable_tracing", "instant", "save_trace", "span",
            "tracing_enabled"]
@@ -54,10 +57,14 @@ NULL_SPAN = _NullSpan()
 
 
 class _Span:
-    """One live span: records a complete (``"X"``) event on exit."""
-    __slots__ = ("_tracer", "name", "cat", "args", "_ts")
+    """One live span feeding up to three sinks on exit: the tracer (a
+    complete ``"X"`` event, stamped with the current request ids), the
+    ambient :class:`~repro.obs.context.PhaseBreakdown` (mapped span
+    names accumulate into timing phases), and the flight-recorder ring
+    (when span capture is enabled)."""
+    __slots__ = ("_tracer", "name", "cat", "args", "_t0_pc")
 
-    def __init__(self, tracer: "Tracer", name: str, cat: str,
+    def __init__(self, tracer: "Tracer | None", name: str, cat: str,
                  args: dict[str, Any] | None):
         self._tracer = tracer
         self.name = name
@@ -65,13 +72,30 @@ class _Span:
         self.args = args
 
     def __enter__(self) -> "_Span":
-        self._ts = self._tracer.now_us()
+        self._t0_pc = time.perf_counter()
         return self
 
     def __exit__(self, *exc) -> bool:
+        t1 = time.perf_counter()
+        dur_s = t1 - self._t0_pc
         t = self._tracer
-        t.emit(self.name, self.cat, self._ts, t.now_us() - self._ts,
-               self.args)
+        if t is not None:
+            args = self.args
+            rids = _context.current_request_ids()
+            if rids:
+                args = dict(args) if args else {}
+                args["rid"] = list(rids) if len(rids) > 1 else rids[0]
+            t.emit(self.name, self.cat, (self._t0_pc - t._t0) * 1e6,
+                   dur_s * 1e6, args)
+        acc = _context.current_phases()
+        if acc is not None:
+            phase = _context.PHASE_OF_SPAN.get(self.name)
+            if phase is not None:
+                acc.add(phase, dur_s)
+        if _flightrec._SPANS_ON:
+            _flightrec.flight_record("span", self.name,
+                                     dur_s=round(dur_s, 6),
+                                     **(self.args or {}))
         return False
 
     def set(self, **args) -> None:
@@ -110,6 +134,15 @@ class Tracer:
     def span(self, name: str, cat: str = "repro",
              args: dict[str, Any] | None = None) -> _Span:
         return _Span(self, name, cat, args)
+
+    def emit_between(self, name: str, cat: str, t0_pc: float,
+                     t1_pc: float,
+                     args: dict[str, Any] | None = None) -> None:
+        """Emit a complete event for a past ``perf_counter`` interval —
+        retroactive spans like per-request queue wait, emitted at flush
+        time from the enqueue timestamp."""
+        self.emit(name, cat, (t0_pc - self._t0) * 1e6,
+                  (t1_pc - t0_pc) * 1e6, args)
 
     def instant(self, name: str, cat: str = "repro",
                 args: dict[str, Any] | None = None) -> None:
@@ -184,18 +217,29 @@ def disable_tracing() -> Tracer | None:
 def span(name: str, cat: str = "repro", **args: Any):
     """Context manager timing one region.  THE instrumentation entry
     point: ``with span("compile", family=...):``.  Returns the shared
-    no-op singleton when tracing is disabled."""
+    no-op singleton when every sink is inactive — no tracer, no ambient
+    phase accumulator, no flight span capture — so cold hot-path calls
+    stay zero-allocation."""
     t = _TRACER
-    if t is None:
+    if t is None and not _flightrec._SPANS_ON \
+            and _context.current_phases() is None:
         return NULL_SPAN
     return _Span(t, name, cat, args or None)
 
 
 def instant(name: str, cat: str = "repro", **args: Any) -> None:
-    """Zero-duration marker event (no-op when disabled)."""
+    """Zero-duration marker event (no-op when every sink is off).  Also
+    lands in the flight-recorder ring when span capture is enabled."""
     t = _TRACER
     if t is not None:
-        t.instant(name, cat, args or None)
+        targs = args or None
+        rids = _context.current_request_ids()
+        if rids:
+            targs = dict(args)
+            targs["rid"] = list(rids) if len(rids) > 1 else rids[0]
+        t.instant(name, cat, targs)
+    if _flightrec._SPANS_ON:
+        _flightrec.flight_record("event", name, **args)
 
 
 def save_trace(path: str) -> str | None:

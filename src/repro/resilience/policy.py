@@ -113,6 +113,9 @@ def check_cancel(label: str = "chunk") -> None:
     if over >= 0.0:
         obs.metrics().inc("resilience.cancelled_chunks")
         obs.instant("cancel", label=label, over_s=round(over, 4))
+        # the flight recorder keeps the cancellation even when no tracer
+        # is live — a postmortem dump shows WHERE the budget expired
+        obs.flight_record("cancel", label, over_s=round(over, 4))
         raise BudgetExceeded(
             f"deadline expired {over:.3f}s ago at {label} boundary",
             budget="deadline_s")

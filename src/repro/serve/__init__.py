@@ -25,15 +25,16 @@ from .admission import AdmissionController
 from .coalescer import Coalescer, execute_batch
 from .deadline import Deadline, batch_deadline_t
 from .drain import (clear_pending, load_pending, pending_path,
-                    persist_pending, recover, recovered_path)
-from .loadgen import LoadgenResult, http_json, run_loadgen
+                    persist_pending, recover, recovered_path,
+                    save_observability)
+from .loadgen import LoadgenResult, http_json, http_text, run_loadgen
 from .server import DSEServer, ServeConfig
 
 __all__ = [
     "AdmissionController", "Coalescer", "execute_batch",
     "Deadline", "batch_deadline_t",
     "clear_pending", "load_pending", "pending_path", "persist_pending",
-    "recover", "recovered_path",
-    "LoadgenResult", "http_json", "run_loadgen",
+    "recover", "recovered_path", "save_observability",
+    "LoadgenResult", "http_json", "http_text", "run_loadgen",
     "DSEServer", "ServeConfig",
 ]

@@ -60,8 +60,9 @@ class AdmissionController:
         ``Retry-After`` hint is derived from."""
         with self._lock:
             self._ewma_flush_s += _ALPHA * (wall_s - self._ewma_flush_s)
-        obs.metrics().gauge("serve.ewma_flush_s",
-                            round(self.ewma_flush_s, 4))
+        met = obs.metrics()
+        met.gauge("serve.ewma_flush_s", round(self.ewma_flush_s, 4))
+        met.observe_bucketed("serve.flush_s", wall_s)
 
     @property
     def ewma_flush_s(self) -> float:

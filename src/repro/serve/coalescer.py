@@ -59,17 +59,21 @@ def execute_batch(session: Session, queries: Sequence[Query], *,
 class _Pending:
     """One admitted request parked between admission and its answer."""
 
-    __slots__ = ("query", "raw", "deadline", "resolve", "t_enqueue")
+    __slots__ = ("query", "raw", "deadline", "resolve", "t_enqueue",
+                 "t_enqueue_pc", "rid")
 
     def __init__(self, query: Query, raw: dict[str, Any],
                  deadline: Deadline,
-                 resolve: Callable[[Report | BaseException], None]):
+                 resolve: Callable[[Report | BaseException], None],
+                 rid: str | None = None):
         self.query = query
         self.raw = raw                 # wire-format dict (round-trips,
         #                                unlike Query.describe())
         self.deadline = deadline
         self.resolve = resolve         # thread-safe, idempotent
         self.t_enqueue = time.monotonic()
+        self.t_enqueue_pc = time.perf_counter()  # for retroactive spans
+        self.rid = rid or obs.new_request_id()
 
 
 class Coalescer:
@@ -78,13 +82,15 @@ class Coalescer:
     def __init__(self, session: Session, *, max_batch: int,
                  flush_interval_s: float, coalesce: bool = True,
                  on_kill: Callable[[], None] | None = None,
-                 on_flush_done: Callable[[float], None] | None = None):
+                 on_flush_done: Callable[[float], None] | None = None,
+                 flight_dir: str | None = None):
         self.session = session
         self.max_batch = int(max_batch)
         self.flush_interval_s = float(flush_interval_s)
         self.coalesce = coalesce
         self.on_kill = on_kill          # SweepKilled escape hatch
         self.on_flush_done = on_flush_done   # feeds the admission EWMA
+        self.flight_dir = flight_dir    # crash-dump target (None = off)
         self._cv = threading.Condition()
         self._buf: list[_Pending] = []
         self._in_flight: list[_Pending] = []
@@ -199,37 +205,85 @@ class Coalescer:
         for p in batch:
             if p.deadline.expired():
                 # serve.timeouts is counted once, at the response path
-                p.resolve(p.deadline.timeout_report(p.query,
-                                                    where="queued"))
+                rep = p.deadline.timeout_report(p.query, where="queued")
+                self._finalize_timing(p, rep, time.monotonic())
+                p.resolve(rep)
             else:
                 live.append(p)
         if not live:
             return
         t0 = time.monotonic()
+        t0_pc = time.perf_counter()
         met.inc("serve.flushes")
         met.inc("serve.flush_queries", len(live))
         met.observe("serve.batch_size", len(live))
-        try:
-            fault_point("serve-worker")
-            reports = execute_batch(
-                self.session, [p.query for p in live],
-                coalesce=self.coalesce,
-                deadline_t=batch_deadline_t([p.deadline for p in live]))
-        except SweepKilled:
-            raise
-        except Exception as e:  # noqa: BLE001 — answered per request
-            # run_many already isolates engine failures; anything that
-            # still escapes (e.g. crash@serve-worker before it, or a
-            # poisoned batch with degrade off) answers every member
-            # with an error report instead of taking the server down
-            met.inc("serve.flush_errors")
-            obs.instant("serve-flush-error", queries=len(live),
-                        error=type(e).__name__)
+        rids = [p.rid for p in live]
+        tracer = obs.current_tracer()
+        if tracer is not None:
+            # retroactive per-request queue-wait spans: enqueue -> flush
             for p in live:
-                p.resolve(Report.from_error(p.query, e))
-            return
+                tracer.emit_between("queue-wait", "serve",
+                                    p.t_enqueue_pc, t0_pc,
+                                    {"rid": p.rid})
+        # the request scope rides the contextvar into Session.run_many
+        # and the engine chunk loops on this (the flush worker) thread —
+        # every span/flight entry below is attributable to these rids
+        with obs.request_scope(*rids):
+            try:
+                fault_point("serve-worker")
+                with obs.span("flush", cat="serve", queries=len(live)):
+                    reports = execute_batch(
+                        self.session, [p.query for p in live],
+                        coalesce=self.coalesce,
+                        deadline_t=batch_deadline_t(
+                            [p.deadline for p in live]))
+            except SweepKilled:
+                raise
+            except Exception as e:  # noqa: BLE001 — answered per request
+                # run_many already isolates engine failures; anything
+                # that still escapes (e.g. crash@serve-worker before it,
+                # or a poisoned batch with degrade off) answers every
+                # member with an error report instead of taking the
+                # server down
+                met.inc("serve.flush_errors")
+                obs.instant("serve-flush-error", queries=len(live),
+                            error=type(e).__name__)
+                obs.flight_record("error", "serve-flush-error",
+                                  error=type(e).__name__,
+                                  message=str(e)[:200],
+                                  queries=len(live))
+                if self.flight_dir:
+                    try:
+                        obs.dump_flight(self.flight_dir, "flush-error",
+                                        error=type(e).__name__,
+                                        request_ids=rids)
+                    except Exception:  # noqa: BLE001 — crash path
+                        pass
+                now = time.monotonic()
+                for p in live:
+                    rep = Report.from_error(p.query, e)
+                    self._finalize_timing(p, rep, t0, now=now)
+                    p.resolve(rep)
+                return
         wall = time.monotonic() - t0
         if self.on_flush_done is not None:
             self.on_flush_done(wall)
         for p, rep in zip(live, reports):
+            self._finalize_timing(p, rep, t0)
             p.resolve(rep)
+
+    @staticmethod
+    def _finalize_timing(p: _Pending, rep: Report, t_flush: float,
+                         now: float | None = None) -> None:
+        """Re-finalize the session-stamped ``timing`` breakdown with the
+        server-side view: per-request ``queue_wait`` (enqueue -> flush
+        start) joins the engine phases, wall becomes enqueue -> answer,
+        and ``other`` re-absorbs the residual so the phases still sum to
+        the wall latency the client experienced."""
+        now = time.monotonic() if now is None else now
+        prev = rep.extras.get("timing") or {}
+        phases = dict(prev.get("phases") or {})
+        phases.pop("other", None)
+        phases["queue_wait"] = max(0.0, t_flush - p.t_enqueue)
+        rep.extras["timing"] = obs.timing_breakdown(
+            now - p.t_enqueue, phases, request_id=p.rid)

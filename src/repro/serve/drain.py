@@ -37,6 +37,8 @@ LOG = logging.getLogger("repro.serve")
 
 PENDING_NAME = "serve-pending.json"
 RECOVERED_NAME = "serve-recovered.json"
+TRACE_NAME = "serve-trace.json"
+METRICS_NAME = "serve-metrics.json"
 
 
 def pending_path(ckpt_dir: str) -> str:
@@ -53,6 +55,21 @@ def _atomic_write_json(path: str, payload: Any) -> None:
     with open(tmp, "w") as f:
         json.dump(payload, f, indent=1)
     os.replace(tmp, path)
+
+
+def save_observability(out_dir: str,
+                       metrics_snapshot: dict) -> dict[str, str | None]:
+    """Flush the observability state as part of the drain: the active
+    tracer's events (``serve-trace.json`` — previously lost on SIGTERM,
+    the tracer only ever saved on CLI exit) and a final metrics
+    snapshot (``serve-metrics.json``).  Returns the written paths
+    (trace is None when tracing is off)."""
+    os.makedirs(out_dir, exist_ok=True)
+    trace_path = obs.save_trace(os.path.join(out_dir, TRACE_NAME))
+    metrics_path = os.path.join(out_dir, METRICS_NAME)
+    _atomic_write_json(metrics_path, metrics_snapshot)
+    obs.instant("serve-obs-saved", trace=bool(trace_path))
+    return {"trace": trace_path, "metrics": metrics_path}
 
 
 def persist_pending(ckpt_dir: str, raw_queries: list[dict]) -> str:

@@ -21,11 +21,12 @@ import time
 from typing import Any, Sequence
 
 
-async def http_json(host: str, port: int, method: str, path: str,
+async def _http_raw(host: str, port: int, method: str, path: str,
                     payload: Any = None, *,
-                    timeout: float = 60.0) -> tuple[int, Any]:
-    """One HTTP exchange; returns (status, decoded JSON body)."""
-    async def _go() -> tuple[int, Any]:
+                    headers: dict[str, str] | None = None,
+                    timeout: float = 60.0) -> tuple[int, bytes]:
+    """One HTTP exchange; returns (status, raw response body)."""
+    async def _go() -> tuple[int, bytes]:
         reader, writer = await asyncio.open_connection(host, port)
         try:
             body = b"" if payload is None else json.dumps(payload).encode()
@@ -33,12 +34,13 @@ async def http_json(host: str, port: int, method: str, path: str,
                     "Content-Type: application/json",
                     f"Content-Length: {len(body)}",
                     "Connection: close"]
+            head += [f"{k}: {v}" for k, v in (headers or {}).items()]
             writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + body)
             await writer.drain()
             raw = await reader.read()
             status = int(raw.split(b" ", 2)[1])
             _, _, resp = raw.partition(b"\r\n\r\n")
-            return status, (json.loads(resp) if resp.strip() else None)
+            return status, resp
         finally:
             writer.close()
             try:
@@ -46,6 +48,26 @@ async def http_json(host: str, port: int, method: str, path: str,
             except Exception:  # noqa: BLE001
                 pass
     return await asyncio.wait_for(_go(), timeout)
+
+
+async def http_json(host: str, port: int, method: str, path: str,
+                    payload: Any = None, *,
+                    headers: dict[str, str] | None = None,
+                    timeout: float = 60.0) -> tuple[int, Any]:
+    """One HTTP exchange; returns (status, decoded JSON body)."""
+    status, resp = await _http_raw(host, port, method, path, payload,
+                                   headers=headers, timeout=timeout)
+    return status, (json.loads(resp) if resp.strip() else None)
+
+
+async def http_text(host: str, port: int, method: str, path: str, *,
+                    headers: dict[str, str] | None = None,
+                    timeout: float = 60.0) -> tuple[int, str]:
+    """One HTTP exchange; returns (status, text body) — for the
+    Prometheus ``/metricsz`` exposition."""
+    status, resp = await _http_raw(host, port, method, path,
+                                   headers=headers, timeout=timeout)
+    return status, resp.decode("utf-8", "replace")
 
 
 def _percentile(sorted_vals: list[float], q: float) -> float:
@@ -108,11 +130,15 @@ async def run_loadgen(host: str, port: int,
             # offset by client id so every concurrent wave spans the
             # whole query set (not N copies of one query)
             qi = (ci + ri) % len(queries)
+            # deterministic client-minted request id — the server honors
+            # it, so traces/flight dumps are attributable to (client,
+            # request) without parsing response headers
+            rid = f"lg-{ci:04d}-{ri:03d}"
             t0 = time.monotonic()
             try:
                 status, body = await http_json(
                     host, port, "POST", "/query", queries[qi],
-                    timeout=timeout)
+                    headers={"X-Request-Id": rid}, timeout=timeout)
             except Exception:  # noqa: BLE001 — accounted, not raised
                 async with lock:
                     transport_errors += 1

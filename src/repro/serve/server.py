@@ -13,7 +13,18 @@ long-lived :class:`repro.api.Session` behind four routes —
                       draining) — the load-balancer signal.
   ``GET /metricsz``   the full ``Session.metrics()`` snapshot plus a
                       ``serve`` block (queue depth, EWMA flush seconds,
-                      draining flag).
+                      draining flag).  Content-negotiated: JSON by
+                      default, Prometheus text exposition when the
+                      ``Accept`` header asks for ``text/plain`` /
+                      ``openmetrics`` or with ``?format=prometheus``.
+
+Request observability: every ``POST /query`` gets a request id (an
+inbound ``X-Request-Id`` is honored, else one is minted), echoed in the
+``X-Request-Id`` response header, carried by contextvar through the
+coalescer into the engine chunk loops, and stamped on every trace span,
+flight-recorder entry, and the report's ``extras.timing`` breakdown.
+The always-on flight recorder dumps its ring on unhandled handler
+errors, flush crashes, kills, SIGQUIT, and backstop timeouts.
 
 Counter contract (CI-asserted):
 ``serve.shed + serve.completed == serve.admitted`` — every well-formed
@@ -30,6 +41,8 @@ import json
 import logging
 import os
 import signal
+import time
+import urllib.parse
 from typing import Any
 
 from .. import obs
@@ -64,6 +77,9 @@ class ServeConfig:
     # tests flip this off so the "dead" server just stops, leaving its
     # pending file and sweep checkpoints for the restart to recover.
     exit_on_kill: bool = True
+    # flight-recorder dump directory; None falls back to the session's
+    # checkpoint dir, then $REPRO_FLIGHT_DIR / the system temp dir
+    flight_dir: str | None = None
 
 
 def _json_bytes(payload: Any) -> bytes:
@@ -76,6 +92,9 @@ class DSEServer:
     def __init__(self, session: Session, config: ServeConfig | None = None):
         self.session = session
         self.config = config or ServeConfig()
+        self.flight_dir = (self.config.flight_dir
+                           or session.resilience.ckpt_dir
+                           or obs.default_flight_dir())
         self.admission = AdmissionController(
             max_queue=self.config.max_queue,
             max_cost=self.config.max_cost)
@@ -84,7 +103,8 @@ class DSEServer:
             flush_interval_s=self.config.flush_interval_s,
             coalesce=self.config.coalesce,
             on_kill=self._on_kill,
-            on_flush_done=self.admission.note_flush)
+            on_flush_done=self.admission.note_flush,
+            flight_dir=self.flight_dir)
         self.port: int | None = None
         self._server: asyncio.AbstractServer | None = None
         self._loop: asyncio.AbstractEventLoop | None = None
@@ -105,6 +125,9 @@ class DSEServer:
                 None, lambda: drainmod.recover(
                     self.session, ckpt, coalesce=self.config.coalesce))
         self.coalescer.start()
+        # span capture into the flight-recorder ring: on for the life of
+        # the server so a crash dump always carries recent engine spans
+        obs.enable_flight_spans(True)
         self._server = await asyncio.start_server(
             self._handle, self.config.host, self.config.port)
         self.port = self._server.sockets[0].getsockname()[1]
@@ -113,11 +136,14 @@ class DSEServer:
         LOG.info("serving on %s:%d", self.config.host, self.port)
 
     def install_signal_handlers(self) -> None:
-        """SIGTERM/SIGINT -> graceful drain (CLI entry point)."""
+        """SIGTERM/SIGINT -> graceful drain; SIGQUIT -> flight dump
+        (the live-postmortem poke, process keeps serving)."""
         assert self._loop is not None
         for sig in (signal.SIGTERM, signal.SIGINT):
             self._loop.add_signal_handler(
                 sig, lambda: asyncio.ensure_future(self.drain()))
+        self._loop.add_signal_handler(
+            signal.SIGQUIT, lambda: self._dump_flight("sigquit"))
 
     async def wait_stopped(self) -> None:
         await self._stopped.wait()
@@ -149,6 +175,13 @@ class DSEServer:
         ok = await self._loop.run_in_executor(None, self.coalescer.drain)
         if ok and ckpt:
             drainmod.clear_pending(ckpt)
+        # the tracer and metrics snapshot must survive SIGTERM — flush
+        # them next to the checkpoint/flight artifacts before exit
+        try:
+            drainmod.save_observability(ckpt or self.flight_dir,
+                                        self.metrics())
+        except Exception:  # noqa: BLE001 — drain must complete anyway
+            LOG.exception("saving drain observability failed")
         obs.instant("serve-drain-done", flushed=len(raw), clean=ok)
         await self._shutdown()
 
@@ -163,13 +196,24 @@ class DSEServer:
             await self._server.wait_closed()
             self._server = None
         self.coalescer.stop()
+        obs.enable_flight_spans(False)
         self._stopped.set()
+
+    def _dump_flight(self, reason: str, **info: Any) -> str | None:
+        try:
+            path = obs.dump_flight(self.flight_dir, reason, **info)
+            LOG.warning("flight recorder dumped to %s (%s)", path, reason)
+            return path
+        except Exception:  # noqa: BLE001 — never compound a crash
+            LOG.exception("flight dump failed")
+            return None
 
     def _on_kill(self) -> None:
         """SweepKilled escaped a serve fault site: simulated process
         death."""
         self._killed = True
         self._ready = False
+        self._dump_flight("killed")
         if self.config.exit_on_kill:
             os._exit(17)            # noqa: SLF001 — death IS the drill
         # in-process drill: the worker must answer nothing further
@@ -199,15 +243,19 @@ class DSEServer:
                                          timeout=30.0)
             if req is None:
                 return
-            method, path, body = req
-            status, headers, payload = await self._route(method, path,
-                                                         body)
+            method, path, query_string, req_headers, body = req
+            status, headers, payload = await self._route(
+                method, path, query_string, req_headers, body)
             await _respond(writer, status, headers, payload)
         except (asyncio.TimeoutError, ConnectionError,
                 asyncio.IncompleteReadError):
             pass
-        except Exception:  # noqa: BLE001 — a handler must never leak
+        except Exception as e:  # noqa: BLE001 — a handler must never leak
             LOG.exception("request handler failed")
+            obs.flight_record("error", "handler-error",
+                              error=type(e).__name__,
+                              message=str(e)[:200])
+            self._dump_flight("handler-error", error=type(e).__name__)
             try:
                 await _respond(writer, 500, {},
                                {"error": {"type": "internal"}})
@@ -220,7 +268,8 @@ class DSEServer:
             except Exception:  # noqa: BLE001
                 pass
 
-    async def _route(self, method: str, path: str, body: bytes
+    async def _route(self, method: str, path: str, query_string: str,
+                     req_headers: dict[str, str], body: bytes
                      ) -> tuple[int, dict[str, str], Any]:
         if method == "GET" and path == "/healthz":
             return 200, {}, {"ok": True, "killed": self._killed}
@@ -230,67 +279,113 @@ class DSEServer:
             return 503, {}, {"ready": False,
                              "draining": self._draining}
         if method == "GET" and path == "/metricsz":
+            if _wants_prometheus(query_string, req_headers):
+                from ..obs.prom import CONTENT_TYPE, prometheus_text
+                return 200, {"Content-Type": CONTENT_TYPE}, \
+                    prometheus_text(self.metrics())
             return 200, {}, self.metrics()
         if method == "POST" and path == "/query":
-            return await self._handle_query(body)
+            return await self._handle_query(req_headers, body)
         return 404, {}, {"error": {"type": "not_found", "path": path}}
 
-    async def _handle_query(self, body: bytes
+    async def _handle_query(self, req_headers: dict[str, str],
+                            body: bytes
                             ) -> tuple[int, dict[str, str], Any]:
         met = obs.metrics()
         met.inc("serve.requests")
+        rid = (req_headers.get("x-request-id", "").strip()[:128]
+               or obs.new_request_id())
+        rid_h = {"X-Request-Id": rid}
+        t_recv = time.monotonic()
+        t_recv_pc = time.perf_counter()
         try:
             raw = json.loads(body.decode())
             query = Query.from_json(raw)
         except Exception as e:  # noqa: BLE001 — spec boundary
             met.inc("serve.bad_requests")
             msg = str(e).strip().splitlines()[0] if str(e).strip() else ""
-            return 400, {}, {"error": {"type": type(e).__name__,
-                                       "message": msg}}
+            return 400, rid_h, {"error": {"type": type(e).__name__,
+                                          "message": msg}}
         met.inc("serve.admitted")
 
-        retry = {"Retry-After":
-                 str(self.admission.retry_after_s(
-                     self.coalescer.depth(), self.config.max_batch))}
-        if self._draining or not self._ready:
-            met.inc("serve.shed")
-            met.inc("serve.shed_detail", reason="draining")
-            return 503, retry, {"error": {"type": "draining"}}
-        reason = self.admission.decide(query, self.coalescer.depth())
-        if reason is not None:
-            met.inc("serve.shed")
-            met.inc("serve.shed_detail", reason=reason)
-            obs.instant("serve-shed", reason=reason, tag=query.tag)
-            payload = {"error": {"type": "overloaded", "reason": reason,
-                                 "retry_after_s":
-                                     int(retry["Retry-After"])}}
-            if reason == "cost":
-                payload["error"]["estimated_cost"] = \
-                    query.estimated_cost()
-                payload["error"]["max_cost"] = self.admission.max_cost
-            return 429, retry, payload
+        with obs.request_scope(rid):
+            retry = {"Retry-After":
+                     str(self.admission.retry_after_s(
+                         self.coalescer.depth(), self.config.max_batch)),
+                     **rid_h}
+            if self._draining or not self._ready:
+                met.inc("serve.shed")
+                met.inc("serve.shed_detail", reason="draining")
+                return 503, retry, {"error": {"type": "draining"}}
+            reason = self.admission.decide(query, self.coalescer.depth())
+            if reason is not None:
+                met.inc("serve.shed")
+                met.inc("serve.shed_detail", reason=reason)
+                obs.instant("serve-shed", reason=reason, tag=query.tag)
+                payload = {"error": {"type": "overloaded",
+                                     "reason": reason,
+                                     "retry_after_s":
+                                         int(retry["Retry-After"])}}
+                if reason == "cost":
+                    payload["error"]["estimated_cost"] = \
+                        query.estimated_cost()
+                    payload["error"]["max_cost"] = self.admission.max_cost
+                return 429, retry, payload
 
-        deadline = Deadline.stamp(query, self.config.default_deadline_s)
-        assert self._loop is not None
-        fut: asyncio.Future = self._loop.create_future()
-        self.coalescer.put(_Pending(query, raw, deadline,
-                                    _resolver(self._loop, fut)))
-        remaining = deadline.remaining()
-        timeout = None if remaining is None \
-            else max(remaining, 0.0) + self.config.grace_s
-        try:
-            rep: Report = await asyncio.wait_for(fut, timeout)
-        except asyncio.TimeoutError:
-            # backstop: the engine is still holding the batch (or died)
-            # past budget + grace; the client gets a terminal timeout
-            # report NOW, whatever the worker is doing
-            rep = deadline.timeout_report(query, where="in-flight")
-        met.inc("serve.completed")
-        if rep.kind == "timeout":
-            met.inc("serve.timeouts")
-        elif rep.kind == "error":
-            met.inc("serve.errors")
-        return 200, {}, rep.to_json()
+            deadline = Deadline.stamp(query,
+                                      self.config.default_deadline_s)
+            assert self._loop is not None
+            fut: asyncio.Future = self._loop.create_future()
+            self.coalescer.put(_Pending(query, raw, deadline,
+                                        _resolver(self._loop, fut),
+                                        rid=rid))
+            remaining = deadline.remaining()
+            timeout = None if remaining is None \
+                else max(remaining, 0.0) + self.config.grace_s
+            try:
+                rep: Report = await asyncio.wait_for(fut, timeout)
+            except asyncio.TimeoutError:
+                # backstop: the engine is still holding the batch (or
+                # died) past budget + grace; the client gets a terminal
+                # timeout report NOW, whatever the worker is doing
+                rep = deadline.timeout_report(query, where="in-flight")
+                rep.extras["timing"] = obs.timing_breakdown(
+                    time.monotonic() - t_recv, {}, request_id=rid)
+                obs.flight_record("error", "backstop-timeout", rid=rid,
+                                  tag=query.tag)
+                try:
+                    obs.flight_recorder().maybe_dump(
+                        self.flight_dir, "backstop-timeout",
+                        request_ids=[rid])
+                except Exception:  # noqa: BLE001 — crash path
+                    pass
+            met.inc("serve.completed")
+            if rep.kind == "timeout":
+                met.inc("serve.timeouts")
+            elif rep.kind == "error":
+                met.inc("serve.errors")
+            self._observe_slo(rep, rid, time.monotonic() - t_recv)
+            tracer = obs.current_tracer()
+            if tracer is not None:
+                # the whole request as one retroactive span: receive ->
+                # response, the parent row a Perfetto query follows
+                tracer.emit_between(
+                    "request", "serve", t_recv_pc, time.perf_counter(),
+                    {"rid": rid, "kind": rep.kind, "tag": query.tag})
+            return 200, rid_h, rep.to_json()
+
+    @staticmethod
+    def _observe_slo(rep: Report, rid: str, wall_s: float) -> None:
+        """SLO histograms: end-to-end latency per report kind, plus the
+        per-phase breakdown — both with the request id as exemplar, so
+        a p99 bucket names a concrete request to go trace."""
+        met = obs.metrics()
+        met.observe_bucketed("serve.latency_s", wall_s, kind=rep.kind,
+                             exemplar=rid)
+        timing = rep.extras.get("timing")
+        for phase, v in (timing or {}).get("phases", {}).items():
+            met.observe_bucketed("serve.phase_s", v, phase=phase,
+                                 exemplar=rid)
 
 
 def _resolver(loop: asyncio.AbstractEventLoop, fut: asyncio.Future):
@@ -311,10 +406,24 @@ def _resolver(loop: asyncio.AbstractEventLoop, fut: asyncio.Future):
     return resolve
 
 
+def _wants_prometheus(query_string: str,
+                      headers: dict[str, str]) -> bool:
+    """Content negotiation for ``/metricsz``: JSON by default (every
+    existing consumer), Prometheus text on explicit request."""
+    fmt = urllib.parse.parse_qs(query_string).get("format", [""])[0]
+    if fmt:
+        return fmt == "prometheus"
+    accept = headers.get("accept", "")
+    return "text/plain" in accept or "openmetrics" in accept
+
+
 async def _read_request(reader: asyncio.StreamReader
-                        ) -> tuple[str, str, bytes] | None:
+                        ) -> tuple[str, str, str, dict[str, str],
+                                   bytes] | None:
     """Minimal HTTP/1.1 request parser: request line, headers,
-    Content-Length body.  Returns None on an empty connection."""
+    Content-Length body.  Returns ``(method, path, query_string,
+    headers, body)`` with header names lowercased, or None on an empty
+    connection."""
     line = await reader.readline()
     if not line.strip():
         return None
@@ -322,6 +431,7 @@ async def _read_request(reader: asyncio.StreamReader
     if len(parts) < 2:
         raise ValueError(f"bad request line: {line!r}")
     method, target = parts[0].upper(), parts[1]
+    headers: dict[str, str] = {}
     length = 0
     total = len(line)
     while True:
@@ -332,12 +442,14 @@ async def _read_request(reader: asyncio.StreamReader
         if h in (b"\r\n", b"\n", b""):
             break
         name, _, value = h.decode("latin1").partition(":")
+        headers[name.strip().lower()] = value.strip()
         if name.strip().lower() == "content-length":
             length = int(value.strip())
     if length > _MAX_BODY:
         raise ValueError("body too large")
     body = await reader.readexactly(length) if length else b""
-    return method, target.split("?")[0], body
+    path, _, query_string = target.partition("?")
+    return method, path, query_string, headers, body
 
 
 async def _respond(writer: asyncio.StreamWriter, status: int,
@@ -345,9 +457,16 @@ async def _respond(writer: asyncio.StreamWriter, status: int,
     reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
               429: "Too Many Requests", 500: "Internal Server Error",
               503: "Service Unavailable"}.get(status, "OK")
-    body = _json_bytes(payload)
+    headers = dict(headers)
+    if isinstance(payload, (str, bytes)):
+        body = payload.encode() if isinstance(payload, str) else payload
+        ctype = headers.pop("Content-Type",
+                            "text/plain; charset=utf-8")
+    else:
+        body = _json_bytes(payload)
+        ctype = headers.pop("Content-Type", "application/json")
     head = [f"HTTP/1.1 {status} {reason}",
-            "Content-Type: application/json",
+            f"Content-Type: {ctype}",
             f"Content-Length: {len(body)}",
             "Connection: close"]
     head += [f"{k}: {v}" for k, v in headers.items()]

@@ -1,0 +1,313 @@
+"""Tests for the request-scoped observability layer (obs v2).
+
+Load-bearing properties:
+
+  * request-id and phase scopes ride contextvars: spans inside a
+    ``request_scope`` carry the rid(s), mapped leaf spans accumulate
+    into the active ``PhaseBreakdown``, and both reset cleanly;
+  * ``timing_breakdown`` phases sum to measured wall latency EXACTLY
+    (``other`` is the residual by construction);
+  * the flight recorder is a bounded ring — wrap-around keeps the most
+    recent entries — and its dump file carries reason, environment, and
+    the recorded entries (with rids);
+  * the Prometheus text exposition is strictly line-format valid (under
+    concurrent writers), bucket counts are cumulative-monotonic with a
+    closing ``le="+Inf"``, and counter samples agree exactly with the
+    JSON snapshot they render from.
+"""
+import json
+import re
+import threading
+
+import pytest
+
+from repro import obs
+from repro.obs.metrics import LATENCY_BUCKETS_S, Metrics
+from repro.obs.prom import prometheus_text
+
+
+@pytest.fixture(autouse=True)
+def _tracer_off():
+    """The module toggles tracing/flight-span capture; leave the
+    process pristine for later tests."""
+    yield
+    obs.disable_tracing()
+    obs.enable_flight_spans(False)
+
+
+# ----------------------------------------------------------------------
+# Context: request scope + phase accumulation
+# ----------------------------------------------------------------------
+
+def test_request_scope_attaches_rid_to_spans_and_resets():
+    t = obs.enable_tracing()
+    with obs.request_scope("rid-1"):
+        assert obs.current_request_ids() == ("rid-1",)
+        with obs.span("compile", family="f"):
+            pass
+    assert obs.current_request_ids() == ()
+    with obs.span("compile", family="f"):     # outside any scope
+        pass
+    obs.disable_tracing()
+    evs = [e for e in t.events() if e["name"] == "compile"]
+    assert evs[0]["args"]["rid"] == "rid-1"
+    assert "rid" not in evs[1]["args"]
+
+
+def test_request_scope_multi_rid_and_nesting():
+    t = obs.enable_tracing()
+    with obs.request_scope("a", "b"):
+        with obs.span("encode", rows=1):
+            pass
+        with obs.request_scope("c"):           # inner scope shadows
+            assert obs.current_request_ids() == ("c",)
+        assert obs.current_request_ids() == ("a", "b")
+    obs.disable_tracing()
+    ev = next(e for e in t.events() if e["name"] == "encode")
+    assert ev["args"]["rid"] == ["a", "b"]
+
+
+def test_phase_scope_accumulates_mapped_leaf_spans_only():
+    with obs.phase_scope() as acc:
+        with obs.span("compile", family="f"):
+            pass
+        with obs.span("device-pass", rows=4):
+            pass
+        with obs.span("dispatch", rows=4):     # also -> device_pass
+            pass
+        with obs.span("run_many", queries=2):  # container: unmapped
+            pass
+    phases = acc.snapshot()
+    assert set(phases) == {"compile", "device_pass"}
+    assert all(v >= 0.0 for v in phases.values())
+    assert obs.current_phases() is None
+
+
+def test_phase_breakdown_is_thread_safe():
+    acc = obs.PhaseBreakdown()
+
+    def work():
+        for _ in range(500):
+            acc.add("compile", 0.001)
+    threads = [threading.Thread(target=work) for _ in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert acc.snapshot()["compile"] == pytest.approx(8 * 500 * 0.001)
+
+
+def test_timing_breakdown_phases_sum_to_wall_exactly():
+    doc = obs.timing_breakdown(
+        1.0, {"compile": 0.3, "device_pass": 0.25, "encode": 0.05},
+        request_id="r1")
+    assert doc["request_id"] == "r1"
+    assert doc["phases"]["other"] == pytest.approx(0.4)
+    assert sum(doc["phases"].values()) == pytest.approx(doc["wall_s"])
+    # zero-valued phases are dropped; other never goes negative
+    doc = obs.timing_breakdown(0.1, {"compile": 0.0})
+    assert set(doc["phases"]) == {"other"}
+    doc = obs.timing_breakdown(0.1, {"compile": 0.2})
+    assert doc["phases"]["other"] == 0.0
+    for p in doc["phases"]:
+        assert p in obs.PHASE_NAMES
+
+
+def test_disabled_span_stays_null_without_any_sink():
+    from repro.obs.trace import NULL_SPAN
+    assert obs.span("anything", x=1) is NULL_SPAN
+    with obs.phase_scope():
+        assert obs.span("anything") is not NULL_SPAN
+    obs.enable_flight_spans(True)
+    try:
+        assert obs.span("anything") is not NULL_SPAN
+    finally:
+        obs.enable_flight_spans(False)
+    assert obs.span("anything") is NULL_SPAN
+
+
+# ----------------------------------------------------------------------
+# Flight recorder: bounded ring + dump
+# ----------------------------------------------------------------------
+
+def test_flight_ring_wraps_keeping_most_recent():
+    rec = obs.FlightRecorder(capacity=16)
+    for i in range(40):
+        rec.record("event", f"e{i}", i=i)
+    entries = rec.entries()
+    assert len(entries) == 16
+    assert [e["seq"] for e in entries] == list(range(24, 40))
+    assert entries[-1]["name"] == "e39"
+
+
+def test_flight_record_attaches_rid_and_survives_key_collisions():
+    rec = obs.FlightRecorder(capacity=8)
+    with obs.request_scope("rid-9"):
+        # span args may collide with structural entry keys — the
+        # structural keys must win, not raise
+        rec.record("span", "query", kind="layer", name="shadow",
+                   t=123, dur_s=0.5)
+    (e,) = rec.entries()
+    assert e["rid"] == "rid-9"
+    assert e["kind"] == "span" and e["name"] == "query"
+    assert e["dur_s"] == 0.5
+
+
+def test_flight_dump_writes_reason_env_and_entries(tmp_path):
+    rec = obs.FlightRecorder(capacity=8)
+    with obs.request_scope("rid-d"):
+        rec.record("error", "boom", detail="x")
+    path = rec.dump(str(tmp_path), "unit-test", request_ids=["rid-d"])
+    doc = json.load(open(path))
+    assert doc["reason"] == "unit-test"
+    assert doc["request_ids"] == ["rid-d"]
+    assert "environment" in doc
+    (e,) = [d for d in doc["entries"] if d["name"] == "boom"]
+    assert e["rid"] == "rid-d" and e["detail"] == "x"
+    # rate-limited variant: an immediate second dump is suppressed
+    assert rec.maybe_dump(str(tmp_path), "again") is None
+
+
+def test_flight_span_capture_feeds_ring_when_enabled():
+    rec = obs.flight_recorder()
+    seq0 = [e["seq"] for e in rec.entries()][-1] if rec.entries() else -1
+    obs.enable_flight_spans(True)
+    try:
+        with obs.request_scope("rid-s"):
+            with obs.span("device-pass", rows=2):
+                pass
+    finally:
+        obs.enable_flight_spans(False)
+    new = [e for e in rec.entries() if e["seq"] > seq0]
+    spans = [e for e in new if e["kind"] == "span"
+             and e["name"] == "device-pass"]
+    assert spans and spans[-1]["rid"] == "rid-s"
+    assert spans[-1]["rows"] == 2
+
+
+# ----------------------------------------------------------------------
+# Prometheus exposition: strict format, monotonicity, parity
+# ----------------------------------------------------------------------
+
+_NAME = r"[a-zA-Z_:][a-zA-Z0-9_:]*"
+_LABELS = r'\{' + _NAME + r'="(?:[^"\\]|\\.)*"' + \
+    r'(?:,' + _NAME + r'="(?:[^"\\]|\\.)*")*\}'
+_VALUE = r"-?(?:[0-9]+(?:\.[0-9]+)?(?:e[+-]?[0-9]+)?|inf|nan)"
+_EXEMPLAR = r'(?: # \{request_id="(?:[^"\\]|\\.)*"\} ' + _VALUE + r')?'
+SAMPLE_RE = re.compile(
+    f"^{_NAME}(?:{_LABELS})? {_VALUE}{_EXEMPLAR}$", re.IGNORECASE)
+TYPE_RE = re.compile(
+    f"^# TYPE {_NAME} (counter|gauge|summary|histogram)$")
+
+
+def _assert_valid_exposition(text: str) -> None:
+    assert text.endswith("\n")
+    for line in text.rstrip("\n").split("\n"):
+        if line.startswith("#"):
+            assert TYPE_RE.match(line), f"bad TYPE line: {line!r}"
+        else:
+            assert SAMPLE_RE.match(line), f"bad sample line: {line!r}"
+
+
+def _populated() -> Metrics:
+    m = Metrics()
+    m.inc("serve.requests", 7)
+    m.inc("serve.shed_detail", 2, reason="queue")
+    m.gauge("serve.queue_depth", 3)
+    m.gauge("result_cache.bytes", 4096)
+    m.observe("serve.batch_size", 5)
+    m.observe_bucketed("serve.latency_s", 0.093, kind="layer",
+                       exemplar="ab12")
+    m.observe_bucketed("serve.latency_s", 31.0, kind="layer",
+                       exemplar="cd34")
+    m.observe_bucketed("serve.phase_s", 0.004, phase="compile")
+    return m
+
+
+def test_prometheus_exposition_is_strictly_line_valid():
+    text = prometheus_text(_populated().snapshot())
+    _assert_valid_exposition(text)
+    assert "# TYPE serve_requests counter" in text
+    assert "serve_requests 7" in text
+    assert 'serve_shed_detail{reason="queue"} 2' in text
+    assert "# TYPE serve_latency_s histogram" in text
+    assert 'le="+Inf"' in text
+    assert '# {request_id="ab12"} 0.093' in text
+
+
+def test_prometheus_under_concurrent_writers_stays_valid():
+    m = _populated()
+    stop = threading.Event()
+    errs: list[BaseException] = []
+
+    def writer(i: int):
+        try:
+            while not stop.is_set():
+                m.inc("load.counter", worker=str(i))
+                m.observe_bucketed("load.lat_s", 0.01 * i,
+                                   exemplar=f"w{i}")
+        except BaseException as e:  # noqa: BLE001 — reported below
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(8)]
+    for th in threads:
+        th.start()
+    try:
+        for _ in range(50):
+            _assert_valid_exposition(prometheus_text(m.snapshot()))
+    finally:
+        stop.set()
+        for th in threads:
+            th.join()
+    assert not errs
+
+
+def test_bucket_histogram_cumulative_monotone_with_inf_closing():
+    m = Metrics()
+    for v in (0.0005, 0.003, 0.003, 0.7, 200.0):
+        m.observe_bucketed("lat_s", v)
+    h = m.snapshot()["bucket_histograms"]["lat_s"]
+    cums = [c for _, c in h["buckets"]]
+    assert cums == sorted(cums)
+    assert h["buckets"][-1][0] == "+Inf"
+    assert h["buckets"][-1][1] == h["count"] == 5
+    assert len(h["buckets"]) == len(LATENCY_BUCKETS_S) + 1
+    # le is an INCLUSIVE upper bound: 0.001 lands in the 0.001 bucket
+    m2 = Metrics()
+    m2.observe_bucketed("x", 0.001)
+    assert m2.snapshot()["bucket_histograms"]["x"]["buckets"][0] \
+        == [0.001, 1]
+
+
+def test_prometheus_counters_agree_with_json_snapshot():
+    snap = _populated().snapshot()
+    text = prometheus_text(snap)
+    sampled: dict[str, float] = {}
+    for line in text.rstrip("\n").split("\n"):
+        if line.startswith("#"):
+            continue
+        head, _, rest = line.partition(" ")
+        sampled[head] = float(rest.split(" # ")[0])
+    for key, want in snap["counters"].items():
+        name = key.split("[")[0].replace(".", "_")
+        labels = ""
+        if "[" in key:
+            inner = key[key.index("[") + 1:-1]
+            labels = "{" + ",".join(
+                f'{k}="{v}"' for k, v in
+                (p.split("=", 1) for p in inner.split(","))) + "}"
+        assert sampled[name + labels] == float(want), key
+    # histogram sum/count parity too
+    h = snap["bucket_histograms"]["serve.latency_s[kind=layer]"]
+    assert sampled['serve_latency_s_count{kind="layer"}'] == h["count"]
+    assert sampled['serve_latency_s_sum{kind="layer"}'] \
+        == pytest.approx(h["total"])
+
+
+def test_metric_name_sanitization():
+    m = Metrics()
+    m.inc("weird.name-with/slash", 1)
+    text = prometheus_text(m.snapshot())
+    _assert_valid_exposition(text)
+    assert "weird_name_with_slash 1" in text

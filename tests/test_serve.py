@@ -21,7 +21,9 @@ Load-bearing properties:
     to the offline run of the same query set.
 """
 import asyncio
+import glob
 import json
+import os
 import time
 
 import pytest
@@ -30,7 +32,7 @@ from repro import obs
 from repro.api import Query, Report, Session
 from repro.resilience import ResilienceConfig, faultinject
 from repro.serve import (DSEServer, ServeConfig, execute_batch, http_json,
-                         run_loadgen)
+                         http_text, run_loadgen)
 from repro.serve.drain import pending_path, recovered_path
 
 
@@ -38,6 +40,8 @@ from repro.serve.drain import pending_path, recovered_path
 def _clean_process_state():
     yield
     faultinject.clear()
+    obs.disable_tracing()
+    obs.enable_flight_spans(False)
 
 
 def counter(name):
@@ -342,6 +346,176 @@ def test_single_flush_batch_bit_equal_to_offline_oracle():
     for rep in oracle:
         assert json.loads(json.dumps(rep.results_json())) \
             == served[rep.name]
+
+
+# ----------------------------------------------------------------------
+# Request ids, timing breakdowns, Prometheus exposition, flight recorder
+# ----------------------------------------------------------------------
+
+async def raw_post(srv, query, headers=None):
+    """One raw exchange returning (status, response headers, body)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", srv.port)
+    try:
+        payload = json.dumps(query).encode()
+        head = [f"POST /query HTTP/1.1", "Host: x",
+                f"Content-Length: {len(payload)}", "Connection: close"]
+        head += [f"{k}: {v}" for k, v in (headers or {}).items()]
+        writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + payload)
+        await writer.drain()
+        raw = await reader.read()
+    finally:
+        writer.close()
+    head_blk, _, body = raw.partition(b"\r\n\r\n")
+    lines = head_blk.decode().split("\r\n")
+    status = int(lines[0].split(" ")[1])
+    hdrs = {}
+    for ln in lines[1:]:
+        k, _, v = ln.partition(":")
+        hdrs[k.strip().lower()] = v.strip()
+    return status, hdrs, json.loads(body) if body.strip() else None
+
+
+def test_request_id_honored_and_minted():
+    async def drill(srv):
+        st, hdrs, body = await raw_post(srv, QUERIES[0],
+                                        headers={"X-Request-Id": "my-rid"})
+        assert st == 200
+        assert hdrs["x-request-id"] == "my-rid"
+        assert body["timing"]["request_id"] == "my-rid"
+        # no inbound id: the server mints one and echoes it
+        st, hdrs, body = await raw_post(srv, QUERIES[1])
+        assert st == 200
+        minted = hdrs["x-request-id"]
+        assert minted and body["timing"]["request_id"] == minted
+    serve_test(drill)
+
+
+def test_report_timing_phases_sum_to_wall():
+    async def drill(srv):
+        t0 = time.monotonic()
+        st, hdrs, body = await raw_post(srv, QUERIES[0],
+                                        headers={"X-Request-Id": "tm-1"})
+        client_wall = time.monotonic() - t0
+        assert st == 200 and body["kind"] == "layer"
+        timing = body["timing"]
+        phases = timing["phases"]
+        assert "queue_wait" in phases and "other" in phases
+        # phases sum to the server-measured wall by construction
+        assert sum(phases.values()) == pytest.approx(timing["wall_s"],
+                                                     abs=1e-4)
+        # and the server wall is within the client-observed wall
+        assert 0.0 < timing["wall_s"] <= client_wall + 0.05
+        for p in phases:
+            assert p in obs.PHASE_NAMES
+    serve_test(drill)
+
+
+def test_metricsz_content_negotiation():
+    async def drill(srv):
+        st, snap = await http_json("127.0.0.1", srv.port, "GET",
+                                   "/metricsz")
+        assert st == 200 and isinstance(snap, dict)    # JSON default
+        assert "counters" in snap
+        st, text = await http_text("127.0.0.1", srv.port, "GET",
+                                   "/metricsz?format=prometheus")
+        assert st == 200
+        assert "# TYPE serve_requests counter" in text
+        st, text2 = await http_text(
+            "127.0.0.1", srv.port, "GET", "/metricsz",
+            headers={"Accept": "text/plain"})
+        assert st == 200 and "# TYPE" in text2
+        # the Prometheus counters agree with the JSON snapshot
+        want = snap["counters"].get("serve.requests", 0)
+        got = [ln for ln in text.split("\n")
+               if ln.startswith("serve_requests ")]
+        assert got and float(got[0].split(" ")[1]) >= want
+    async def outer(srv):
+        await post(srv, QUERIES[0])
+        await drill(srv)
+    serve_test(outer)
+
+
+def test_slo_histograms_with_exemplar_request_ids():
+    async def drill(srv):
+        st, hdrs, body = await raw_post(srv, QUERIES[0],
+                                        headers={"X-Request-Id": "ex-1"})
+        assert st == 200
+        st, text = await http_text("127.0.0.1", srv.port, "GET",
+                                   "/metricsz?format=prometheus")
+        assert "# TYPE serve_latency_s histogram" in text
+        assert 'le="+Inf"' in text
+        assert 'request_id="ex-1"' in text
+        # per-phase histograms ride too
+        assert "serve_phase_s_bucket" in text
+    serve_test(drill)
+
+
+def test_crash_drill_dumps_flight_recorder_with_request_spans(tmp_path):
+    fdir = str(tmp_path / "flight")
+    cfg = ServeConfig(port=0, exit_on_kill=False, flight_dir=fdir)
+
+    async def drill(srv):
+        st, hdrs, body = await raw_post(srv, QUERIES[0],
+                                        headers={"X-Request-Id": "cr-1"})
+        assert st == 200 and body["kind"] == "error"
+        dumps = glob.glob(os.path.join(fdir, "flight-*.json"))
+        assert dumps, "crash@serve-worker produced no flight dump"
+        doc = json.load(open(dumps[0]))
+        assert doc["reason"] == "flush-error"
+        assert "cr-1" in doc["request_ids"]
+        errors = [e for e in doc["entries"]
+                  if e["name"] == "serve-flush-error"]
+        assert errors and errors[0]["error"] == "InjectedFault"
+        # the failing request's id is attributable in the ring
+        assert any("cr-1" in (e.get("rid") or "")
+                   for e in doc["entries"])
+    serve_test(drill, config=cfg, faults="crash@serve-worker:0")
+
+
+def test_sigterm_drain_saves_trace_and_metrics(tmp_path):
+    ck = str(tmp_path / "ckpt")
+    sess = Session(resilience=ResilienceConfig(ckpt_dir=ck))
+    obs.enable_tracing()
+
+    async def drill(srv):
+        st, _ = await post(srv, QUERIES[0])
+        assert st == 200
+        await srv.drain()
+        # the previously-lost-on-SIGTERM observability state is flushed
+        trace = json.load(open(os.path.join(ck, "serve-trace.json")))
+        names = {e["name"] for e in trace["traceEvents"]}
+        assert {"request", "flush", "queue-wait"} <= names
+        snap = json.load(open(os.path.join(ck, "serve-metrics.json")))
+        assert snap["counters"]["serve.completed"] >= 1
+    serve_test(drill, session=sess, stop=False)
+    obs.disable_tracing()
+
+
+def test_trace_threads_one_request_through_server_and_engine():
+    tracer = obs.enable_tracing()
+
+    async def drill(srv):
+        st, hdrs, body = await raw_post(srv, QUERIES[0],
+                                        headers={"X-Request-Id": "tr-1"})
+        assert st == 200 and body["kind"] == "layer"
+    serve_test(drill)
+    obs.disable_tracing()
+
+    def rids(ev):
+        r = (ev.get("args") or {}).get("rid")
+        return r if isinstance(r, list) else [r]
+    evs = tracer.events()
+    by_name = {}
+    for e in evs:
+        if "tr-1" in rids(e):
+            by_name.setdefault(e["name"], []).append(e)
+    # one rid threads the server span, the queue-wait + flush spans,
+    # and the engine leaf spans of its device pass
+    assert "request" in by_name
+    assert "queue-wait" in by_name
+    assert "flush" in by_name
+    assert by_name.keys() & {"compile", "dispatch", "device-pass",
+                             "encode"}
 
 
 # ----------------------------------------------------------------------
