@@ -448,6 +448,13 @@ def bench_mapspace(quick: bool) -> None:
     joint = co.joint
 
     elapsed = time.perf_counter() - t0
+
+    # trace-only audit of every executable family: the primitive counts
+    # sit next to the compile budget so CI gates BOTH compile count and
+    # traced program size from the same artifact (zero compiles, so it
+    # cannot perturb universal_compiles_process)
+    from repro.analysis import jaxpr_audit
+    audit_findings, audit_report = jaxpr_audit.audit((1,))
     payload = {
         "quick": quick,
         "layers": [l.name for l in layers],
@@ -455,6 +462,9 @@ def bench_mapspace(quick: bool) -> None:
         "n_compiles": n_compiles,
         "universal_compiles_process": compile_count() - c_before,
         "compile_budget": compile_budget,
+        "jaxpr_primitive_counts": audit_report["primitive_counts"],
+        "jaxpr_primitive_budget": audit_report["primitive_budget"],
+        "jaxpr_findings": [f.to_json() for f in audit_findings],
         "compile_s": round(compile_s, 3),
         "elapsed_s": round(elapsed, 3),
         "n_devices": jax.local_device_count(),

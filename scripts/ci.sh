@@ -19,7 +19,16 @@ python -m pytest -x -q \
     tests/test_api.py \
     tests/test_obs.py \
     tests/test_resilience.py \
-    tests/test_serve.py
+    tests/test_serve.py \
+    tests/test_analysis.py
+
+echo "== static analysis gate: repro.launch.lint =="
+# Zero-findings gate: the jaxpr auditor (f64/widen/callback/weak-type/
+# const-fold/donation/primitive-budget over every universal-executable
+# family), the concurrency linter, and the dataflow/spec linter must all
+# come back clean modulo the checked-in waivers — and every waiver must
+# still match something (unused waivers fail the gate too).
+python -m repro.launch.lint --json --out benchmarks/out/lint_findings.json
 
 echo "== 4-host-device sharded smoke =="
 # The gene pipeline stripes chunks over all local devices; forcing four
@@ -28,10 +37,12 @@ echo "== 4-host-device sharded smoke =="
 # and tests/test_api.py (coalesced run_many) for real.
 # tests/test_resilience.py rides along so kill-and-resume bit-identity
 # is asserted at 4 devices too (its kill/resume test parametrizes over
-# the available device count).
+# the available device count).  tests/test_analysis.py rides along so
+# the jaxpr auditor's shipped-families-clean assertion runs against the
+# real pmap executables (1 AND 4 devices), not just the jit path.
 XLA_FLAGS="--xla_force_host_platform_device_count=4${XLA_FLAGS:+ $XLA_FLAGS}" \
     python -m pytest -x -q tests/test_genes.py tests/test_netspace.py \
-    tests/test_api.py tests/test_resilience.py
+    tests/test_api.py tests/test_resilience.py tests/test_analysis.py
 
 echo "== small-budget netsearch smoke =="
 # End-to-end network schedule search through the CLI shim: VGG16 at a
@@ -521,6 +532,20 @@ c = d["metrics"]["counters"]
 fam = {k: v for k, v in c.items()
        if k.startswith("universal.compiles_by_family[")}
 assert c["universal.compiles"] == sum(fam.values()), (c, fam)
+# the jaxpr audit rides with the artifact: every traced family must be
+# finding-free AND within its primitive-count budget, so a PR that
+# bloats the traced program (or sneaks in an f64 upcast / host
+# callback) fails here even if wall-clock noise hides the slowdown
+assert d["jaxpr_findings"] == [], d["jaxpr_findings"]
+counts, budget = d["jaxpr_primitive_counts"], d["jaxpr_primitive_budget"]
+# counts are per traced case ("family/kind"); budgets are per family —
+# every budgeted family must be covered, and every case must fit
+fams = {case.rsplit("/", 1)[0] for case in counts}
+assert counts and fams >= set(budget), (sorted(fams), sorted(budget))
+for case, n in counts.items():
+    cap = budget.get(case.rsplit("/", 1)[0])
+    assert cap is None or n <= cap, (case, n, cap)
+print(f"jaxpr audit OK: {len(counts)} traced cases within primitive budget")
 EOF
 
 echo "== BENCH_netspace smoke artifact =="

@@ -252,28 +252,18 @@ class Session:
     def _result_cache_stats(self) -> dict[str, Any]:
         """On-disk result-cache occupancy + this process's hit ratio.
         Occupancy is measured from the directory (shared across
-        processes); hits/misses are this process's counters."""
-        import os
-        entries = size = 0
-        if self.cache_dir:
-            try:
-                with os.scandir(self.cache_dir) as it:
-                    for de in it:
-                        if de.name.startswith("mapsearch-") \
-                                and de.name.endswith(".json"):
-                            entries += 1
-                            try:
-                                size += de.stat().st_size
-                            except OSError:
-                                pass
-            except OSError:
-                pass
+        processes) by ``mapspace.cache.cache_stats``, which scans and
+        publishes the ``result_cache.entries``/``.bytes`` gauges under
+        the same lock the writers' store/quarantine transitions take —
+        the gauges always equal a real directory state (the PR-10
+        found-by-linter fix); hits/misses are this process's
+        counters."""
+        from ..mapspace import cache as result_cache
+        entries, size = result_cache.cache_stats(self.cache_dir)
         met = obs.metrics()
         snap = met.snapshot()["counters"]
         hits = int(snap.get("result_cache.hits", 0))
         misses = int(snap.get("result_cache.misses", 0))
-        met.gauge("result_cache.entries", entries)
-        met.gauge("result_cache.bytes", size)
         return {"entries": entries, "bytes": size,
                 "hits": hits, "misses": misses,
                 "hit_ratio": round(hits / (hits + misses), 4)

@@ -406,6 +406,17 @@ class Query:
             cost += float(self.search.joint_genes) * n_hw
         return cost
 
+    def lint(self) -> None:
+        """Static legality lint (``repro.analysis.speclint``): searched
+        dims, space constructibility, and the analytic buffer-budget
+        feasibility bound — raises a one-line :class:`SpecError` with
+        the structured findings attached when the query cannot possibly
+        produce a result, all before any compile.  The serving tier
+        calls this pre-admission so an illegal query is a 400, not a
+        burned flush slot."""
+        from ..analysis.speclint import check_query
+        check_query(self)
+
     def fingerprint(self) -> str:
         """Stable content hash of the FULL query plus the engine/schema
         version — the disk-cache key component that keeps stale

@@ -1,0 +1,109 @@
+"""``python -m repro.launch.lint`` — run the static analyzers.
+
+The zero-findings CI gate: exit 0 only when every finding is covered by
+a checked-in waiver (``src/repro/analysis/waivers.toml``) AND every
+waiver still matches something (an unused waiver means the code was
+fixed — delete the waiver).
+
+Examples::
+
+    # everything: repo lint + dataflow corpus + jaxpr audit
+    PYTHONPATH=src python -m repro.launch.lint
+
+    # the cheap jax-free pass (pre-commit speed)
+    PYTHONPATH=src python -m repro.launch.lint --no-jaxpr
+
+    # machine-readable findings (Report.bench schema, flows through
+    # scripts/bench_check.py like any BENCH_* artifact)
+    PYTHONPATH=src python -m repro.launch.lint --json --out lint.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Sequence
+
+from repro.analysis import (apply_waivers, load_waivers, run_repo_lint,
+                            sort_findings)
+
+from .query import LOG, _write_json, cli_errors, configure_logging
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.lint",
+        description="static analysis: concurrency lint, dataflow-spec "
+                    "lint, jaxpr audit of the universal executables")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr audit (no jax import; the "
+                         "cheap pre-commit pass)")
+    ap.add_argument("--devices", type=int, nargs="*", default=None,
+                    help="device counts to audit the pmap executables "
+                         "at (default: 1 and jax.local_device_count() "
+                         "when more)")
+    ap.add_argument("--waivers", default=None, metavar="FILE",
+                    help="waiver file (default: the checked-in "
+                         "analysis/waivers.toml)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the findings report as JSON "
+                         "(Report.bench schema) instead of lines")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the JSON report to FILE")
+    ap.add_argument("-v", "--verbose", action="count", default=0)
+    ap.add_argument("-q", "--quiet", action="count", default=0)
+    return ap
+
+
+def _device_counts(args) -> tuple[int, ...]:
+    if args.devices:
+        return tuple(dict.fromkeys(int(d) for d in args.devices))
+    import jax
+    nd = jax.local_device_count()
+    return (1,) if nd <= 1 else (1, nd)
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    configure_logging(args)
+    with cli_errors():
+        report: dict = {}
+        if args.no_jaxpr:
+            findings = run_repo_lint()
+        else:
+            from repro.analysis import run_full
+            findings, report = run_full(_device_counts(args))
+        waivers = load_waivers(args.waivers)
+        unwaived, waived, unused = apply_waivers(findings, waivers)
+        unwaived = sort_findings(unwaived)
+
+        payload = {
+            "n_findings": len(findings),
+            "n_unwaived": len(unwaived),
+            "n_waived": len(waived),
+            "unused_waivers": [f"{w.code} @ {w.site}" for w in unused],
+            "findings": [f.to_json() for f in unwaived],
+            "waived": [f.to_json() for f in waived],
+            "jaxpr": report,
+        }
+        if args.json or args.out:
+            from repro.api import Report
+            doc = Report.bench("lint", payload).to_json()
+            if args.json:
+                print(json.dumps(doc, indent=2))
+            if args.out:
+                _write_json(args.out, doc)
+        if not args.json:
+            for f in unwaived:
+                print(f.one_line())
+            LOG.info("lint: %d finding(s), %d unwaived, %d waived, "
+                     "%d unused waiver(s)", len(findings), len(unwaived),
+                     len(waived), len(unused))
+        for w in unused:
+            print(f"unused waiver: {w.code} @ {w.site} — the finding "
+                  f"is gone, delete the waiver", file=sys.stderr)
+        return 1 if unwaived or unused else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -47,6 +47,53 @@ ENGINE_SCHEMA_VERSION = 2
 # Set once per process; repeated calls with the same directory are no-ops.
 _COMPILATION_CACHE_DIR: str | None = None
 
+# Guards the ``result_cache.entries``/``result_cache.bytes`` gauges AND
+# the directory transitions they account (store's os.replace, load's
+# quarantine rename).  Holding one lock across both halves is the whole
+# fix: the PR-9 gauges were set from an unsynchronized directory scan in
+# ``Session._result_cache_stats``, so a scan interleaving with a
+# concurrent writer's replace could publish counts that no directory
+# state ever had (and a late gauge() write could clobber a newer one).
+# The found-by-linter regression test lives in tests/test_analysis.py.
+_GAUGE_LOCK = threading.Lock()
+
+
+def _account(d_entries: int, d_bytes: int) -> None:
+    """Adjust the occupancy gauges; caller holds ``_GAUGE_LOCK``."""
+    m = obs.metrics()
+    m.gauge("result_cache.entries",
+            max(0, int(m.gauge_value("result_cache.entries")) + d_entries))
+    m.gauge("result_cache.bytes",
+            max(0, int(m.gauge_value("result_cache.bytes")) + d_bytes))
+
+
+def cache_stats(cache_dir: str | None) -> tuple[int, int]:
+    """(entries, bytes) of the result cache, measured from the directory
+    and published to the gauges — scan and publish under the same lock
+    the writers' transitions take, so the gauges always equal a real
+    directory state.  The full rescan also reconciles writes from OTHER
+    processes sharing the cache dir, which incremental accounting cannot
+    see."""
+    entries = size = 0
+    with _GAUGE_LOCK:
+        if cache_dir:
+            try:
+                with os.scandir(cache_dir) as it:
+                    for de in it:
+                        if de.name.startswith("mapsearch-") \
+                                and de.name.endswith(".json"):
+                            entries += 1
+                            try:
+                                size += de.stat().st_size
+                            except OSError:
+                                pass
+            except OSError:
+                pass
+        m = obs.metrics()
+        m.gauge("result_cache.entries", entries)
+        m.gauge("result_cache.bytes", size)
+    return entries, size
+
 
 def enable_compilation_cache(cache_dir: str) -> bool:
     """Point JAX's persistent compilation cache at ``cache_dir`` so the
@@ -124,10 +171,17 @@ def load(cache_dir: str | None, key: str) -> dict[str, Any] | None:
                          f"{type(e).__name__}: {e}", key=key)
         LOG.warning("%s — quarantined, treating as a miss",
                     err.one_line())
-        try:
-            os.replace(path, path + ".corrupt")
-        except OSError:
-            pass               # e.g. unreadable due to permissions
+        # quarantine + gauge adjustment are ONE transition under the
+        # gauge lock, so a concurrent cache_stats() scan can never
+        # publish counts that still include the quarantined entry
+        with _GAUGE_LOCK:
+            try:
+                gone = os.path.getsize(path)
+                os.replace(path, path + ".corrupt")
+            except OSError:
+                pass               # e.g. unreadable due to permissions
+            else:
+                _account(-1, -gone)
         return None
     if payload.get("version") != CACHE_VERSION:
         obs.metrics().inc("result_cache.misses")
@@ -150,4 +204,17 @@ def store(cache_dir: str | None, key: str, payload: dict[str, Any]) -> None:
            + f".tmp-{os.getpid()}-{threading.get_ident()}")
     with open(tmp, "w") as f:
         json.dump(payload, f)
-    os.replace(tmp, _path(cache_dir, key))
+    # the commit (os.replace) and its gauge delta happen under one lock:
+    # the occupancy gauges track every directory transition instead of
+    # waiting for the next metrics() scan, and concurrent writers can
+    # never interleave a scan between replace and publish
+    dst = _path(cache_dir, key)
+    with _GAUGE_LOCK:
+        try:
+            old = os.path.getsize(dst)
+            fresh = 0
+        except OSError:
+            old, fresh = 0, 1
+        new = os.path.getsize(tmp)
+        os.replace(tmp, dst)
+        _account(fresh, new - old)

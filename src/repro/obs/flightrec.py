@@ -2,12 +2,17 @@
 spans/events/errors that dumps to ``flight-<ts>.json`` on unhandled
 handler errors, serve fault drills, SIGQUIT, and timeout reports.
 
-Lock-free by construction: ``itertools.count().__next__`` hands out
-monotonically increasing sequence numbers (a single C-level call —
-atomic under the GIL), and each writer stores its finished entry dict at
-``seq % capacity`` with one list item assignment (also atomic).  Readers
-snapshot the ring without coordination; a concurrently overwritten slot
-yields either the old or the new complete entry, never a torn one.
+The RING is lock-free by construction: ``itertools.count().__next__``
+hands out monotonically increasing sequence numbers (a single C-level
+call — atomic under the GIL), and each writer stores its finished entry
+dict at ``seq % capacity`` with one list item assignment (also atomic).
+Readers snapshot the ring without coordination; a concurrently
+overwritten slot yields either the old or the new complete entry, never
+a torn one.  (The recording fast path is waived from the concurrency
+linter's lock rule — see ``analysis/waivers.toml``.)  Dump bookkeeping
+is COLD path and takes a real lock: ``maybe_dump``'s rate-limit
+check-then-stamp must be atomic or concurrent timeout storms
+double-dump.
 
 Recording is cheap enough to stay on unconditionally for events and
 errors.  *Span* capture (every ``obs.span`` exit feeding the ring) is
@@ -52,6 +57,10 @@ class FlightRecorder:
         self._slots: list[dict | None] = [None] * self.capacity
         self._next = itertools.count().__next__   # atomic in CPython
         self._dump_count = itertools.count(1).__next__
+        # dump bookkeeping is COLD path and lock-guarded: the rate-limit
+        # check-then-stamp in maybe_dump() must be atomic or concurrent
+        # timeout storms double-dump past min_interval_s
+        self._dump_lock = threading.Lock()
         self._last_dump_t = 0.0
 
     # -- recording (hot path, lock-free) -------------------------------
@@ -105,16 +114,28 @@ class FlightRecorder:
         }
         with open(path, "w") as f:
             json.dump(payload, f, indent=1, default=str)
-        self._last_dump_t = time.monotonic()
+        with self._dump_lock:
+            self._last_dump_t = time.monotonic()
         metrics().inc("flight.dumps", reason=reason)
         return path
 
     def maybe_dump(self, out_dir: str, reason: str,
                    min_interval_s: float = 5.0, **info: Any) -> str | None:
-        """Rate-limited dump for recurring triggers (timeout storms)."""
-        if time.monotonic() - self._last_dump_t < min_interval_s:
-            return None
-        return self.dump(out_dir, reason, **info)
+        """Rate-limited dump for recurring triggers (timeout storms).
+        The check-then-stamp is atomic: of N threads racing past the
+        interval, exactly one dumps (the stamp is claimed up front and
+        rolled back only if the dump itself fails)."""
+        with self._dump_lock:
+            now = time.monotonic()
+            if now - self._last_dump_t < min_interval_s:
+                return None
+            prev, self._last_dump_t = self._last_dump_t, now
+        try:
+            return self.dump(out_dir, reason, **info)
+        except BaseException:
+            with self._dump_lock:
+                self._last_dump_t = prev   # failed claim: allow a retry
+            raise
 
 
 _RECORDER = FlightRecorder()

@@ -141,6 +141,15 @@ class Metrics:
         with self._lock:
             self._gauges[_key(name, labels)] = value
 
+    def gauge_value(self, name: str, default: float = 0.0,
+                    **labels: Any) -> float:
+        """Current gauge value (``default`` when never set) — the read
+        half of read-modify-write gauge maintenance (callers supply
+        their own outer lock for atomicity, e.g. mapspace.cache's
+        occupancy accounting)."""
+        with self._lock:
+            return self._gauges.get(_key(name, labels), default)
+
     # -- histograms ----------------------------------------------------
 
     def observe(self, name: str, value: float, **labels: Any) -> None:

@@ -30,8 +30,10 @@ Counter contract (CI-asserted):
 ``serve.shed + serve.completed == serve.admitted`` — every well-formed
 query request either sheds with an explicit 429/503 or completes with a
 terminal report; ``serve.timeouts``/``serve.errors`` are subsets of
-completed.  Malformed requests count ``serve.bad_requests`` and are
-outside the invariant.
+completed.  Malformed requests count ``serve.bad_requests`` and
+statically-illegal ones (pre-admission ``repro.analysis.speclint``)
+count ``serve.speclint_rejected`` — both answer 400 and are outside
+the invariant (never admitted).
 """
 from __future__ import annotations
 
@@ -48,6 +50,7 @@ from typing import Any
 from .. import obs
 from ..api import Query, Report, Session
 from ..resilience import SweepKilled, fault_point
+from ..resilience.errors import SpecError
 from .admission import AdmissionController
 from .coalescer import Coalescer, _Pending
 from .deadline import Deadline
@@ -306,6 +309,20 @@ class DSEServer:
             msg = str(e).strip().splitlines()[0] if str(e).strip() else ""
             return 400, rid_h, {"error": {"type": type(e).__name__,
                                           "message": msg}}
+        # pre-admission static lint (repro.analysis.speclint): a query
+        # that cannot possibly produce a result — bad searched dims,
+        # unconstructible space, statically infeasible buffer budget —
+        # is rejected here, before it can burn a flush slot.  Counted
+        # separately from bad_requests and OUTSIDE the shed/completed
+        # ledger (like bad_requests, it was never admitted).
+        try:
+            query.lint()
+        except SpecError as e:
+            met.inc("serve.speclint_rejected")
+            return 400, rid_h, {"error": {
+                "type": "SpecError",
+                "message": str(e).strip().splitlines()[0],
+                "findings": e.details.get("findings", [])}}
         met.inc("serve.admitted")
 
         with obs.request_scope(rid):

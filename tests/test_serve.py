@@ -152,6 +152,30 @@ def test_malformed_query_is_400_outside_invariant():
     serve_test(drill)
 
 
+def test_statically_illegal_query_rejected_before_admission():
+    """A parseable query that can never produce a result (searched dim
+    the layer lacks) is rejected by the pre-admission speclint — 400
+    with the structured findings, no flush slot burned, and the
+    shed/completed/admitted ledger untouched."""
+    bad = wire_conv("zdim", "sv-zdim")
+    bad["search"]["dims"] = ["K", "Z"]
+
+    async def drill(srv):
+        admitted0 = counter("serve.admitted")
+        rejected0 = counter("serve.speclint_rejected")
+        st, body = await post(srv, bad)
+        assert st == 400
+        assert body["error"]["type"] == "SpecError"
+        codes = [f["code"] for f in body["error"]["findings"]]
+        assert "SPEC-DIMS" in codes
+        assert counter("serve.speclint_rejected") == rejected0 + 1
+        assert counter("serve.admitted") == admitted0
+        # a legal query still flows normally afterwards
+        st, ok = await post(srv, QUERIES[0])
+        assert st == 200 and ok["kind"] == "layer"
+    serve_test(drill)
+
+
 # ----------------------------------------------------------------------
 # Admission control: queue bound and cost bound
 # ----------------------------------------------------------------------
